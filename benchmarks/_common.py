@@ -1,0 +1,46 @@
+"""Shared benchmark utilities: timing, CSV output, memory proxies.
+
+Wall-clock here is CPU-container time — meaningful for RELATIVE
+comparisons between implementations of the same op at the same shape
+(the paper's tables compare implementations, which is preserved), not
+as absolute TPU numbers. Peak-memory comparisons use the analytic
+activation/residual byte counts (exact for XLA's plan via
+``memory_analysis`` where available).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Iterable, List
+
+import jax
+import numpy as np
+
+
+def time_fn(fn: Callable, *args, warmup: int = 3, iters: int = 10,
+            **kw) -> float:
+    """Median wall time (ms) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        times.append((time.perf_counter() - t0) * 1e3)
+    return float(np.median(times))
+
+
+def compiled_peak_bytes(fn: Callable, *abstract_args) -> float:
+    """Peak-memory estimate from XLA's buffer assignment."""
+    compiled = jax.jit(fn).lower(*abstract_args).compile()
+    ma = compiled.memory_analysis()
+    if ma is None:
+        return float("nan")
+    return float(ma.argument_size_in_bytes + ma.output_size_in_bytes
+                 + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+
+
+def csv_print(header: Iterable[str], rows: List[Iterable]) -> None:
+    print(",".join(str(h) for h in header))
+    for r in rows:
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,65 @@
+"""Paper Figure 2: LM-head-only latency + peak memory scaling across
+batch size, sequence length, and vocabulary size, for naive vs tiled
+vs sparton (CPU-scaled; |V| axis keeps the paper's 30522 point).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks._common import compiled_peak_bytes, csv_print, time_fn
+from repro.core.lm_head import (lm_head_naive, lm_head_sparton,
+                                lm_head_tiled)
+
+D = 64
+HEADS = [
+    ("naive", lm_head_naive, {}),
+    ("tiled", lm_head_tiled, {"vocab_tile": 4096}),
+    ("sparton", lm_head_sparton, {"vocab_tile": 4096}),
+]
+
+
+def _inputs(B, S, V, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    H = jax.random.normal(ks[0], (B, S, D))
+    E = jax.random.normal(ks[1], (V, D)) * 0.2
+    b = jnp.zeros((V,))
+    mask = jnp.ones((B, S), jnp.int32)
+    return H, E, b, mask
+
+
+def _bwd(head_fn, kw, mask):
+    def loss(H, E, b):
+        return jnp.sum(head_fn(H, E, b, mask, **kw) ** 2)
+    return jax.grad(loss, argnums=(0, 1))
+
+
+def run(csv: bool = True):
+    rows = []
+    # the paper's three sweeps (CPU-scaled)
+    sweeps = [
+        ("batch", [(b, 64, 30522) for b in (2, 4, 8, 16)]),
+        ("seqlen", [(4, s, 30522) for s in (64, 128, 256, 512)]),
+        ("vocab", [(8, 64, v) for v in (8192, 30522, 65536, 131072)]),
+    ]
+    for sweep, points in sweeps:
+        for B, S, V in points:
+            H, E, b, mask = _inputs(B, S, V)
+            habs = (jax.ShapeDtypeStruct(H.shape, H.dtype),
+                    jax.ShapeDtypeStruct(E.shape, E.dtype),
+                    jax.ShapeDtypeStruct(b.shape, b.dtype))
+            for name, fn, kw in HEADS:
+                g = _bwd(fn, kw, mask)
+                t = time_fn(jax.jit(g), H, E, b, warmup=1, iters=3)
+                m = compiled_peak_bytes(g, *habs)
+                rows.append((sweep, B, S, V, name, round(t, 1),
+                             round(m / 2**20, 1)))
+    if csv:
+        csv_print(("sweep", "B", "S", "V", "impl", "bwd_time_ms",
+                   "peak_mib"), rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,112 @@
+"""Render the dry-run / roofline JSON artifacts into the generated
+table sections of EXPERIMENTS.md (between AUTOGEN markers).
+
+Usage: PYTHONPATH=src python -m benchmarks.report
+"""
+
+import json
+import os
+import re
+import sys
+
+GB = 1e9
+
+
+def _fmt(x, nd=2):
+    if x is None:
+        return "-"
+    if x == 0:
+        return "0"
+    if abs(x) >= 1e5 or abs(x) < 1e-3:
+        return f"{x:.2e}"
+    return f"{x:.{nd}f}"
+
+
+def dryrun_table(path: str) -> str:
+    recs = json.load(open(path))
+    lines = [
+        "| cell | status | compile s | flops/dev | HLO bytes/dev | "
+        "coll wire B/dev | peak GB/dev | bottleneck |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        cell = f"{r['arch']}/{r['shape']}"
+        if r.get("status") == "skipped":
+            lines.append(f"| {cell} | skipped | - | - | - | - | - | "
+                         f"{r['reason'][:48]} |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {cell} | **FAILED** | - | - | - | - | - | - |")
+            continue
+        peak = (r.get("memory_analysis") or {}).get(
+            "peak_estimate_bytes", None)
+        lines.append(
+            f"| {cell} | ok | {r['compile_s']} | "
+            f"{_fmt(r['flops_per_device'])} | "
+            f"{_fmt(r['hbm_bytes_per_device'])} | "
+            f"{_fmt(r['collective_wire_bytes'])} | "
+            f"{_fmt(peak / GB if peak else None)} | {r['bottleneck']} |")
+    ok = sum(1 for r in recs if r.get("status") == "ok")
+    sk = sum(1 for r in recs if r.get("status") == "skipped")
+    lines.append("")
+    lines.append(f"**{ok} ok / {sk} skipped / "
+                 f"{len(recs) - ok - sk} failed.**")
+    return "\n".join(lines)
+
+
+def roofline_table(path: str) -> str:
+    recs = json.load(open(path))
+    lines = [
+        "| cell | compute s | memory s (unfused UB) | memory s "
+        "(fused est) | collective s | bottleneck | useful ratio |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("status") != "ok" or "roof_compute_s" not in r:
+            continue
+        cell = f"{r['arch']}/{r['shape']}"
+        lines.append(
+            f"| {cell} | {_fmt(r['roof_compute_s'], 4)} | "
+            f"{_fmt(r['roof_memory_s'], 4)} | "
+            f"{_fmt(r.get('roof_memory_s_fused_est'), 4)} | "
+            f"{_fmt(r['roof_collective_s'], 4)} | "
+            f"{r['roof_bottleneck']} | "
+            f"{_fmt(r.get('roof_useful_ratio'), 3)} |")
+    return "\n".join(lines)
+
+
+def inject(md_path: str, marker: str, content: str) -> None:
+    text = open(md_path).read()
+    begin = f"<!-- AUTOGEN:{marker} -->"
+    end = f"<!-- /AUTOGEN:{marker} -->"
+    pattern = re.compile(re.escape(begin) + ".*?" + re.escape(end),
+                         re.DOTALL)
+    block = f"{begin}\n{content}\n{end}"
+    if pattern.search(text):
+        text = pattern.sub(block, text)
+    else:
+        text += "\n" + block + "\n"
+    open(md_path, "w").write(text)
+
+
+def main() -> int:
+    md = "EXPERIMENTS.md"
+    jobs = [
+        ("DRYRUN_SINGLE", "dryrun_single_pod.json", dryrun_table),
+        ("DRYRUN_MULTI", "dryrun_multi_pod.json", dryrun_table),
+        ("ROOFLINE_SINGLE", "roofline_single_pod.json", roofline_table),
+        ("ROOFLINE_MULTI", "roofline_multi_pod.json", roofline_table),
+        ("BASELINE_SINGLE", "baseline_dryrun_single_pod.json",
+         dryrun_table),
+    ]
+    for marker, path, fn in jobs:
+        if os.path.exists(path):
+            inject(md, marker, fn(path))
+            print(f"injected {marker} from {path}")
+        else:
+            print(f"skip {marker}: {path} missing")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,51 @@
+"""Benchmark orchestrator: one benchmark per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run``            — all tables
+``PYTHONPATH=src python -m benchmarks.run --only table1``
+
+The dry-run / roofline matrices are separate processes (they need 512
+placeholder devices BEFORE jax init):
+  PYTHONPATH=src python -m repro.launch.dryrun --json dryrun.json
+  PYTHONPATH=src python -m benchmarks.roofline --dryrun dryrun.json ...
+"""
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    choices=["table1", "fig2", "table2", "table3"])
+    args = ap.parse_args(argv)
+
+    benches = [
+        ("table1", "LM-head component breakdown (paper Table 1)",
+         "benchmarks.bench_table1_components"),
+        ("fig2", "B/S/V scaling (paper Figure 2)",
+         "benchmarks.bench_fig2_scaling"),
+        ("table2", "backward seq-len scaling + OOM wall (paper Table 2)",
+         "benchmarks.bench_table2_seqlen"),
+        ("table3", "end-to-end LSR training (paper Table 3)",
+         "benchmarks.bench_table3_e2e"),
+    ]
+
+    rc = 0
+    for key, title, module in benches:
+        if args.only and key != args.only:
+            continue
+        print(f"\n=== {key}: {title} ===", flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(module, fromlist=["run"])
+            mod.run()
+            print(f"[{key} done in {time.time() - t0:.1f}s]", flush=True)
+        except Exception as e:
+            rc = 1
+            print(f"[{key} FAILED: {e!r}]", flush=True)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,59 @@
+"""GNN example: train DimeNet on synthetic molecules (CPU-sized).
+
+Exercises the triplet data pipeline (exact triplets + the dense (E, K)
+capped layout), the segment-op substrate, and the AdamW training loop.
+
+Run:  PYTHONPATH=src python examples/train_dimenet.py [--steps 60]
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.specs import CellSpec
+from repro.data.synthetic import molecule_batches
+from repro.launch.steps import build_gnn_train_step, init_state
+from repro.sparse.triplets import build_triplets, densify_triplets
+
+
+def make_batch(seed: int, n_graphs=8, nodes=10, edges=24, cap=4):
+    gen = molecule_batches(n_graphs=n_graphs, nodes_per_graph=nodes,
+                           edges_per_graph=edges, seed=seed)
+    b = next(gen)
+    N = n_graphs * nodes
+    t_in, t_out = build_triplets(b["edge_src"], b["edge_dst"], N,
+                                 max_per_edge=cap)
+    dense, mask = densify_triplets(t_in, t_out, len(b["edge_src"]), cap)
+    batch = {k: jnp.asarray(v) for k, v in b.items()}
+    batch["t_in_dense"] = jnp.asarray(dense)
+    batch["t_mask_dense"] = jnp.asarray(mask)
+    return batch
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    args = ap.parse_args()
+
+    cfg = get_config("dimenet").SMOKE
+    state, _ = init_state("dimenet", jax.random.PRNGKey(0), smoke=True)
+    cell = CellSpec("dimenet", "molecule", "gnn_train", {}, n_graphs=8)
+    step = jax.jit(build_gnn_train_step(cfg, cell, lr=2e-3),
+                   donate_argnums=(0,))
+
+    losses = []
+    for i in range(args.steps):
+        batch = make_batch(seed=i % 8)   # cycle a small dataset
+        state, m = step(state, batch)
+        if i % 10 == 0:
+            losses.append((i, float(m["loss"])))
+    print("loss trajectory:", [(s, round(l, 4)) for s, l in losses])
+    assert losses[-1][1] < losses[0][1], "no learning"
+    print(f"done: {args.steps} steps, final loss {losses[-1][1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

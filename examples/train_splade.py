@@ -1,0 +1,96 @@
+"""End-to-end driver: train a SPLADE-style sparse encoder (~CPU-sized)
+for a few hundred steps with the Sparton head, full substrate engaged:
+synthetic LSR data pipeline -> fault-tolerant runner (async atomic
+checkpoints, straggler policy) -> InfoNCE + FLOPS objective -> AdamW.
+
+Run:  PYTHONPATH=src python examples/train_splade.py [--steps 200]
+
+This is the paper's Table-3 setup scaled to the container; on a real
+pod the same code path runs under launch/train.py with the production
+mesh and the vocab-sharded head.
+"""
+
+import argparse
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.loader import HostShardedLoader
+from repro.data.synthetic import lsr_pair_batches
+from repro.launch.steps import build_lsr_train_step, init_state
+from repro.runtime.fault_tolerance import FaultTolerantRunner, RunnerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq-len", type=int, default=24)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="splade_ckpt_")
+    cfg = get_config("splade_bert").SMOKE
+    state, _ = init_state("splade_bert", jax.random.PRNGKey(0), smoke=True)
+
+    step = build_lsr_train_step(cfg, None, n_micro=2,
+                                n_pairs=args.batch, lr=args.lr,
+                                total_steps=args.steps)
+    jitted = jax.jit(step, donate_argnums=(0,))
+
+    def make_iter(shard, n_shards):
+        gen = lsr_pair_batches(batch=args.batch, q_len=args.seq_len,
+                               d_len=args.seq_len, vocab=cfg.vocab_size,
+                               shard=shard)
+        for b in gen:
+            yield b
+
+    loader = HostShardedLoader(make_iter)
+    runner = FaultTolerantRunner(
+        jitted, state, iter(loader),
+        config=RunnerConfig(ckpt_dir=ckpt_dir, ckpt_every=50,
+                            max_steps=args.steps, log_every=20),
+        place_batch=lambda b: {k: jnp.asarray(v) for k, v in b.items()},
+    )
+    if runner.try_resume():
+        print(f"resumed from checkpoint at step {runner.start_step}")
+    state = runner.run()
+
+    losses = [(m["step"], float(m["loss"])) for m in runner.metrics_log]
+    print("loss trajectory:", [(s, round(l, 3)) for s, l in losses])
+    assert losses[-1][1] < losses[0][1], "training did not reduce loss"
+
+    # quick retrieval sanity: does query i retrieve doc i?
+    from repro.core.lm_head import lm_head_sparton
+    from repro.models import transformer as tfm
+    gen = lsr_pair_batches(batch=32, q_len=args.seq_len,
+                           d_len=args.seq_len, vocab=cfg.vocab_size,
+                           seed=123)
+    b = next(gen)
+
+    def encode(toks, mask):
+        H, _ = tfm.forward_hidden(state["params"], cfg,
+                                  jnp.asarray(toks), jnp.asarray(mask))
+        E, bb = tfm.head_weights(state["params"], cfg)
+        return lm_head_sparton(H, E.astype(H.dtype), bb,
+                               jnp.asarray(mask))
+
+    yq = encode(b["q_tokens"], b["q_mask"])
+    yd = encode(b["d_tokens"], b["d_mask"])
+    scores = np.asarray(jnp.einsum("qv,dv->qd", yq, yd))
+    acc = float((scores.argmax(1) == np.arange(32)).mean())
+    nnz = float(jnp.mean(jnp.sum(yq > 0, axis=-1)))
+    print(f"in-batch retrieval acc@1: {acc:.2f}  "
+          f"(chance {1 / 32:.3f}); mean active dims {nnz:.0f}")
+    loader.close()
+    if args.ckpt_dir is None:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.checkpoint.store import (
+    AsyncCheckpointer,
+    latest_step,
+    load_checkpoint,
+    save_checkpoint,
+)

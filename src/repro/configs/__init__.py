@@ -1,0 +1,65 @@
+"""Architecture registry — ``--arch <id>`` resolves here.
+
+Each module exports CONFIG (exact assigned config), SMOKE (reduced
+same-family config for CPU tests) and SHAPES (the assigned input-shape
+cells). ``get_config(id)`` returns the module.
+"""
+
+import importlib
+from typing import List
+
+from repro.configs.base import (DimeNetConfig, RecSysConfig, ShapeSpec,
+                                TransformerConfig)
+
+ARCH_IDS: List[str] = [
+    # LM family (assigned)
+    "llama3_2_3b",
+    "gemma2_27b",
+    "phi3_mini",
+    "moonshot_v1_16b",
+    "phi3_5_moe",
+    # GNN (assigned)
+    "dimenet",
+    # RecSys (assigned)
+    "dlrm_mlperf",
+    "xdeepfm",
+    "dien",
+    "wide_deep",
+    # the paper's own models
+    "splade_bert",
+    "splade_xlmr",
+]
+
+# external ids (with dots/dashes) -> module names
+ALIASES = {
+    "llama3.2-3b": "llama3_2_3b",
+    "gemma2-27b": "gemma2_27b",
+    "phi3-mini-3.8b": "phi3_mini",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b",
+    "phi3.5-moe-42b-a6.6b": "phi3_5_moe",
+    "dimenet": "dimenet",
+    "dlrm-mlperf": "dlrm_mlperf",
+    "xdeepfm": "xdeepfm",
+    "dien": "dien",
+    "wide-deep": "wide_deep",
+    "splade-bert": "splade_bert",
+    "splade-xlmr": "splade_xlmr",
+}
+
+
+def get_config(arch_id: str):
+    """Returns the config module for an architecture id."""
+    name = ALIASES.get(arch_id, arch_id)
+    if name not in ARCH_IDS:
+        raise KeyError(
+            f"unknown arch {arch_id!r}; known: {sorted(ALIASES)}")
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def all_cells(include_paper_models: bool = False):
+    """Yields (arch_id, shape_name, ShapeSpec) for the dry-run matrix."""
+    ids = ARCH_IDS if include_paper_models else ARCH_IDS[:10]
+    for arch in ids:
+        mod = get_config(arch)
+        for shape_name, spec in mod.SHAPES.items():
+            yield arch, shape_name, spec

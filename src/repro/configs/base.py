@@ -1,0 +1,187 @@
+"""Config dataclasses for every architecture family in the framework.
+
+Configs are frozen dataclasses; each architecture module in
+``repro/configs/`` exports ``CONFIG`` (the exact assigned config),
+``SMOKE`` (a reduced same-family config for CPU smoke tests) and
+``SHAPES`` (the assigned input-shape set). ``repro.configs.get_config``
+is the registry entry point used by ``--arch <id>`` everywhere.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One (architecture x input-shape) cell of the dry-run matrix."""
+
+    name: str
+    kind: str  # train | prefill | decode | full_graph | minibatch | serve | retrieval
+    # LM shapes
+    seq_len: int = 0
+    global_batch: int = 0
+    # GNN shapes
+    n_nodes: int = 0
+    n_edges: int = 0
+    d_feat: int = 0
+    batch_nodes: int = 0
+    fanout: Tuple[int, ...] = ()
+    n_graphs: int = 0
+    # RecSys shapes
+    batch: int = 0
+    n_candidates: int = 0
+    # bookkeeping
+    skip: bool = False
+    skip_reason: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    family: str  # "dense" | "moe"
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab_size: int
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # gemma-2 features
+    sliding_window: Optional[int] = None   # local attention window
+    local_global_alternating: bool = False
+    attn_logit_softcap: Optional[float] = None
+    final_logit_softcap: Optional[float] = None
+    # common
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    bidirectional_encoder: bool = False  # SPLADE-style encoders
+    # execution
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat: bool = True
+    grad_accum_steps: int = 1
+    # LSR head (the paper's technique)
+    lsr_head: bool = True          # train objective: LSR contrastive
+    head_block_b: int = 8
+    head_block_s: int = 128
+    head_block_v: int = 128
+    head_vocab_tile: int = 4096    # pure-JAX streaming tile
+    attn_unroll: int = 1           # KV-chunk scan unroll (cost probes)
+    attn_chunk: int = 512          # KV chunk size (online softmax)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def n_params(self) -> int:
+        """Approximate parameter count (embeddings + trunk + head)."""
+        d, f, L, V = self.d_model, self.d_ff, self.n_layers, self.vocab_size
+        attn = d * self.n_heads * self.d_head * 2 \
+            + d * self.n_kv_heads * self.d_head * 2
+        if self.is_moe:
+            mlp = self.n_experts * 3 * d * f + d * self.n_experts
+        else:
+            mlp = 3 * d * f
+        trunk = L * (attn + mlp + 2 * d)
+        embed = V * d * (1 if self.tie_embeddings else 2)
+        return trunk + embed
+
+    @property
+    def n_active_params(self) -> int:
+        """Active parameters per token (MoE counts top_k experts)."""
+        if not self.is_moe:
+            return self.n_params
+        d, f, L = self.d_model, self.d_ff, self.n_layers
+        attn = d * self.n_heads * self.d_head * 2 \
+            + d * self.n_kv_heads * self.d_head * 2
+        mlp = self.top_k * 3 * d * f + d * self.n_experts
+        embed = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        return L * (attn + mlp + 2 * d) + embed
+
+
+@dataclasses.dataclass(frozen=True)
+class DimeNetConfig:
+    name: str
+    family: str = "gnn"
+    n_blocks: int = 6
+    d_hidden: int = 128
+    n_bilinear: int = 8
+    n_spherical: int = 7
+    n_radial: int = 6
+    d_feat: int = 0                 # input node features (0 => atom types)
+    n_atom_types: int = 95
+    cutoff: float = 5.0
+    envelope_exponent: int = 5
+    max_triplets_per_edge: int = 0  # 0 => exact triplets
+    n_targets: int = 1
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+
+
+@dataclasses.dataclass(frozen=True)
+class RecSysConfig:
+    name: str
+    family: str = "recsys"
+    interaction: str = "dot"  # dot | cin | augru | concat
+    n_dense: int = 0
+    n_sparse: int = 26
+    embed_dim: int = 128
+    table_sizes: Tuple[int, ...] = ()
+    bot_mlp: Tuple[int, ...] = ()
+    top_mlp: Tuple[int, ...] = ()
+    mlp: Tuple[int, ...] = ()
+    cin_layers: Tuple[int, ...] = ()
+    # DIEN
+    seq_len: int = 0
+    gru_dim: int = 0
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+
+    @property
+    def total_rows(self) -> int:
+        return sum(self.table_sizes)
+
+
+def shapes_lm(long_ok: bool, long_skip_reason: str = "") -> Dict[str, ShapeSpec]:
+    """The assigned LM-family shape set (4 cells)."""
+    return {
+        "train_4k": ShapeSpec("train_4k", "train", seq_len=4096,
+                              global_batch=256),
+        "prefill_32k": ShapeSpec("prefill_32k", "prefill", seq_len=32768,
+                                 global_batch=32),
+        "decode_32k": ShapeSpec("decode_32k", "decode", seq_len=32768,
+                                global_batch=128),
+        "long_500k": ShapeSpec(
+            "long_500k", "decode", seq_len=524288, global_batch=1,
+            skip=not long_ok, skip_reason=long_skip_reason,
+        ),
+    }
+
+
+SHAPES_GNN: Dict[str, ShapeSpec] = {
+    "full_graph_sm": ShapeSpec("full_graph_sm", "full_graph",
+                               n_nodes=2708, n_edges=10556, d_feat=1433),
+    "minibatch_lg": ShapeSpec("minibatch_lg", "minibatch",
+                              n_nodes=232965, n_edges=114615892,
+                              batch_nodes=1024, fanout=(15, 10)),
+    "ogb_products": ShapeSpec("ogb_products", "full_graph",
+                              n_nodes=2449029, n_edges=61859140, d_feat=100),
+    "molecule": ShapeSpec("molecule", "batched_graphs",
+                          n_nodes=30, n_edges=64, n_graphs=128),
+}
+
+SHAPES_RECSYS: Dict[str, ShapeSpec] = {
+    "train_batch": ShapeSpec("train_batch", "train", batch=65536),
+    "serve_p99": ShapeSpec("serve_p99", "serve", batch=512),
+    "serve_bulk": ShapeSpec("serve_bulk", "serve", batch=262144),
+    "retrieval_cand": ShapeSpec("retrieval_cand", "retrieval", batch=1,
+                                n_candidates=1_000_000),
+}

@@ -1,0 +1,37 @@
+"""DimeNet — directional message-passing GNN [arXiv:2003.03123].
+
+n_blocks=6 d_hidden=128 n_bilinear=8 n_spherical=7 n_radial=6.
+Triplet regime (kernel taxonomy §GNN). The Sparton technique has no
+vocab projection / sequence max-pool here => built WITHOUT it
+(DESIGN.md §4); the shared primitive is segment_max-with-argmax
+gradient routing (repro/sparse/segment.py).
+
+Large-graph shapes cap triplets per edge (max_triplets_per_edge=8,
+GemNet-OC practice); molecules use exact triplets.
+"""
+
+import dataclasses
+
+from repro.configs.base import DimeNetConfig, SHAPES_GNN
+
+CONFIG = DimeNetConfig(
+    name="dimenet",
+    n_blocks=6,
+    d_hidden=128,
+    n_bilinear=8,
+    n_spherical=7,
+    n_radial=6,
+    max_triplets_per_edge=8,   # large-graph shapes; molecule uses exact
+)
+
+SMOKE = DimeNetConfig(
+    name="dimenet-smoke",
+    n_blocks=2,
+    d_hidden=32,
+    n_bilinear=4,
+    n_spherical=3,
+    n_radial=4,
+    max_triplets_per_edge=4,
+)
+
+SHAPES = SHAPES_GNN

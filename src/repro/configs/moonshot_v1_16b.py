@@ -1,0 +1,50 @@
+"""moonshot-v1-16b-a3b (kimi/moonlight) — MoE 64e top-6
+[hf:moonshotai/Moonlight-16B-A3B].
+
+48L d_model=2048 16H (GQA kv=16) d_ff=1408(per expert) vocab=163840,
+64 experts top-6. The Sparton head is backbone-agnostic (DESIGN.md §4);
+experts shard over the model axis (EP).
+"""
+
+from repro.configs.base import TransformerConfig, shapes_lm
+
+CONFIG = TransformerConfig(
+    name="moonshot-v1-16b-a3b",
+    family="moe",
+    n_layers=48,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_head=128,
+    d_ff=1408,
+    vocab_size=163840,
+    n_experts=64,
+    top_k=6,
+    rope_theta=50000.0,
+    tie_embeddings=True,
+    param_dtype="bfloat16",
+    attn_chunk=2048,   # §Perf: -4% memory term vs 512
+
+)
+
+SMOKE = TransformerConfig(
+    name="moonshot-smoke",
+    family="moe",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_head=16,
+    d_ff=64,
+    vocab_size=512,
+    n_experts=8,
+    top_k=2,
+    tie_embeddings=True,
+    remat=False,
+)
+
+SHAPES = shapes_lm(
+    long_ok=False,
+    long_skip_reason="pure full attention; 524k-token decode needs "
+                     "sub-quadratic attention (assignment rule)",
+)

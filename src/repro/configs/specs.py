@@ -1,0 +1,228 @@
+"""Per-cell input specs: ShapeDtypeStruct stand-ins for every model
+input of every (architecture × shape) cell — weak-type-correct,
+shardable, no device allocation.
+
+``cell_spec(arch_id, shape_name)`` returns a ``CellSpec`` carrying:
+  * ``step_kind`` — which step function the cell lowers
+    (lsr_train / lsr_prefill / decode / gnn_train / recsys_train /
+     recsys_serve / retrieval),
+  * ``batch`` — dict of ShapeDtypeStructs for the step's batch arg,
+  * ``n_micro`` — gradient-accumulation microbatches for train cells
+    (sized so per-chip activations fit v5e HBM; see DESIGN.md §5),
+  * static extras (decode cache length etc.).
+
+Static-shape padding conventions (divisibility by the 512-device
+multi-pod mesh): edge/triplet/candidate counts are padded up to
+multiples of 512; token batches are sharded over the largest batch-axis
+prefix that divides them (launch/sharding.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+# §Perf: dense (E, K) triplet layout + distributed gather/scatter for
+# capped-triplet GNN cells (see models/dimenet.py::forward_dense_triplets
+# and EXPERIMENTS.md §Perf). "1" (default) = optimized layout,
+# "0" = the flat baseline layout the baseline table was measured with.
+DENSE_TRIPLETS = os.environ.get("REPRO_DENSE_TRIPLETS", "1") == "1"
+
+from repro.configs import get_config
+from repro.configs.base import (DimeNetConfig, RecSysConfig, ShapeSpec,
+                                TransformerConfig)
+
+S = jax.ShapeDtypeStruct
+
+
+def _pad512(n: int) -> int:
+    return n + ((-n) % 512)
+
+
+@dataclasses.dataclass(frozen=True)
+class CellSpec:
+    arch: str
+    shape: str
+    step_kind: str
+    batch: Dict[str, Any]
+    n_micro: int = 1
+    # decode extras
+    cache_len: int = 0
+    # gnn extras
+    n_nodes: int = 0
+    n_edges: int = 0
+    n_triplets: int = 0
+    d_feat: int = 0
+    n_graphs: int = 0
+    # retrieval extras
+    n_candidates: int = 0
+
+
+# per-(arch, trainshape) microbatch counts — sized so remat-saved layer
+# inputs fit per chip (DESIGN.md §5). Larger model => more microbatches.
+_N_MICRO = {
+    ("llama3_2_3b", "train_4k"): 4,
+    ("gemma2_27b", "train_4k"): 8,
+    ("phi3_mini", "train_4k"): 4,
+    ("moonshot_v1_16b", "train_4k"): 8,
+    ("phi3_5_moe", "train_4k"): 8,
+}
+
+
+def _lm_cell(arch: str, cfg: TransformerConfig, spec: ShapeSpec) -> CellSpec:
+    B, L = spec.global_batch, spec.seq_len
+    i32 = jnp.int32
+    if spec.kind == "train":
+        pairs = max(1, B // 2)
+        batch = {
+            "q_tokens": S((pairs, L), i32),
+            "q_mask": S((pairs, L), i32),
+            "d_tokens": S((pairs, L), i32),
+            "d_mask": S((pairs, L), i32),
+        }
+        return CellSpec(arch, spec.name, "lsr_train", batch,
+                        n_micro=_N_MICRO.get((arch, spec.name), 1))
+    if spec.kind == "prefill":
+        batch = {
+            "tokens": S((B, L), i32),
+            "mask": S((B, L), i32),
+        }
+        return CellSpec(arch, spec.name, "lsr_prefill", batch)
+    if spec.kind == "decode":
+        cdtype = jnp.dtype(cfg.compute_dtype)
+        batch = {
+            "tokens": S((B, 1), i32),
+            "positions": S((B,), i32),
+            "cache_k": S((cfg.n_layers, B, L, cfg.n_kv_heads, cfg.d_head),
+                         cdtype),
+            "cache_v": S((cfg.n_layers, B, L, cfg.n_kv_heads, cfg.d_head),
+                         cdtype),
+        }
+        return CellSpec(arch, spec.name, "decode", batch, cache_len=L)
+    raise ValueError(f"unknown LM shape kind {spec.kind}")
+
+
+def _gnn_cell(arch: str, cfg: DimeNetConfig, spec: ShapeSpec) -> CellSpec:
+    i32, f32 = jnp.int32, jnp.float32
+    cap = cfg.max_triplets_per_edge
+
+    if spec.kind == "batched_graphs":          # molecule
+        n_graphs = spec.n_graphs
+        N = _pad512(spec.n_nodes * n_graphs)   # 30 * 128 -> padded
+        E = _pad512(spec.n_edges * n_graphs)   # 64 * 128
+        T = _pad512(E * 2)                     # exact triplets, avg deg ~2
+        batch = {
+            "positions": S((N, 3), f32),
+            "node_feat": S((N,), i32),
+            "node_mask": S((N,), i32),
+            "node_graph_id": S((N,), i32),
+            "edge_src": S((E,), i32), "edge_dst": S((E,), i32),
+            "edge_mask": S((E,), i32),
+            "t_in": S((T,), i32), "t_out": S((T,), i32),
+            "t_mask": S((T,), i32),
+            "target": S((n_graphs, cfg.n_targets), f32),
+        }
+        return CellSpec(arch, spec.name, "gnn_train", batch,
+                        n_nodes=N, n_edges=E, n_triplets=T,
+                        n_graphs=n_graphs)
+
+    def triplet_specs(E: int) -> Dict[str, Any]:
+        if DENSE_TRIPLETS and cap:
+            return {
+                "t_in_dense": S((E, cap), i32),
+                "t_mask_dense": S((E, cap), i32),
+            }
+        T = _pad512(E * max(1, cap))
+        return {
+            "t_in": S((T,), i32), "t_out": S((T,), i32),
+            "t_mask": S((T,), i32),
+        }
+
+    if spec.kind == "minibatch":               # sampled training
+        n_seed = spec.batch_nodes
+        # per-hop edge budgets: seeds*f1, seeds*f1*f2 (fanout sampler)
+        E_total = _pad512(n_seed * spec.fanout[0]
+                          + n_seed * spec.fanout[0] * spec.fanout[1])
+        N = _pad512(n_seed + E_total)
+        T = _pad512(E_total * max(1, cap))
+        d_feat = 602                           # Reddit feature width
+        batch = {
+            "positions": S((N, 3), f32),       # synthetic coords (DESIGN)
+            "node_feat": S((N, d_feat), f32),
+            "node_mask": S((N,), i32),
+            "edge_src": S((E_total,), i32), "edge_dst": S((E_total,), i32),
+            "edge_mask": S((E_total,), i32),
+            "seed_ids": S((n_seed,), i32),
+            "target": S((n_seed, cfg.n_targets), f32),
+            **triplet_specs(E_total),
+        }
+        return CellSpec(arch, spec.name, "gnn_train", batch,
+                        n_nodes=N, n_edges=E_total, n_triplets=T,
+                        d_feat=d_feat)
+
+    # full-graph (cora-size and ogb-products-size)
+    N = _pad512(spec.n_nodes)
+    E = _pad512(spec.n_edges)
+    T = _pad512(E * max(1, cap))
+    batch = {
+        "positions": S((N, 3), f32),
+        "node_feat": S((N, spec.d_feat), f32),
+        "node_mask": S((N,), i32),
+        "edge_src": S((E,), i32), "edge_dst": S((E,), i32),
+        "edge_mask": S((E,), i32),
+        "target": S((N, cfg.n_targets), f32),
+        **triplet_specs(E),
+    }
+    return CellSpec(arch, spec.name, "gnn_train", batch,
+                    n_nodes=N, n_edges=E, n_triplets=T, d_feat=spec.d_feat)
+
+
+def _recsys_cell(arch: str, cfg: RecSysConfig, spec: ShapeSpec) -> CellSpec:
+    i32, f32 = jnp.int32, jnp.float32
+
+    def family_inputs(B: int) -> Dict[str, Any]:
+        out: Dict[str, Any] = {}
+        if cfg.interaction == "dot":
+            out["dense"] = S((B, cfg.n_dense), f32)
+            out["sparse_idx"] = S((B, cfg.n_sparse), i32)
+        elif cfg.interaction == "augru":
+            out["hist_idx"] = S((B, cfg.seq_len), i32)
+            out["target_idx"] = S((B,), i32)
+        else:
+            out["sparse_idx"] = S((B, cfg.n_sparse), i32)
+        return out
+
+    if spec.kind == "train":
+        batch = family_inputs(spec.batch)
+        batch["label"] = S((spec.batch,), f32)
+        return CellSpec(arch, spec.name, "recsys_train", batch)
+    if spec.kind == "serve":
+        return CellSpec(arch, spec.name, "recsys_serve",
+                        family_inputs(spec.batch))
+    if spec.kind == "retrieval":
+        NC = _pad512(spec.n_candidates)
+        batch = family_inputs(spec.batch)
+        batch["candidates"] = S((NC, cfg.embed_dim), f32)
+        return CellSpec(arch, spec.name, "retrieval", batch,
+                        n_candidates=NC)
+    raise ValueError(f"unknown recsys shape kind {spec.kind}")
+
+
+def cell_spec(arch_id: str, shape_name: str) -> CellSpec:
+    mod = get_config(arch_id)
+    cfg = mod.CONFIG
+    spec = mod.SHAPES[shape_name]
+    if spec.skip:
+        raise ValueError(
+            f"cell ({arch_id}, {shape_name}) is skipped: {spec.skip_reason}")
+    if isinstance(cfg, TransformerConfig):
+        return _lm_cell(arch_id, cfg, spec)
+    if isinstance(cfg, DimeNetConfig):
+        return _gnn_cell(arch_id, cfg, spec)
+    if isinstance(cfg, RecSysConfig):
+        return _recsys_cell(arch_id, cfg, spec)
+    raise TypeError(f"unknown config type {type(cfg)}")

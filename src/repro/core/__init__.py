@@ -1,0 +1,15 @@
+"""Sparton LM head — the paper's core contribution (pure JAX + sharded)."""
+
+from repro.core.lm_head import (
+    lm_head,
+    lm_head_naive,
+    lm_head_sparton,
+    lm_head_tiled,
+    sparton_forward_with_indices,
+)
+from repro.core.sharded import (
+    head_shardings,
+    sharded_flops_reg,
+    sharded_similarity,
+    sharded_sparton_head,
+)

@@ -1,0 +1,347 @@
+"""Sparton LM head — the paper's core contribution, in pure JAX.
+
+Implements Eq. 1 of the paper::
+
+    Y = max_s [ log(1 + ReLU(H E^T + b)) . M' ]
+
+in four flavours that mirror the paper's experimental conditions:
+
+* ``lm_head_naive``    — Alg. 1: materializes the full ``(B, S, V)``
+  logit tensor. The "Eager/Compiled LM Head" baseline.
+* ``lm_head_tiled``    — Alg. 2 forward only: scans vocabulary tiles
+  with a running max, but lets autograd differentiate through the scan
+  (residual tiles are saved => O(B*S*V) backward state). The paper's
+  "Tiled Head" baseline, which fixes forward memory but not backward.
+* ``lm_head_sparton``  — Alg. 2 + Alg. 3: ``jax.custom_vjp`` whose
+  residuals are only ``(H, E, y, i_max)``; the backward routes the
+  gradient through the single argmax position per ``(b, v)``.
+* ``lm_head_sparton_kernel`` (in ``repro.kernels.ops``) — the Pallas
+  TPU kernel version, numerically identical.
+
+Masking note: the paper multiplies the *post-activation* matrix by the
+broadcast mask (Eq. 1) / the raw logits by the mask (Alg. 2, line 6).
+Both are equivalent to excluding masked positions from the max and
+clamping the result at zero, because ``f(x) = log1p(relu(x))`` is
+monotone with ``f(x) >= 0`` and ``f(0) = 0``. We exclude masked
+positions with ``-inf`` *before* the max so that ``i_max`` always
+points at a valid (unmasked) token, which makes the gradient routing of
+Alg. 3 unambiguous.
+
+``logit_softcap`` extends Eq. 1 with gemma-2 style tanh soft-capping
+``c * tanh(x / c)`` applied to the raw logits. The cap is monotone, so
+the reordering argument of the paper still holds; the stored
+post-activation value still suffices for the backward factor.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_NEG_INF = -1e30  # finite -inf stand-in: keeps argmax well-defined in bf16
+
+
+def _f(x: Array) -> Array:
+    """The paper's pointwise map f(x) = log(1 + ReLU(x))."""
+    return jnp.log1p(jax.nn.relu(x))
+
+
+def _apply_softcap(x: Array, cap: Optional[float]) -> Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def _mask_to_neg_inf(logits: Array, mask: Optional[Array]) -> Array:
+    """Set masked sequence positions to -inf (mask: (B, S) with 1=keep)."""
+    if mask is None:
+        return logits
+    keep = mask.astype(bool)[..., None]  # (B, S, 1) broadcast over V
+    return jnp.where(keep, logits, jnp.asarray(_NEG_INF, logits.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Alg. 1 — naive / eager baseline
+# ---------------------------------------------------------------------------
+
+def lm_head_naive(
+    H: Array,
+    E: Array,
+    b: Optional[Array] = None,
+    mask: Optional[Array] = None,
+    *,
+    logit_softcap: Optional[float] = None,
+) -> Array:
+    """Materializes the (B, S, V) logit tensor, then f, then max_s.
+
+    This is the paper's Alg. 1 written as Eq. 1 verbatim (mask applied
+    multiplicatively on the post-activation tensor).
+    """
+    logits = jnp.einsum("bsd,vd->bsv", H, E, preferred_element_type=jnp.float32)
+    if b is not None:
+        logits = logits + b
+    logits = _apply_softcap(logits, logit_softcap)
+    acts = _f(logits)
+    if mask is not None:
+        acts = acts * mask.astype(acts.dtype)[..., None]
+    return jnp.max(acts, axis=1).astype(H.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Alg. 2 forward (tiled) — autograd backward (the paper's "Tiled Head")
+# ---------------------------------------------------------------------------
+
+def lm_head_tiled(
+    H: Array,
+    E: Array,
+    b: Optional[Array] = None,
+    mask: Optional[Array] = None,
+    *,
+    vocab_tile: int = 4096,
+    logit_softcap: Optional[float] = None,
+) -> Array:
+    """Vocabulary-tiled forward; backward left to autograd.
+
+    Forward peak activation is O(B*S*tile), but ``lax.scan`` saves the
+    per-tile residuals for the backward pass, so total autograd state
+    remains O(B*S*V) — reproducing the paper's RQ2 finding that tiling
+    alone does not relieve backward memory.
+    """
+    B, S, D = H.shape
+    V = E.shape[0]
+    pad = (-V) % vocab_tile
+    E_p = jnp.pad(E, ((0, pad), (0, 0)))
+    b_p = None if b is None else jnp.pad(b, (0, pad))
+    n_tiles = (V + pad) // vocab_tile
+
+    E_t = E_p.reshape(n_tiles, vocab_tile, D)
+    b_t = None if b_p is None else b_p.reshape(n_tiles, vocab_tile)
+    keep = None if mask is None else mask.astype(bool)[..., None]
+
+    def tile_fn(carry, xs):
+        if b_t is None:
+            (e_tile,) = xs
+            logits = jnp.einsum(
+                "bsd,vd->bsv", H, e_tile, preferred_element_type=jnp.float32
+            )
+        else:
+            e_tile, bias_tile = xs
+            logits = (
+                jnp.einsum("bsd,vd->bsv", H, e_tile,
+                           preferred_element_type=jnp.float32)
+                + bias_tile
+            )
+        logits = _apply_softcap(logits, logit_softcap)
+        if keep is not None:
+            logits = jnp.where(keep, logits, _NEG_INF)
+        return carry, jnp.max(logits, axis=1)  # (B, vocab_tile)
+
+    xs = (E_t,) if b_t is None else (E_t, b_t)
+    _, maxima = jax.lax.scan(tile_fn, (), xs)
+    maxima = jnp.moveaxis(maxima, 0, 1).reshape(B, V + pad)[:, :V]
+    return _f(maxima).astype(H.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Alg. 2 + Alg. 3 — Sparton (custom_vjp, pure JAX)
+# ---------------------------------------------------------------------------
+
+def _sparton_forward_scan(
+    H: Array,
+    E: Array,
+    b: Optional[Array],
+    mask: Optional[Array],
+    vocab_tile: int,
+    logit_softcap: Optional[float],
+    unroll: int = 1,
+) -> Tuple[Array, Array]:
+    """Streaming max over vocabulary tiles. Returns (y, i_max).
+
+    y      — (B, V) post-activation f(max_s logits)   [float32]
+    i_max  — (B, V) argmax sequence index             [int32]
+    """
+    B, S, D = H.shape
+    V = E.shape[0]
+    pad = (-V) % vocab_tile
+    E_p = jnp.pad(E, ((0, pad), (0, 0)))
+    b_p = None if b is None else jnp.pad(b, (0, pad))
+    n_tiles = (V + pad) // vocab_tile
+    E_t = E_p.reshape(n_tiles, vocab_tile, D)
+    b_t = None if b_p is None else b_p.reshape(n_tiles, vocab_tile)
+    keep = None if mask is None else mask.astype(bool)[..., None]
+
+    def tile_fn(carry, xs):
+        if b_t is None:
+            (e_tile,) = xs
+            bias = 0.0
+        else:
+            e_tile, bias_tile = xs
+            bias = bias_tile
+        logits = (
+            jnp.einsum("bsd,vd->bsv", H, e_tile,
+                       preferred_element_type=jnp.float32)
+            + bias
+        )
+        logits = _apply_softcap(logits, logit_softcap)
+        if keep is not None:
+            logits = jnp.where(keep, logits, _NEG_INF)
+        m = jnp.max(logits, axis=1)                       # (B, tile)
+        i = jnp.argmax(logits, axis=1).astype(jnp.int32)  # (B, tile)
+        return carry, (m, i)
+
+    xs = (E_t,) if b_t is None else (E_t, b_t)
+    _, (maxima, indices) = jax.lax.scan(tile_fn, (), xs, unroll=unroll)
+    maxima = jnp.moveaxis(maxima, 0, 1).reshape(B, V + pad)[:, :V]
+    indices = jnp.moveaxis(indices, 0, 1).reshape(B, V + pad)[:, :V]
+    return _f(maxima), indices
+
+
+def _sparton_bwd_factor(
+    y: Array, dy: Array, logit_softcap: Optional[float]
+) -> Array:
+    """g = dY/d(raw max logit), from the *stored post-activation* y.
+
+    f(x) = log1p(relu(c(x))),   c = softcap or identity.
+    With m = relu-input value at the max: exp(y) = 1 + relu(c(m)), and
+    y > 0  <=>  c(m) > 0  <=>  m > 0 (softcap is sign-preserving).
+        df/dc = exp(-y)         on c > 0, else 0
+        dc/dm = 1 - (c/cap)^2   (tanh derivative), c = expm1(y)
+    """
+    g = dy * jnp.exp(-y)
+    if logit_softcap is not None:
+        c = jnp.expm1(y)
+        g = g * (1.0 - (c / logit_softcap) ** 2)
+    return jnp.where(y > 0, g, 0.0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _sparton_core(
+    H: Array,
+    E: Array,
+    b: Array,
+    mask: Array,
+    vocab_tile: int,
+    logit_softcap: Optional[float],
+    bwd_batch_chunk: int,
+    unroll: int = 1,
+) -> Array:
+    y, _ = _sparton_forward_scan(H, E, b, mask, vocab_tile, logit_softcap,
+                                 unroll)
+    return y.astype(H.dtype)
+
+
+def _sparton_fwd(H, E, b, mask, vocab_tile, logit_softcap, bwd_batch_chunk,
+                 unroll=1):
+    y, i_max = _sparton_forward_scan(H, E, b, mask, vocab_tile,
+                                     logit_softcap, unroll)
+    # Residuals: O(B*V) head state + the inputs (which exist regardless).
+    return y.astype(H.dtype), (H, E, y, i_max)
+
+
+def _sparton_bwd(vocab_tile, logit_softcap, bwd_batch_chunk, unroll,
+                 res, dy):
+    H, E, y, i_max = res
+    B, S, D = H.shape
+    V = E.shape[0]
+    g = _sparton_bwd_factor(y, dy.astype(jnp.float32), logit_softcap)  # (B,V)
+
+    chunk = max(1, min(bwd_batch_chunk, B))
+    n_chunks = -(-B // chunk)
+    pad_b = n_chunks * chunk - B
+    if pad_b:
+        g_p = jnp.pad(g, ((0, pad_b), (0, 0)))
+        H_p = jnp.pad(H, ((0, pad_b), (0, 0), (0, 0)))
+        i_p = jnp.pad(i_max, ((0, pad_b), (0, 0)))
+    else:
+        g_p, H_p, i_p = g, H, i_max
+    g_c = g_p.reshape(n_chunks, chunk, V)
+    H_c = H_p.reshape(n_chunks, chunk, S, D).astype(jnp.float32)
+    i_c = i_p.reshape(n_chunks, chunk, V)
+    E32 = E.astype(jnp.float32)
+
+    def chunk_fn(dE_acc, xs):
+        g_b, h_b, i_b = xs  # (chunk, V), (chunk, S, D), (chunk, V)
+        # gathered[c, v, :] = H[c, i_max[c, v], :]  — per-row gather.
+        gathered = jax.vmap(lambda h, i: jnp.take(h, i, axis=0))(h_b, i_b)
+        dE_acc = dE_acc + jnp.einsum("cv,cvd->vd", g_b, gathered)
+        # dH[c, s, :] = sum_v g[c, v] 1[i_max=s] E[v]  — scatter-add.
+        contrib = g_b[..., None] * E32[None]  # (chunk, V, D)
+        dH_b = jax.vmap(
+            lambda con, i: jax.ops.segment_sum(con, i, num_segments=S)
+        )(contrib, i_b)
+        return dE_acc, dH_b
+
+    dE, dH_c = jax.lax.scan(chunk_fn, jnp.zeros((V, D), jnp.float32),
+                            (g_c, H_c, i_c), unroll=unroll)
+    dH = dH_c.reshape(n_chunks * chunk, S, D)[:B]
+    db = jnp.sum(g, axis=0)  # bias grad: d(logit)/db = 1 at the max position
+    return (dH.astype(H.dtype), dE.astype(E.dtype), db.astype(jnp.float32),
+            None)
+
+
+_sparton_core.defvjp(_sparton_fwd, _sparton_bwd)
+
+
+def lm_head_sparton(
+    H: Array,
+    E: Array,
+    b: Optional[Array] = None,
+    mask: Optional[Array] = None,
+    *,
+    vocab_tile: int = 4096,
+    logit_softcap: Optional[float] = None,
+    bwd_batch_chunk: int = 8,
+    unroll: int = 1,
+) -> Array:
+    """Sparton LM head (paper Alg. 2 + 3), pure-JAX, differentiable.
+
+    Saves only ``(y, i_max)`` beyond the inputs — O(B*V) backward state
+    instead of O(B*S*V). ``unroll`` replicates the scan bodies for
+    cost-probe lowering (roofline.py); runtime uses 1.
+    """
+    B, S, _ = H.shape
+    V = E.shape[0]
+    if b is None:
+        b = jnp.zeros((V,), jnp.float32)
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.int32)
+    return _sparton_core(H, E, b, mask, vocab_tile, logit_softcap,
+                         bwd_batch_chunk, unroll)
+
+
+def sparton_forward_with_indices(
+    H: Array,
+    E: Array,
+    b: Optional[Array] = None,
+    mask: Optional[Array] = None,
+    *,
+    vocab_tile: int = 4096,
+    logit_softcap: Optional[float] = None,
+) -> Tuple[Array, Array]:
+    """Inference-path forward that also returns the argmax indices.
+
+    Useful for interpretability (which token activated each vocab
+    dimension) and for the serving path's term-weight extraction.
+    """
+    y, i_max = _sparton_forward_scan(H, E, b, mask, vocab_tile,
+                                     logit_softcap)
+    return y.astype(H.dtype), i_max
+
+
+IMPLEMENTATIONS = {
+    "naive": lm_head_naive,
+    "tiled": lm_head_tiled,
+    "sparton": lm_head_sparton,
+}
+
+
+def lm_head(H, E, b=None, mask=None, *, impl="sparton", **kw):
+    """Dispatch across LM-head implementations (see module docstring)."""
+    if impl not in IMPLEMENTATIONS:
+        raise ValueError(f"unknown impl {impl!r}; one of {list(IMPLEMENTATIONS)}")
+    return IMPLEMENTATIONS[impl](H, E, b, mask, **kw)

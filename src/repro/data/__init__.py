@@ -1,0 +1,8 @@
+from repro.data.synthetic import (
+    lsr_pair_batches,
+    lm_token_batches,
+    recsys_batches,
+    molecule_batches,
+    make_synthetic_graph,
+)
+from repro.data.loader import HostShardedLoader, length_bucket

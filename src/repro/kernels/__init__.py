@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+* ``sparton`` / ``sparton_bwd`` — the paper's fused LM head (fwd + bwd).
+* ``topk_score`` — beyond-paper transfer: fused streaming top-k
+  retrieval scoring (never materializes the (B, N) score matrix).
+* ``ops`` — jit'd differentiable wrappers (``custom_vjp``).
+* ``ref`` — pure-jnp oracles for the allclose sweeps.
+"""
+
+from repro.kernels.ops import sparton_head, sparton_lm_head_kernel
+from repro.kernels.sparton import sparton_forward
+from repro.kernels.sparton_bwd import sparton_backward
+from repro.kernels.topk_score import topk_score

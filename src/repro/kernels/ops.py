@@ -1,0 +1,106 @@
+"""Jit'd, differentiable wrappers around the Pallas Sparton kernels.
+
+``sparton_lm_head_kernel`` is the drop-in kernel-backed equivalent of
+``repro.core.lm_head.lm_head_sparton``: a ``jax.custom_vjp`` whose
+forward runs the fused Pallas forward (saving only ``(y, i_max)``) and
+whose backward runs the two fused Pallas accumulation kernels.
+
+On this CPU container the kernels run with ``interpret=True`` (the
+kernel body executed by the Pallas interpreter); on TPU the same code
+compiles to Mosaic. ``interpret`` is threaded through as a static
+argument so tests/benchmarks choose explicitly.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sparton import sparton_forward
+from repro.kernels.sparton_bwd import sparton_backward
+
+
+def _bwd_factor(y, dy, softcap):
+    """dY/d(raw max logit) from the stored post-activation y.
+
+    See core/lm_head.py::_sparton_bwd_factor — duplicated here to keep
+    the kernels package importable standalone.
+    """
+    g = dy.astype(jnp.float32) * jnp.exp(-y)
+    if softcap is not None:
+        c = jnp.expm1(y)
+        g = g * (1.0 - (c / softcap) ** 2)
+    return jnp.where(y > 0, g, 0.0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9))
+def sparton_lm_head_kernel(
+    H: jax.Array,
+    E: jax.Array,
+    b: jax.Array,
+    mask: jax.Array,
+    block_b: int = 8,
+    block_s: int = 128,
+    block_v: int = 128,
+    softcap: Optional[float] = None,
+    interpret: bool = False,
+    out_dtype: Optional[jnp.dtype] = None,
+) -> jax.Array:
+    y, _ = sparton_forward(
+        H, E, b, mask,
+        block_b=block_b, block_s=block_s, block_v=block_v,
+        softcap=softcap, interpret=interpret,
+    )
+    return y.astype(out_dtype or H.dtype)
+
+
+def _fwd(H, E, b, mask, block_b, block_s, block_v, softcap, interpret,
+         out_dtype):
+    y, i_max = sparton_forward(
+        H, E, b, mask,
+        block_b=block_b, block_s=block_s, block_v=block_v,
+        softcap=softcap, interpret=interpret,
+    )
+    return y.astype(out_dtype or H.dtype), (H, E, y, i_max)
+
+
+def _bwd(block_b, block_s, block_v, softcap, interpret, out_dtype, res, dy):
+    H, E, y, i_max = res
+    g = _bwd_factor(y, dy, softcap)
+    dH, dE = sparton_backward(
+        g, i_max, H, E,
+        block_b=block_b, block_s=block_s, block_v=block_v,
+        interpret=interpret,
+    )
+    db = jnp.sum(g, axis=0)
+    return dH.astype(H.dtype), dE.astype(E.dtype), db, None
+
+
+sparton_lm_head_kernel.defvjp(_fwd, _bwd)
+
+
+def sparton_head(
+    H: jax.Array,
+    E: jax.Array,
+    b: Optional[jax.Array] = None,
+    mask: Optional[jax.Array] = None,
+    *,
+    block_b: int = 8,
+    block_s: int = 128,
+    block_v: int = 128,
+    softcap: Optional[float] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Convenience entry point with optional bias/mask (kernel-backed)."""
+    B, S, _ = H.shape
+    V = E.shape[0]
+    if b is None:
+        b = jnp.zeros((V,), jnp.float32)
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.int32)
+    return sparton_lm_head_kernel(
+        H, E, b, mask, block_b, block_s, block_v, softcap, interpret, None
+    )

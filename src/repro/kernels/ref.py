@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for the Pallas kernels in this package.
+
+These are deliberately naive (they materialize everything) — they exist
+only as the ground truth for the kernel allclose sweeps in
+``tests/test_kernels_sparton.py`` and ``tests/test_kernels_topk.py``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _raw_logits(H, E, b, mask, softcap):
+    logits = jnp.einsum(
+        "bsd,vd->bsv", H, E, preferred_element_type=jnp.float32
+    )
+    if b is not None:
+        logits = logits + b.astype(jnp.float32)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    if mask is not None:
+        logits = jnp.where(mask.astype(bool)[:, :, None], logits, NEG_INF)
+    return logits
+
+
+def sparton_forward_ref(
+    H: jax.Array,
+    E: jax.Array,
+    b: Optional[jax.Array],
+    mask: Optional[jax.Array],
+    softcap: Optional[float] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Oracle for kernels.sparton.sparton_forward. Returns (y, i_max)."""
+    logits = _raw_logits(H, E, b, mask, softcap)
+    raw_max = jnp.max(logits, axis=1)
+    i_max = jnp.argmax(logits, axis=1).astype(jnp.int32)
+    y = jnp.log1p(jnp.maximum(raw_max, 0.0))
+    return y, i_max
+
+
+def sparton_backward_ref(
+    g: jax.Array,       # (B, V) — already includes the f' factor
+    i_max: jax.Array,   # (B, V)
+    H: jax.Array,       # (B, S, D)
+    E: jax.Array,       # (V, D)
+) -> Tuple[jax.Array, jax.Array]:
+    """Oracle for kernels.sparton_bwd.sparton_backward."""
+    B, S, D = H.shape
+    V = E.shape[0]
+    onehot = jax.nn.one_hot(i_max, S, dtype=jnp.float32)   # (B, V, S)
+    w = onehot * g.astype(jnp.float32)[..., None]          # (B, V, S)
+    dH = jnp.einsum("bvs,vd->bsd", w, E.astype(jnp.float32))
+    dE = jnp.einsum("bvs,bsd->vd", w, H.astype(jnp.float32))
+    return dH, dE
+
+
+def topk_score_ref(
+    q: jax.Array,       # (D,) or (B, D)
+    C: jax.Array,       # (N, D) candidate matrix
+    k: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Oracle for kernels.topk_score: scores + indices of top-k by dot."""
+    q2 = q if q.ndim == 2 else q[None]
+    scores = jnp.einsum(
+        "bd,nd->bn", q2, C, preferred_element_type=jnp.float32
+    )
+    vals, idx = jax.lax.top_k(scores, k)
+    if q.ndim == 1:
+        return vals[0], idx[0].astype(jnp.int32)
+    return vals, idx.astype(jnp.int32)

@@ -1,0 +1,172 @@
+"""Sparton fused LM-head backward — Pallas TPU kernels.
+
+The paper's Alg. 3 computes, per (b, v), the activation-derivative
+factor ``g`` and scatters ``g*E[v]`` into ``dH[b, i_max]`` / gathers
+``H[b, i_max]`` into ``dE[v]`` using *atomic* accumulation across GPU
+thread blocks. TPU Pallas has no atomics; instead we exploit the
+sequential grid to accumulate deterministically (DESIGN.md §3):
+
+* ``dH`` kernel — grid ``(B/bb, S/bs, V/bv)``, vocab innermost: each
+  ``(b, s)`` tile of ``dH`` is revisited across vocab blocks and
+  accumulates ``sum_v g[b,v] * onehot(i_max[b,v], s) * E[v]``.
+* ``dE`` kernel — grid ``(V/bv, B/bb, S/bs)``, batch/seq innermost:
+  each vocab tile of ``dE`` accumulates
+  ``sum_b g[b,v] * onehot(i_max[b,v], s) * H[b,s]``.
+
+Gather/scatter by ``i_max`` is re-expressed as a *one-hot contraction*
+(``onehot(i_max) @ E`` / ``(onehot*g)^T @ H``) so the irregular memory
+access becomes an MXU matmul — the TPU-native replacement for GPU
+scattered atomics. Positions whose argmax falls outside the current
+sequence block simply produce an all-zero one-hot row, which is what
+routes each gradient to exactly one sequence block.
+
+``g`` (the derivative of ``log1p(relu(.))`` — and optionally of the
+logit softcap — evaluated via the stored post-activation ``y``) is a
+cheap elementwise ``(B, V)`` computation done in plain jnp by the
+wrapper in ``ops.py``; fusing it here would save one small HBM read but
+complicate block unification.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dh_kernel(
+    g_ref,     # (bb, bv) f32 — upstream grad * activation derivative
+    i_ref,     # (bb, bv) i32 — argmax sequence index
+    e_ref,     # (bv, D)
+    dh_ref,    # (bb, bs, D) out, accumulated over vocab grid dim
+    *,
+    n_v_blocks: int,
+    block_s: int,
+):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        dh_ref[...] = jnp.zeros(dh_ref.shape, jnp.float32)
+
+    bb, bs, d = dh_ref.shape
+    bv = e_ref.shape[0]
+    k = pl.program_id(1)
+
+    local_i = i_ref[...] - k * block_s          # (bb, bv); in-range => hit
+    s_iota = jax.lax.broadcasted_iota(jnp.int32, (bb, bs, bv), 1)
+    onehot = (local_i[:, None, :] == s_iota).astype(jnp.float32)
+    w = onehot * g_ref[...][:, None, :]          # (bb, bs, bv)
+    # dH[b, s, :] += sum_v w[b, s, v] * E[v, :]  — one MXU contraction.
+    contrib = jax.lax.dot_general(
+        w.reshape(bb * bs, bv), e_ref[...],
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    ).reshape(bb, bs, d)
+    dh_ref[...] += contrib
+
+
+def _de_kernel(
+    g_ref,     # (bb, bv) f32
+    i_ref,     # (bb, bv) i32
+    h_ref,     # (bb, bs, D)
+    de_ref,    # (bv, D) out, accumulated over (batch, seq) grid dims
+    *,
+    n_b_blocks: int,
+    n_s_blocks: int,
+    block_s: int,
+):
+    i = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when((i == 0) & (k == 0))
+    def _init():
+        de_ref[...] = jnp.zeros(de_ref.shape, jnp.float32)
+
+    bv, d = de_ref.shape
+    bb, bs, _ = h_ref.shape
+
+    local_i = i_ref[...] - k * block_s
+    s_iota = jax.lax.broadcasted_iota(jnp.int32, (bb, bs, bv), 1)
+    onehot = (local_i[:, None, :] == s_iota).astype(jnp.float32)
+    w = (onehot * g_ref[...][:, None, :]).reshape(bb * bs, bv)
+    # dE[v, :] += sum_{b,s} w[bs, v] * H[bs, :]
+    contrib = jax.lax.dot_general(
+        w, h_ref[...].reshape(bb * bs, d).astype(jnp.float32),
+        (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    )
+    de_ref[...] += contrib
+
+
+def _pad_to(x, axis, multiple, value=0):
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_b", "block_s", "block_v", "interpret"),
+)
+def sparton_backward(
+    g: jax.Array,       # (B, V) f32 — dy * f'(raw max), zero where y <= 0
+    i_max: jax.Array,   # (B, V) i32
+    H: jax.Array,       # (B, S, D)
+    E: jax.Array,       # (V, D)
+    *,
+    block_b: int = 8,
+    block_s: int = 128,
+    block_v: int = 128,
+    interpret: bool = False,
+):
+    """Fused backward. Returns (dH (B,S,D) f32, dE (V,D) f32)."""
+    B, S, D = H.shape
+    V = E.shape[0]
+
+    gp = _pad_to(_pad_to(g.astype(jnp.float32), 0, block_b), 1, block_v)
+    # Padded batch rows must not route anywhere real: g is zero there, so
+    # any index is safe; padded vocab cols likewise have g == 0.
+    ip = _pad_to(_pad_to(i_max, 0, block_b), 1, block_v)
+    Hp = _pad_to(_pad_to(H, 0, block_b), 1, block_s)
+    Ep = _pad_to(E, 0, block_v)
+
+    Bp, Sp, _ = Hp.shape
+    Vp = Ep.shape[0]
+    nb, ns, nv = Bp // block_b, Sp // block_s, Vp // block_v
+
+    dH = pl.pallas_call(
+        functools.partial(_dh_kernel, n_v_blocks=nv, block_s=block_s),
+        grid=(nb, ns, nv),
+        in_specs=[
+            pl.BlockSpec((block_b, block_v), lambda i, k, j: (i, j)),
+            pl.BlockSpec((block_b, block_v), lambda i, k, j: (i, j)),
+            pl.BlockSpec((block_v, D), lambda i, k, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (block_b, block_s, D), lambda i, k, j: (i, k, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((Bp, Sp, D), jnp.float32),
+        interpret=interpret,
+    )(gp, ip, Ep)
+
+    dE = pl.pallas_call(
+        functools.partial(
+            _de_kernel, n_b_blocks=nb, n_s_blocks=ns, block_s=block_s
+        ),
+        grid=(nv, nb, ns),
+        in_specs=[
+            pl.BlockSpec((block_b, block_v), lambda j, i, k: (i, j)),
+            pl.BlockSpec((block_b, block_v), lambda j, i, k: (i, j)),
+            pl.BlockSpec((block_b, block_s, D), lambda j, i, k: (i, k, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_v, D), lambda j, i, k: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((Vp, D), jnp.float32),
+        interpret=interpret,
+    )(gp, ip, Hp)
+
+    return dH[:B, :S], dE[:V]

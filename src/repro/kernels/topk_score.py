@@ -1,0 +1,129 @@
+"""Fused streaming top-k retrieval scoring — Pallas TPU kernel.
+
+The Sparton idea transferred to recsys retrieval (DESIGN.md §4): score
+one query block against N candidates (``q @ C^T``) and keep only a
+running top-k — the ``(B, N)`` score matrix is never materialized, just
+as Sparton never materializes the ``(B, S, V)`` logit tensor. For the
+assigned ``retrieval_cand`` shape (1 query × 1,000,000 candidates) the
+dense score row is 4 MB/query; at serving batch sizes the full matrix
+would be GBs, all discarded except k winners.
+
+Grid: ``(B/bb, N/bn)`` with candidates innermost. Each candidate block
+computes its ``(bb, bn)`` score tile on the MXU, merges it with the
+running ``(bb, k)`` top-k via sort (bitonic-friendly shapes), and the
+final block writes scores + indices.
+
+Merge strategy per step: concatenate running top-k values with the new
+tile's *blockwise* scores, take ``lax.top_k`` of the union. k is kept
+small (≤ 256) so the working set stays in VMEM; the asymptotic work is
+O(N·(k+bn)/bn · log) vs O(N log N) for full sort.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _topk_kernel(
+    q_ref,      # (bb, D)
+    c_ref,      # (bn, D)
+    val_ref,    # (bb, k) out — running top-k values
+    idx_ref,    # (bb, k) out — running top-k candidate ids
+    *,
+    k: int,
+    block_n: int,
+    n_blocks: int,
+    n_real: int,
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        val_ref[...] = jnp.full(val_ref.shape, NEG_INF, jnp.float32)
+        idx_ref[...] = jnp.zeros(idx_ref.shape, jnp.int32)
+
+    bb, d = q_ref.shape
+    bn = c_ref.shape[0]
+
+    scores = jax.lax.dot_general(
+        q_ref[...], c_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                             # (bb, bn)
+    cand_ids = j * block_n + jax.lax.broadcasted_iota(
+        jnp.int32, (bb, bn), 1)
+    # padded rows (id >= n_real) score q.0 = 0, which would beat real
+    # negative scores — mask them to -inf so they can never be selected
+    scores = jnp.where(cand_ids < n_real, scores, NEG_INF)
+
+    # merge: union of running top-k and this block, re-top-k
+    all_vals = jnp.concatenate([val_ref[...], scores], axis=1)
+    all_idx = jnp.concatenate([idx_ref[...], cand_ids], axis=1)
+    top_vals, pos = jax.lax.top_k(all_vals, k)
+    top_idx = jnp.take_along_axis(all_idx, pos, axis=1)
+    val_ref[...] = top_vals
+    idx_ref[...] = top_idx
+
+
+def _pad_to(x, axis, multiple, value=0):
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "block_b", "block_n", "interpret")
+)
+def topk_score(
+    q: jax.Array,       # (B, D) queries
+    C: jax.Array,       # (N, D) candidates
+    *,
+    k: int = 100,
+    block_b: int = 8,
+    block_n: int = 1024,
+    interpret: bool = False,
+):
+    """Fused scoring + streaming top-k. Returns (vals (B,k), idx (B,k))."""
+    B, D = q.shape
+    N = C.shape[0]
+
+    qp = _pad_to(q.astype(jnp.float32), 0, block_b)
+    Cp = _pad_to(C.astype(jnp.float32), 0, block_n)
+
+    Bp = qp.shape[0]
+    Np = Cp.shape[0]
+    grid = (Bp // block_b, Np // block_n)
+
+    vals, idx = pl.pallas_call(
+        functools.partial(
+            _topk_kernel, k=k, block_n=block_n, n_blocks=grid[1],
+            n_real=N,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, D), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, D), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bp, k), jnp.float32),
+            jax.ShapeDtypeStruct((Bp, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(qp, Cp)
+
+    # padded ids were masked to -inf inside the kernel and can only
+    # appear if k > N (degenerate); callers see clean (B, k) results
+    return vals[:B], idx[:B]

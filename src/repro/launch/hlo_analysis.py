@@ -1,0 +1,219 @@
+"""HLO analysis: collective byte accounting + roofline terms.
+
+``cost_analysis()`` gives HLO FLOPs and HBM bytes but NOT collective
+traffic; we parse the *post-partitioning, per-device* HLO text
+(``compiled.as_text()``) and account every ``all-gather`` /
+``all-reduce`` / ``reduce-scatter`` / ``all-to-all`` /
+``collective-permute`` op.
+
+Byte conventions (per device, per step):
+* operand_bytes — sum of input-shape bytes (what the assignment asks
+  to sum; the payload a device *injects*),
+* wire_bytes    — ring-algorithm traffic estimate per device:
+    all-gather:        (n-1)/n x result_bytes
+    reduce-scatter:    (n-1)/n x operand_bytes
+    all-reduce:        2 (n-1)/n x operand_bytes
+    all-to-all:        (n-1)/n x operand_bytes
+    collective-permute: operand_bytes
+  where n = replica-group size parsed from the op.
+
+Roofline terms (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link (3D torus, per direction)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    """Largest replica group size on the op line (n for ring factors)."""
+    m = re.search(r"replica_groups=\{([^}]*)\}", line)
+    if m:
+        groups = m.group(1)
+        best = 1
+        for g in re.findall(r"\{([\d,]+)\}", "{" + groups + "}"):
+            best = max(best, g.count(",") + 1)
+        return best
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:  # iota group format [n_groups, group_size]
+        return int(m.group(2))
+    return 2
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    op_counts: Dict[str, int]
+    operand_bytes: Dict[str, int]     # per op kind
+    wire_bytes: Dict[str, int]
+    total_operand_bytes: int = 0
+    total_wire_bytes: int = 0
+
+    def rows(self) -> List[Tuple[str, int, int, int]]:
+        return [(k, self.op_counts[k], self.operand_bytes[k],
+                 self.wire_bytes[k]) for k in sorted(self.op_counts)]
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: Dict[str, int] = defaultdict(int)
+    op_bytes: Dict[str, int] = defaultdict(int)
+    wire: Dict[str, int] = defaultdict(int)
+
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.*)$", ls)
+        if not m:
+            continue
+        rhs = m.group(1)
+        kind = None
+        for c in _COLLECTIVES:
+            if re.search(rf"\b{c}(-start|-done)?\(", rhs):
+                kind = c
+                break
+        if kind is None:
+            continue
+        if f"{kind}-done(" in rhs:
+            continue  # bytes counted at -start
+        shapes = _SHAPE_RE.findall(rhs)
+        if not shapes:
+            continue
+        # result shape(s) come first (possibly a tuple), operands inside
+        paren = rhs.find(f"{kind}(")
+        if paren == -1:
+            paren = rhs.find("(")
+        result_shapes = _SHAPE_RE.findall(rhs[:paren])
+        operand_shapes = _SHAPE_RE.findall(rhs[paren:])
+        result_b = sum(_shape_bytes(d, s) for d, s in result_shapes)
+        operand_b = sum(_shape_bytes(d, s) for d, s in operand_shapes)
+        if operand_b == 0:
+            operand_b = result_b
+        n = _group_size(ls)
+        ring = (n - 1) / max(n, 1)
+
+        counts[kind] += 1
+        op_bytes[kind] += operand_b
+        if kind == "all-gather":
+            wire[kind] += int(ring * result_b)
+        elif kind == "all-reduce":
+            wire[kind] += int(2 * ring * operand_b)
+        elif kind == "reduce-scatter":
+            wire[kind] += int(ring * operand_b)
+        elif kind == "all-to-all":
+            wire[kind] += int(ring * operand_b)
+        else:  # collective-permute
+            wire[kind] += operand_b
+
+    stats = CollectiveStats(dict(counts), dict(op_bytes), dict(wire))
+    stats.total_operand_bytes = sum(op_bytes.values())
+    stats.total_wire_bytes = sum(wire.values())
+    return stats
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # total HLO flops (per device)
+    hbm_bytes: float             # per device
+    collective_operand_bytes: float
+    collective_wire_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float = 0.0     # 6*N*D useful flops per device
+    useful_ratio: float = 0.0
+
+    def table_row(self) -> str:
+        return (f"{self.compute_s:.3e},{self.memory_s:.3e},"
+                f"{self.collective_s:.3e},{self.bottleneck},"
+                f"{self.useful_ratio:.3f}")
+
+
+def roofline_terms(
+    flops: float,
+    hbm_bytes: float,
+    coll: CollectiveStats,
+    *,
+    model_flops: float = 0.0,
+    n_links: int = 3,  # v5e 2D/3D torus: ~3 usable link pairs per chip
+) -> Roofline:
+    """All inputs are per-device quantities (post-partitioning HLO)."""
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm_bytes / HBM_BW
+    collective_s = coll.total_wire_bytes / (ICI_BW * n_links)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    r = Roofline(
+        flops=flops, hbm_bytes=hbm_bytes,
+        collective_operand_bytes=coll.total_operand_bytes,
+        collective_wire_bytes=coll.total_wire_bytes,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=bottleneck,
+    )
+    if model_flops:
+        r.model_flops = model_flops
+        r.useful_ratio = model_flops / max(flops, 1.0)
+    return r
+
+
+def cost_analysis_terms(compiled) -> Tuple[float, float]:
+    """(flops, bytes accessed) from compiled.cost_analysis(), robust to
+    backend differences."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    if "bytes accessed" in ca:
+        mem = float(ca["bytes accessed"])
+    else:
+        mem = float(sum(v for k, v in ca.items()
+                        if k.startswith("bytes accessed")))
+    return flops, mem
+
+
+def memory_analysis_bytes(compiled) -> Optional[Dict[str, float]]:
+    """Per-device memory breakdown from compiled.memory_analysis()."""
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return None
+    if ma is None:
+        return None
+    out = {}
+    for key in ("argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes",
+                "alias_size_in_bytes"):
+        if hasattr(ma, key):
+            out[key] = float(getattr(ma, key))
+    peak = (out.get("argument_size_in_bytes", 0)
+            + out.get("output_size_in_bytes", 0)
+            + out.get("temp_size_in_bytes", 0)
+            - out.get("alias_size_in_bytes", 0))
+    out["peak_estimate_bytes"] = peak
+    return out

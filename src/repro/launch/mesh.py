@@ -1,0 +1,45 @@
+"""Production meshes.
+
+Single pod: (16, 16) = 256 chips, axes (data, model).
+Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model).
+
+``pod`` and ``data`` both carry data parallelism (gradient psum spans
+both); ``model`` carries tensor parallelism for the trunk AND the
+vocabulary/table sharding of the Sparton head + embeddings (the
+paper's axis of interest) AND expert parallelism for MoE.
+
+Functions, not module-level constants, so importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS first).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_for(shape: Tuple[int, ...],
+                  axes: Optional[Tuple[str, ...]] = None):
+    """Arbitrary mesh (elastic re-mesh path + tests)."""
+    if axes is None:
+        axes = ("pod", "data", "model")[-len(shape):]
+    return jax.make_mesh(shape, axes)
+
+
+def batch_axes(mesh) -> Tuple[str, ...]:
+    """The data-parallel axes of a mesh (everything except 'model')."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def n_batch_shards(mesh) -> int:
+    n = 1
+    for a in batch_axes(mesh):
+        n *= mesh.shape[a]
+    return n

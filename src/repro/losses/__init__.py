@@ -1,0 +1,7 @@
+from repro.losses.contrastive import (
+    flops_regularizer,
+    infonce_loss,
+    l1_regularizer,
+    margin_mse_loss,
+    splade_loss,
+)

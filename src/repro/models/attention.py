@@ -1,0 +1,176 @@
+"""Attention primitives: RoPE, chunked (online-softmax) attention, GQA.
+
+The training path uses a *chunked* attention (lax.scan over KV blocks
+with a running max/sum — the flash-attention recurrence expressed in
+XLA) so that the ``(B, H, S, S)`` score tensor is never materialized.
+This keeps the multi-pod dry-run compilable on the CPU backend (Pallas
+TPU attention kernels cannot lower there) while preserving the O(S)
+activation footprint that a fused TPU kernel would give.
+
+Masks are never materialized as ``(S, S)`` tensors: causal and
+sliding-window constraints are evaluated per KV chunk from iota
+comparisons, which XLA fuses into the score computation.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(d_head: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32)
+                            / d_head))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (B, S, N, d_head); positions: (B, S) int32."""
+    d_head = x.shape[-1]
+    freqs = rope_frequencies(d_head, theta)                 # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, d/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked multi-head attention with GQA
+# ---------------------------------------------------------------------------
+
+def _chunk_mask(
+    q_pos: Array,       # (Sq,) absolute query positions
+    k_pos: Array,       # (Ck,) absolute key positions of this chunk
+    kv_valid: Array,    # (B, Ck) bool — padding mask of this chunk
+    causal: bool,
+    window: Optional[int],
+) -> Array:
+    """(B, Sq, Ck) bool keep-mask, built from iota comparisons."""
+    m = kv_valid[:, None, :]
+    rel = q_pos[None, :, None] - k_pos[None, None, :]  # (1, Sq, Ck)
+    if causal:
+        m = m & (rel >= 0)
+    if window is not None:
+        m = m & (rel < window)
+    return m
+
+
+def chunked_attention(
+    q: Array,            # (B, Sq, H, dh)
+    k: Array,            # (B, Sk, KV, dh)
+    v: Array,            # (B, Sk, KV, dh)
+    *,
+    q_positions: Array,  # (Sq,)
+    k_positions: Array,  # (Sk,)
+    kv_mask: Array,      # (B, Sk) 1 = valid
+    causal: bool,
+    window: Optional[int] = None,
+    logit_softcap: Optional[float] = None,
+    chunk_size: int = 512,
+    unroll: int = 1,
+) -> Array:
+    """Online-softmax attention over KV chunks; returns (B, Sq, H, dh).
+
+    ``unroll`` is for cost-probe lowering only (roofline.py): the KV
+    chunk scan body must be replicated so cost_analysis counts it."""
+    B, Sq, H, dh = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV  # query groups per kv head
+    scale = dh ** -0.5
+
+    chunk_size = min(chunk_size, max(Sk, 1))  # no padding blow-up at small S
+    pad = (-Sk) % chunk_size
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_mask = jnp.pad(kv_mask, ((0, 0), (0, pad)))
+        k_positions = jnp.pad(k_positions, (0, pad), constant_values=-1)
+    n_chunks = k.shape[1] // chunk_size
+
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Sq, KV, G, dh)
+    k_c = k.reshape(B, n_chunks, chunk_size, KV, dh)
+    v_c = v.reshape(B, n_chunks, chunk_size, KV, dh)
+    m_c = kv_mask.reshape(B, n_chunks, chunk_size)
+    p_c = k_positions.reshape(n_chunks, chunk_size)
+
+    def body(carry, xs):
+        acc, row_max, row_sum = carry
+        kc, vc, mc, pc = xs  # (B,C,KV,dh), (B,C,KV,dh), (B,C), (C,)
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qf.astype(kc.dtype), kc,
+                       preferred_element_type=jnp.float32)
+        if logit_softcap is not None:
+            s = logit_softcap * jnp.tanh(s / logit_softcap)
+        keep = _chunk_mask(q_positions, pc, mc > 0, causal, window)
+        s = jnp.where(keep[:, :, None, None, :], s, NEG_INF)
+        new_max = jnp.maximum(row_max, jnp.max(s, axis=-1))
+        alpha = jnp.exp(row_max - new_max)
+        p = jnp.exp(s - new_max[..., None])
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bqkgc,bckd->bqkgd", p.astype(vc.dtype), vc,
+            preferred_element_type=jnp.float32)
+        row_sum = row_sum * alpha + jnp.sum(p, axis=-1)
+        return (acc, new_max, row_sum), None
+
+    init = (
+        jnp.zeros((B, Sq, KV, G, dh), jnp.float32),
+        jnp.full((B, Sq, KV, G), NEG_INF, jnp.float32),
+        jnp.zeros((B, Sq, KV, G), jnp.float32),
+    )
+    (acc, _, row_sum), _ = jax.lax.scan(
+        body, init,
+        (jnp.moveaxis(k_c, 1, 0), jnp.moveaxis(v_c, 1, 0),
+         jnp.moveaxis(m_c, 1, 0), p_c),
+        unroll=unroll,
+    )
+    out = acc / jnp.maximum(row_sum[..., None], 1e-30)
+    return out.reshape(B, Sq, H, dh).astype(q.dtype)
+
+
+def decode_attention(
+    q: Array,            # (B, 1, H, dh)
+    k_cache: Array,      # (B, S_max, KV, dh)
+    v_cache: Array,      # (B, S_max, KV, dh)
+    *,
+    positions: Array,    # (B,) current write position (# valid tokens - 1)
+    window: Optional[int] = None,
+    logit_softcap: Optional[float] = None,
+) -> Array:
+    """Single-token decode attention against a (possibly huge) cache.
+
+    Scores are (B, H, S_max) — linear in cache length, never quadratic.
+    """
+    B, _, H, dh = q.shape
+    S_max, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = dh ** -0.5
+
+    # keep the (huge) cache in its storage dtype: upcasting would
+    # materialize an fp32 copy of the full cache (2x HBM). The einsum
+    # accumulates in fp32 via preferred_element_type (MXU-native).
+    qf = (q.astype(jnp.float32) * scale).astype(k_cache.dtype)
+    qf = qf.reshape(B, KV, G, dh)
+    s = jnp.einsum("bkgd,bskd->bkgs", qf, k_cache,
+                   preferred_element_type=jnp.float32)
+    if logit_softcap is not None:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+    k_pos = jnp.arange(S_max, dtype=jnp.int32)
+    keep = k_pos[None, :] <= positions[:, None]           # causal / validity
+    if window is not None:
+        keep = keep & (positions[:, None] - k_pos[None, :] < window)
+    s = jnp.where(keep[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, dh).astype(q.dtype)

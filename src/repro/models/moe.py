@@ -1,0 +1,205 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+Token->expert dispatch on TPU cannot use the (T, E, C) one-hot tensor
+of the original GShard formulation at 1M-token batches (it is
+astronomically large). We use the sort-based dropping dispatch that
+production JAX MoE stacks (MaxText, MegaBlocks-style) use:
+
+1. route: top-k softmax gating over expert logits,
+2. sort the T*k (token, expert) assignments by expert id,
+3. compute each assignment's rank within its expert (cumulative
+   position), drop ranks >= capacity C,
+4. scatter surviving tokens into an (E, C, D) buffer,
+5. batched expert FFN via one einsum over the stacked expert weights,
+6. gather back and combine with gate weights.
+
+All steps are dense, static-shape ops (argsort / cumsum / scatter),
+which XLA SPMD can partition: the expert dimension shards over the
+``model`` mesh axis (expert parallelism), tokens over ``data``.
+
+Load-balancing auxiliary loss follows Switch Transformer (eq. 4-6).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def moe_ffn(
+    x: Array,                 # (T, D) flattened tokens
+    router_w: Array,          # (D, E)
+    w_gate: Array,            # (E, D, F)
+    w_up: Array,              # (E, D, F)
+    w_down: Array,            # (E, F, D)
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+) -> Tuple[Array, Array]:
+    """Returns (output (T, D), aux_loss scalar)."""
+    T, D = x.shape
+    E = router_w.shape[1]
+    C = max(1, int(capacity_factor * top_k * T / E))
+
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (T, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)        # (T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # Switch-style load-balance loss: E * sum_e f_e * p_e.
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_idx, E, dtype=jnp.float32), axis=1),
+        axis=0,
+    ) / top_k
+    aux_loss = E * jnp.sum(me * ce)
+
+    # --- sort-based dispatch -------------------------------------------
+    flat_expert = expert_idx.reshape(-1)                       # (T*k,)
+    flat_gate = gate_vals.reshape(-1)
+    flat_token = jnp.repeat(jnp.arange(T, dtype=jnp.int32), top_k)
+
+    order = jnp.argsort(flat_expert)                           # stable
+    s_expert = flat_expert[order]
+    s_token = flat_token[order]
+    s_gate = flat_gate[order]
+
+    # rank of each assignment within its expert
+    counts = jnp.bincount(flat_expert, length=E)               # (E,)
+    starts = jnp.concatenate(
+        [jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(T * top_k, dtype=jnp.int32) - starts[s_expert]
+    keep = rank < C
+
+    # scatter into the (E, C, D) expert buffer; dropped tokens go to a
+    # sacrificial slot (row C) that is sliced off.
+    slot = jnp.where(keep, rank, C)
+    buf = jnp.zeros((E, C + 1, D), x.dtype)
+    buf = buf.at[s_expert, slot].set(jnp.take(x, s_token, axis=0))
+    buf = buf[:, :C]                                           # (E, C, D)
+
+    # --- expert FFN (SwiGLU), one batched einsum over experts ----------
+    g = jnp.einsum("ecd,edf->ecf", buf, w_gate.astype(buf.dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, w_up.astype(buf.dtype))
+    h = jax.nn.silu(g) * u
+    y = jnp.einsum("ecf,efd->ecd", h, w_down.astype(buf.dtype))
+
+    # --- gather back + combine -----------------------------------------
+    y_pad = jnp.concatenate([y, jnp.zeros((E, 1, D), y.dtype)], axis=1)
+    per_assign = y_pad[s_expert, slot]                         # (T*k, D)
+    per_assign = per_assign * s_gate[:, None].astype(y.dtype)
+    out = jax.ops.segment_sum(per_assign, s_token, num_segments=T)
+    return out.astype(x.dtype), aux_loss
+
+
+def moe_ffn_local_experts(
+    x: Array,                 # (T_local, D) this token shard
+    router_w: Array,          # (D, E_global) replicated
+    w_gate: Array,            # (E_local, D, F) this expert shard
+    w_up: Array,
+    w_down: Array,
+    *,
+    top_k: int,
+    capacity_factor: float,
+    expert_axis: str,
+    token_axes: Tuple[str, ...],
+) -> Tuple[Array, Array]:
+    """Expert-parallel MoE body (inside shard_map, DESIGN.md §5).
+
+    Tokens are sharded over ``token_axes`` (data parallel), experts
+    over ``expert_axis`` (the model axis). Routing is computed against
+    the *global* expert set (router replicated); each device dispatches
+    its local tokens to its local experts only (assignments to remote
+    experts contribute zero locally) and the partial outputs are
+    psum-combined over the expert axis — the EP collective. Capacity is
+    per-(token-shard, expert), the standard per-device-capacity
+    semantics of production MoE systems.
+    """
+    T, D = x.shape
+    E_local = w_gate.shape[0]
+    E = router_w.shape[1]
+    shard = jax.lax.axis_index(expert_axis)
+    lo = shard * E_local
+
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)       # (T, k) global
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_idx, E, dtype=jnp.float32), axis=1),
+        axis=0) / top_k
+    aux_loss = E * jnp.sum(me * ce)
+    if token_axes:
+        aux_loss = jax.lax.pmean(aux_loss, token_axes)
+    aux_loss = aux_loss / jax.lax.psum(
+        jnp.ones((), jnp.float32), expert_axis)  # replicated psum later
+
+    C = max(1, int(capacity_factor * top_k * T / E))
+
+    flat_expert = expert_idx.reshape(-1)
+    flat_gate = gate_vals.reshape(-1)
+    flat_token = jnp.repeat(jnp.arange(T, dtype=jnp.int32), top_k)
+
+    local_e = flat_expert - lo
+    is_local = (local_e >= 0) & (local_e < E_local)
+    local_e = jnp.where(is_local, local_e, E_local)  # sink row
+
+    order = jnp.argsort(jnp.where(is_local, flat_expert, E))  # locals first
+    s_e = local_e[order]
+    s_token = flat_token[order]
+    s_gate = jnp.where(is_local, flat_gate, 0.0)[order]
+
+    counts = jnp.bincount(s_e, length=E_local + 1)
+    starts = jnp.concatenate(
+        [jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(T * top_k, dtype=jnp.int32) - starts[s_e]
+    keep = (rank < C) & (s_e < E_local)
+    slot = jnp.where(keep, rank, C)
+    e_safe = jnp.minimum(s_e, E_local - 1)
+    e_scatter = jnp.where(keep, e_safe, 0)
+    slot = jnp.where(keep, slot, C)
+
+    buf = jnp.zeros((E_local, C + 1, D), x.dtype)
+    buf = buf.at[e_scatter, slot].set(jnp.take(x, s_token, axis=0))
+    buf = buf[:, :C]
+
+    g = jnp.einsum("ecd,edf->ecf", buf, w_gate.astype(buf.dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, w_up.astype(buf.dtype))
+    h = jax.nn.silu(g) * u
+    y = jnp.einsum("ecf,efd->ecd", h, w_down.astype(buf.dtype))
+
+    y_pad = jnp.concatenate([y, jnp.zeros((E_local, 1, D), y.dtype)], axis=1)
+    per_assign = y_pad[e_scatter, slot] * s_gate[:, None].astype(y.dtype)
+    per_assign = jnp.where(keep[:, None], per_assign, 0.0)
+    out = jax.ops.segment_sum(per_assign, s_token, num_segments=T)
+    # combine partial expert outputs across the expert shards
+    out = jax.lax.psum(out, expert_axis)
+    aux_loss = jax.lax.psum(aux_loss, expert_axis)
+    return out.astype(x.dtype), aux_loss
+
+
+def init_moe_params(
+    key: jax.Array, n_layers: int, d_model: int, d_ff: int, n_experts: int,
+    dtype=jnp.float32,
+) -> Dict[str, Array]:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    sc_in = d_model ** -0.5
+    sc_ff = d_ff ** -0.5
+    return {
+        "router": (jax.random.normal(k1, (n_layers, d_model, n_experts),
+                                     dtype) * sc_in),
+        "w_gate": (jax.random.normal(
+            k2, (n_layers, n_experts, d_model, d_ff), dtype) * sc_in),
+        "w_up": (jax.random.normal(
+            k3, (n_layers, n_experts, d_model, d_ff), dtype) * sc_in),
+        "w_down": (jax.random.normal(
+            k4, (n_layers, n_experts, d_ff, d_model), dtype) * sc_ff),
+    }

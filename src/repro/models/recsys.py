@@ -1,0 +1,325 @@
+"""RecSys architectures: DLRM, xDeepFM, DIEN, Wide&Deep.
+
+All four share the same skeleton — huge sparse embedding tables
+(resolved via ``repro.sparse.embedding_bag``; JAX has no EmbeddingBag,
+so the gather + segment-reduce IS system code here) feeding a
+feature-interaction op and a small MLP:
+
+* **DLRM** (MLPerf config) — dense features through a bottom MLP, dot
+  interaction between all pairs of (dense, sparse) embeddings, top MLP.
+* **xDeepFM** — Compressed Interaction Network (CIN): outer-product
+  feature maps compressed per layer, plus a plain DNN and linear part.
+* **DIEN** — GRU over the user behaviour sequence, then an
+  attention-gated AUGRU second pass against the target item.
+* **Wide&Deep** — wide linear part over one-hot ids + deep MLP over
+  concatenated embeddings.
+
+The ``retrieval_cand`` shape (score 1M candidates for one query) does
+not run these interaction stacks per candidate — it uses the fused
+streaming top-k scorer (``repro.kernels.topk_score``), the Sparton-idea
+transfer documented in DESIGN.md §4.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RecSysConfig
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+
+def _mlp_init(key, dims: Tuple[int, ...], dtype) -> List[Dict[str, Array]]:
+    keys = jax.random.split(key, len(dims) - 1)
+    return [
+        {
+            "w": jax.random.normal(k, (dims[i], dims[i + 1]), dtype)
+            * dims[i] ** -0.5,
+            "b": jnp.zeros((dims[i + 1],), dtype),
+        }
+        for i, k in enumerate(keys)
+    ]
+
+
+def _mlp_apply(layers, x, *, final_act: bool = False) -> Array:
+    for li, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if li < len(layers) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+ROW_PAD = 4096  # table rows padded for 512-device row sharding
+
+
+def padded_rows(rows: int) -> int:
+    """Rows padded to a 512-divisible multiple (sharding invariant)."""
+    return rows + ((-rows) % ROW_PAD)
+
+
+def _embed_init(key, n_tables: int, rows_per_table: Tuple[int, ...],
+                dim: int, dtype) -> List[Array]:
+    keys = jax.random.split(key, n_tables)
+    return [
+        jax.random.normal(k, (padded_rows(rows), dim), dtype) * dim ** -0.5
+        for k, rows in zip(keys, rows_per_table)
+    ]
+
+
+def _lookup_all(tables: List[Array], idx: Array) -> Array:
+    """idx: (batch, n_fields) -> (batch, n_fields, dim)."""
+    outs = [jnp.take(t, idx[:, f], axis=0) for f, t in enumerate(tables)]
+    return jnp.stack(outs, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# DLRM
+# ---------------------------------------------------------------------------
+
+def init_dlrm(key: jax.Array, cfg: RecSysConfig) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    n_emb = cfg.n_sparse
+    d = cfg.embed_dim
+    # interaction: pairwise dots among (1 bottom-mlp output + n_sparse)
+    n_f = n_emb + 1
+    n_int = n_f * (n_f - 1) // 2
+    top_in = d + n_int
+    return {
+        "tables": _embed_init(k1, n_emb, cfg.table_sizes, d, dtype),
+        "bot_mlp": _mlp_init(k2, cfg.bot_mlp, dtype),
+        "top_mlp": _mlp_init(k3, (top_in,) + cfg.top_mlp, dtype),
+    }
+
+
+def dlrm_forward(params: Params, cfg: RecSysConfig,
+                 dense: Array, sparse_idx: Array) -> Array:
+    """dense: (B, n_dense) f32; sparse_idx: (B, n_sparse) i32 -> (B,) logit."""
+    x_bot = _mlp_apply(params["bot_mlp"], dense, final_act=True)  # (B, d)
+    emb = _lookup_all(params["tables"], sparse_idx)               # (B, F, d)
+    feats = jnp.concatenate([x_bot[:, None, :], emb], axis=1)     # (B, F+1, d)
+    # pairwise dot interaction (upper triangle, no diagonal)
+    inter = jnp.einsum("bfd,bgd->bfg", feats, feats)
+    n_f = feats.shape[1]
+    iu, ju = jnp.triu_indices(n_f, k=1)
+    inter_flat = inter[:, iu, ju]                                  # (B, n_int)
+    top_in = jnp.concatenate([x_bot, inter_flat], axis=-1)
+    return _mlp_apply(params["top_mlp"], top_in)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# xDeepFM
+# ---------------------------------------------------------------------------
+
+def init_xdeepfm(key: jax.Array, cfg: RecSysConfig) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    m = cfg.n_sparse
+    d = cfg.embed_dim
+    cin_w = []
+    h_prev = m
+    kc = jax.random.split(k3, len(cfg.cin_layers))
+    for h_k, kk in zip(cfg.cin_layers, kc):
+        cin_w.append(jax.random.normal(kk, (h_prev * m, h_k), dtype)
+                     * (h_prev * m) ** -0.5)
+        h_prev = h_k
+    dnn_in = m * d
+    cin_out = sum(cfg.cin_layers)
+    return {
+        "tables": _embed_init(k1, m, cfg.table_sizes, d, dtype),
+        "linear": _embed_init(k2, m, cfg.table_sizes, 1, dtype),
+        "cin": cin_w,
+        "dnn": _mlp_init(k4, (dnn_in,) + cfg.mlp, dtype),
+        "out": _mlp_init(k5, (cfg.mlp[-1] + cin_out + 1, 1), dtype),
+    }
+
+
+def xdeepfm_forward(params: Params, cfg: RecSysConfig,
+                    sparse_idx: Array) -> Array:
+    """sparse_idx: (B, m) -> (B,) logit."""
+    B = sparse_idx.shape[0]
+    m, d = cfg.n_sparse, cfg.embed_dim
+    x0 = _lookup_all(params["tables"], sparse_idx)      # (B, m, d)
+    lin = _lookup_all(params["linear"], sparse_idx)     # (B, m, 1)
+    lin_term = jnp.sum(lin, axis=(1, 2), keepdims=False)[:, None]  # (B, 1)
+
+    # CIN: x^k[b, h, d] = sum_{i,j} W^k[i*m+j, h] x^{k-1}[b,i,d] x^0[b,j,d]
+    xs = x0
+    pooled = []
+    for w in params["cin"]:
+        h_prev = xs.shape[1]
+        z = jnp.einsum("bid,bjd->bijd", xs, x0).reshape(B, h_prev * m, d)
+        xs = jnp.einsum("bpd,ph->bhd", z, w)
+        pooled.append(jnp.sum(xs, axis=-1))             # (B, h_k)
+    cin_out = jnp.concatenate(pooled, axis=-1)
+
+    dnn_out = _mlp_apply(params["dnn"], x0.reshape(B, m * d),
+                         final_act=True)
+    final_in = jnp.concatenate([dnn_out, cin_out, lin_term], axis=-1)
+    return _mlp_apply(params["out"], final_in)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# DIEN
+# ---------------------------------------------------------------------------
+
+def _gru_init(key, d_in, d_h, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w": jax.random.normal(k1, (d_in, 3 * d_h), dtype) * d_in ** -0.5,
+        "u": jax.random.normal(k2, (d_h, 3 * d_h), dtype) * d_h ** -0.5,
+        "b": jnp.zeros((3 * d_h,), dtype),
+    }
+
+
+def _gru_cell(p, x, h, update_gate_scale=None):
+    """Standard GRU cell; AUGRU scales the update gate by attention."""
+    gx = x @ p["w"] + p["b"]
+    gh = h @ p["u"]
+    rx, zx, nx = jnp.split(gx, 3, axis=-1)
+    rh, zh, nh = jnp.split(gh, 3, axis=-1)
+    r = jax.nn.sigmoid(rx + rh)
+    z = jax.nn.sigmoid(zx + zh)
+    if update_gate_scale is not None:
+        z = z * update_gate_scale[:, None]
+    n = jnp.tanh(nx + r * nh)
+    return (1 - z) * n + z * h
+
+
+def init_dien(key: jax.Array, cfg: RecSysConfig) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    d = cfg.embed_dim
+    g = cfg.gru_dim
+    # item embedding table (behaviour sequence + target share the table)
+    return {
+        "item_table": jax.random.normal(
+            ks[0], (padded_rows(cfg.table_sizes[0]), d), dtype) * d ** -0.5,
+        "gru1": _gru_init(ks[1], d, g, dtype),
+        "augru": _gru_init(ks[2], g, g, dtype),
+        "att": _mlp_init(ks[3], (2 * g, 36, 1), dtype),
+        "item_proj": _mlp_init(ks[4], (d, g), dtype),
+        "mlp": _mlp_init(ks[5], (2 * g + d,) + cfg.mlp + (1,), dtype),
+    }
+
+
+def dien_forward(params: Params, cfg: RecSysConfig,
+                 hist_idx: Array, target_idx: Array,
+                 unroll: int = 1) -> Array:
+    """hist_idx: (B, T) behaviour ids; target_idx: (B,) -> (B,) logit.
+
+    ``unroll`` replicates the GRU/AUGRU scan bodies for cost-probe
+    lowering (roofline.py)."""
+    B, T = hist_idx.shape
+    g = cfg.gru_dim
+    hist = jnp.take(params["item_table"], hist_idx, axis=0)   # (B, T, d)
+    tgt = jnp.take(params["item_table"], target_idx, axis=0)  # (B, d)
+    tgt_h = _mlp_apply(params["item_proj"], tgt)              # (B, g)
+
+    # interest extraction: GRU over the sequence
+    def step1(h, x):
+        h2 = _gru_cell(params["gru1"], x, h)
+        return h2, h2
+    h0 = jnp.zeros((B, g), hist.dtype)
+    _, seq_h = jax.lax.scan(step1, h0, jnp.moveaxis(hist, 1, 0),
+                            unroll=unroll)
+    seq_h = jnp.moveaxis(seq_h, 0, 1)                         # (B, T, g)
+
+    # interest evolution: attention scores vs target gate AUGRU updates
+    att_in = jnp.concatenate(
+        [seq_h, jnp.broadcast_to(tgt_h[:, None, :], seq_h.shape)], axis=-1)
+    att = _mlp_apply(params["att"], att_in)[..., 0]           # (B, T)
+    att = jax.nn.softmax(att, axis=-1)
+
+    def step2(h, xs):
+        x, a = xs
+        h2 = _gru_cell(params["augru"], x, h, update_gate_scale=1.0 - a)
+        return h2, None
+    final_h, _ = jax.lax.scan(
+        step2, jnp.zeros((B, g), hist.dtype),
+        (jnp.moveaxis(seq_h, 1, 0), jnp.moveaxis(att, 1, 0)),
+        unroll=unroll)
+
+    mlp_in = jnp.concatenate([final_h, tgt_h, tgt], axis=-1)
+    return _mlp_apply(params["mlp"], mlp_in)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Wide & Deep
+# ---------------------------------------------------------------------------
+
+def init_wide_deep(key: jax.Array, cfg: RecSysConfig) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    m, d = cfg.n_sparse, cfg.embed_dim
+    return {
+        "tables": _embed_init(k1, m, cfg.table_sizes, d, dtype),
+        "wide": _embed_init(k2, m, cfg.table_sizes, 1, dtype),
+        "deep": _mlp_init(k3, (m * d,) + cfg.mlp + (1,), dtype),
+    }
+
+
+def wide_deep_forward(params: Params, cfg: RecSysConfig,
+                      sparse_idx: Array) -> Array:
+    B = sparse_idx.shape[0]
+    m, d = cfg.n_sparse, cfg.embed_dim
+    emb = _lookup_all(params["tables"], sparse_idx)    # (B, m, d)
+    wide = _lookup_all(params["wide"], sparse_idx)     # (B, m, 1)
+    deep = _mlp_apply(params["deep"], emb.reshape(B, m * d))
+    return deep[:, 0] + jnp.sum(wide, axis=(1, 2))
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+INIT_FNS = {
+    "dot": init_dlrm,
+    "cin": init_xdeepfm,
+    "augru": init_dien,
+    "concat": init_wide_deep,
+}
+
+
+def init_params(key: jax.Array, cfg: RecSysConfig) -> Params:
+    return INIT_FNS[cfg.interaction](key, cfg)
+
+
+def forward(params: Params, cfg: RecSysConfig, batch: Dict[str, Array],
+            unroll: int = 1) -> Array:
+    """Unified forward: batch dict carries the per-family inputs."""
+    if cfg.interaction == "dot":
+        return dlrm_forward(params, cfg, batch["dense"], batch["sparse_idx"])
+    if cfg.interaction == "cin":
+        return xdeepfm_forward(params, cfg, batch["sparse_idx"])
+    if cfg.interaction == "augru":
+        return dien_forward(params, cfg, batch["hist_idx"],
+                            batch["target_idx"], unroll=unroll)
+    if cfg.interaction == "concat":
+        return wide_deep_forward(params, cfg, batch["sparse_idx"])
+    raise ValueError(f"unknown interaction {cfg.interaction!r}")
+
+
+def user_embedding(params: Params, cfg: RecSysConfig,
+                   batch: Dict[str, Array]) -> Array:
+    """Query-side embedding for the retrieval_cand shape.
+
+    Produces a (B, embed_dim) query vector from the interaction trunk —
+    the candidate scoring itself runs through the fused top-k kernel.
+    """
+    if cfg.interaction == "dot":
+        return _mlp_apply(params["bot_mlp"], batch["dense"], final_act=True)
+    if cfg.interaction == "augru":
+        hist = jnp.take(params["item_table"], batch["hist_idx"], axis=0)
+        return jnp.mean(hist, axis=1)
+    # cin / concat: mean of field embeddings
+    emb = _lookup_all(params["tables"], batch["sparse_idx"])
+    return jnp.mean(emb, axis=1)

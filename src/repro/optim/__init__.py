@@ -1,0 +1,19 @@
+from repro.optim.optimizers import (
+    adagrad,
+    adamw,
+    apply_updates,
+    clip_by_global_norm,
+    sgd_momentum,
+)
+from repro.optim.schedules import (
+    constant_schedule,
+    cosine_schedule,
+    linear_warmup_cosine,
+    linear_warmup_linear_decay,
+)
+from repro.optim.accumulation import GradAccumulator, microbatch_grads
+from repro.optim.compression import (
+    decompress_int8,
+    compress_int8,
+    compressed_allreduce,
+)

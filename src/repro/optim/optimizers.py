@@ -1,0 +1,168 @@
+"""Optimizers as pure (init, update) pairs over pytrees.
+
+No optax dependency — implemented here as system code. AdamW for the
+transformer trunks, Adagrad for recsys embedding tables (the production
+standard: per-row adaptive rates tolerate the power-law id
+distribution), SGD+momentum for GNN baselines.
+
+All states are pytrees that shard exactly like their parameters
+(the SPMD partitioner propagates the param sharding through the
+elementwise update ops), so optimizer state never changes the
+distribution story.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree, Array], Tuple[PyTree, PyTree]]
+    # update(grads, state, params, step) -> (updates, new_state)
+
+
+def _tree_zeros_like(tree: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), tree)
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> Tuple[PyTree, Array]:
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+def adamw(
+    lr: Callable[[Array], Array] | float,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+    max_grad_norm: Optional[float] = 1.0,
+    shard_fn: Optional[Callable[[PyTree], PyTree]] = None,
+) -> Optimizer:
+    """``shard_fn``: optional sharding constraint (ZeRO specs) applied
+    to the fp32 inputs of the update math so every fp32 temp (mhat,
+    vhat, delta) lives at the optimizer sharding, not the param
+    sharding — without it XLA tends to compute the update at the
+    (coarser) param sharding and each temp costs a full param-sized
+    fp32 buffer per model shard."""
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr))
+
+    def init(params):
+        return {
+            "mu": _tree_zeros_like(params),
+            "nu": _tree_zeros_like(params),
+        }
+
+    def update(grads, state, params, step):
+        if max_grad_norm is not None:
+            grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        t = step.astype(jnp.float32) + 1.0
+        lr_t = lr_fn(step)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        p32 = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+        if shard_fn is not None:
+            g32 = shard_fn(g32)
+            p32 = shard_fn(p32)
+
+        def upd(g, m, v, p):
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * g * g
+            mhat = m2 / bc1
+            vhat = v2 / bc2
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            delta = delta + weight_decay * p
+            return (-lr_t * delta), m2, v2
+
+        out = jax.tree.map(upd, g32, state["mu"], state["nu"], p32)
+        updates = jax.tree.map(lambda o: o[0], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree.map(lambda o: o[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        nu = jax.tree.map(lambda o: o[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"mu": mu, "nu": nu}
+
+    return Optimizer(init, update)
+
+
+def adagrad(
+    lr: Callable[[Array], Array] | float,
+    *,
+    eps: float = 1e-10,
+    initial_accumulator: float = 0.1,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr))
+
+    def init(params):
+        return {
+            "acc": jax.tree.map(
+                lambda p: jnp.full_like(
+                    p, initial_accumulator, dtype=jnp.float32),
+                params)
+        }
+
+    def update(grads, state, params, step):
+        lr_t = lr_fn(step)
+
+        def upd(g, a, p):
+            g = g.astype(jnp.float32)
+            a2 = a + g * g
+            return (-lr_t * g / (jnp.sqrt(a2) + eps)).astype(p.dtype), a2
+
+        out = jax.tree.map(upd, grads, state["acc"], params)
+        updates = jax.tree.map(lambda o: o[0], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        acc = jax.tree.map(lambda o: o[1], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"acc": acc}
+
+    return Optimizer(init, update)
+
+
+def sgd_momentum(
+    lr: Callable[[Array], Array] | float,
+    *,
+    momentum: float = 0.9,
+    nesterov: bool = False,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr))
+
+    def init(params):
+        return {"v": _tree_zeros_like(params)}
+
+    def update(grads, state, params, step):
+        lr_t = lr_fn(step)
+
+        def upd(g, v, p):
+            g = g.astype(jnp.float32)
+            v2 = momentum * v + g
+            d = g + momentum * v2 if nesterov else v2
+            return (-lr_t * d).astype(p.dtype), v2
+
+        out = jax.tree.map(upd, grads, state["v"], params)
+        updates = jax.tree.map(lambda o: o[0], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"v": v}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)

@@ -1,0 +1,43 @@
+"""Learning-rate schedules (step -> lr), pure jnp so they jit."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(peak_lr: float, total_steps: int, *,
+                    final_fraction: float = 0.1):
+    def fn(step):
+        t = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return peak_lr * (final_fraction + (1 - final_fraction) * cos)
+    return fn
+
+
+def linear_warmup_cosine(peak_lr: float, warmup_steps: int,
+                         total_steps: int, *, final_fraction: float = 0.0):
+    def fn(step):
+        s = step.astype(jnp.float32) + 1.0  # step 0 must not have lr=0
+        warm = peak_lr * s / jnp.maximum(warmup_steps, 1)
+        t = jnp.clip((s - warmup_steps) /
+                     jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (final_fraction
+                         + (1 - final_fraction) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(s < warmup_steps, warm, cos)
+    return fn
+
+
+def linear_warmup_linear_decay(peak_lr: float, warmup_steps: int,
+                               total_steps: int):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / jnp.maximum(warmup_steps, 1)
+        decay = peak_lr * jnp.clip(
+            (total_steps - s) / jnp.maximum(total_steps - warmup_steps, 1),
+            0.0, 1.0)
+        return jnp.where(s < warmup_steps, warm, decay)
+    return fn

@@ -1,0 +1,7 @@
+from repro.runtime.fault_tolerance import (
+    ElasticMeshManager,
+    FaultTolerantRunner,
+    RunnerConfig,
+    StragglerPolicy,
+)
+from repro.runtime.serving import ServingLoop, Request, BatchedEncoder

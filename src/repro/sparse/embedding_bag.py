@@ -1,0 +1,60 @@
+"""EmbeddingBag in JAX — gather + segment-reduce.
+
+JAX has no ``nn.EmbeddingBag`` and no CSR sparse; multi-hot categorical
+lookups are expressed as ``jnp.take`` over a dense table followed by
+``jax.ops.segment_sum`` over bag ids — this IS the recsys hot path and
+is built here as real system code (not a stub), per the assignment.
+
+Two layouts:
+* fixed single-hot: ``(batch, n_fields)`` index matrix, one id per
+  field (DLRM Criteo layout) — a plain gather.
+* ragged multi-hot: flat ``values`` + ``bag_ids`` (offsets-style),
+  reduced per bag with sum/mean/max.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sparse.segment import segment_max, segment_mean, segment_sum
+
+Array = jax.Array
+
+
+def embedding_lookup(table: Array, idx: Array) -> Array:
+    """Single-hot lookup: (..., ) int32 -> (..., dim)."""
+    return jnp.take(table, idx, axis=0)
+
+
+def embedding_bag(
+    table: Array,          # (rows, dim)
+    values: Array,         # (nnz,) int32 flat indices
+    bag_ids: Array,        # (nnz,) int32 which bag each value belongs to
+    n_bags: int,
+    *,
+    combiner: str = "sum",
+    weights: Optional[Array] = None,  # (nnz,) per-sample weights
+) -> Array:
+    emb = jnp.take(table, values, axis=0)      # (nnz, dim)
+    if weights is not None:
+        emb = emb * weights[:, None]
+    if combiner == "sum":
+        return segment_sum(emb, bag_ids, n_bags)
+    if combiner == "mean":
+        return segment_mean(emb, bag_ids, n_bags)
+    if combiner == "max":
+        return segment_max(emb, bag_ids, n_bags)
+    raise ValueError(f"unknown combiner {combiner!r}")
+
+
+def multi_table_lookup(tables, idx: Array) -> Array:
+    """DLRM-style: one id per field, one table per field.
+
+    tables: list of (rows_f, dim); idx: (batch, n_fields).
+    Returns (batch, n_fields, dim).
+    """
+    outs = [jnp.take(t, idx[:, f], axis=0) for f, t in enumerate(tables)]
+    return jnp.stack(outs, axis=1)

@@ -1,0 +1,85 @@
+"""Checkpoint store: atomic writes, roundtrip, async, resume, GC."""
+
+import os
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import (AsyncCheckpointer, latest_step,
+                                    load_checkpoint, save_checkpoint)
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (4, 3)),
+                   "layers": [jnp.ones((2,)), jnp.zeros((3,))]},
+        "opt": {"mu": {"w": jnp.zeros((4, 3))}},
+        "step": jnp.array(7, jnp.int32),
+    }
+
+
+def test_roundtrip(tmp_path):
+    state = _state()
+    path = save_checkpoint(str(tmp_path), 7, state)
+    assert path and os.path.isdir(path)
+    template = jax.tree.map(jnp.zeros_like, state)
+    restored, step = load_checkpoint(str(tmp_path), template)
+    assert step == 7
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(np.asarray(a),
+                                                np.asarray(b)),
+        state, restored)
+
+
+def test_latest_step_and_gc(tmp_path):
+    state = _state()
+    for s in (10, 20, 30, 40):
+        save_checkpoint(str(tmp_path), s, state, keep=2)
+    assert latest_step(str(tmp_path)) == 40
+    # keep=2: only the last two survive
+    steps = sorted(int(d[5:]) for d in os.listdir(tmp_path)
+                   if d.startswith("step_"))
+    assert steps == [30, 40]
+
+
+def test_tmp_dirs_are_not_trusted(tmp_path):
+    state = _state()
+    save_checkpoint(str(tmp_path), 5, state)
+    # a crashed writer leaves a .tmp dir; resume must ignore it
+    os.makedirs(tmp_path / "step_000000099.tmp")
+    assert latest_step(str(tmp_path)) == 5
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"w": jnp.zeros((3,))})
+    with pytest.raises(ValueError):
+        load_checkpoint(str(tmp_path), {"w": jnp.zeros((4,))})
+
+
+def test_missing_leaf_rejected(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"w": jnp.zeros((3,))})
+    with pytest.raises(KeyError):
+        load_checkpoint(str(tmp_path), {"w": jnp.zeros((3,)),
+                                        "extra": jnp.zeros((2,))})
+
+
+def test_non_writer_process_skips(tmp_path):
+    out = save_checkpoint(str(tmp_path), 1, _state(), process_index=1)
+    assert out is None
+    assert latest_step(str(tmp_path)) is None
+
+
+def test_async_checkpointer(tmp_path):
+    ckpt = AsyncCheckpointer(str(tmp_path), keep=5)
+    state = _state()
+    for s in (1, 2, 3):
+        ckpt.save(s, state)
+    ckpt.close()
+    assert latest_step(str(tmp_path)) == 3
+    template = jax.tree.map(jnp.zeros_like, state)
+    restored, step = load_checkpoint(str(tmp_path), template)
+    assert step == 3

@@ -1,0 +1,173 @@
+"""Sparton Pallas kernel vs pure-jnp oracle: shape/dtype sweeps +
+hypothesis property tests (interpret mode on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.ops import sparton_head, sparton_lm_head_kernel
+from repro.kernels.ref import sparton_backward_ref, sparton_forward_ref
+from repro.kernels.sparton import sparton_forward
+from repro.kernels.sparton_bwd import sparton_backward
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _inputs(B, S, D, V, dtype=jnp.float32, seed=0, mask_p=0.2):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    H = jax.random.normal(ks[0], (B, S, D), dtype)
+    E = jax.random.normal(ks[1], (V, D), dtype) * 0.2
+    b = jax.random.normal(ks[2], (V,), jnp.float32) * 0.2
+    mask = (jax.random.uniform(ks[3], (B, S)) > mask_p).astype(jnp.int32)
+    # guarantee >= 1 valid position per row
+    mask = mask.at[:, 0].set(1)
+    return H, E, b, mask
+
+
+SHAPES = [
+    # (B, S, D, V, blocks)
+    (1, 16, 8, 16, (1, 8, 8)),
+    (4, 96, 64, 200, (2, 32, 64)),
+    (3, 33, 24, 100, (2, 32, 64)),     # non-divisible everything
+    (8, 128, 128, 256, (8, 128, 128)),  # exact MXU-aligned tiles
+    (2, 256, 32, 512, (2, 64, 256)),
+]
+
+
+@pytest.mark.parametrize("B,S,D,V,blocks", SHAPES)
+def test_forward_matches_oracle(B, S, D, V, blocks):
+    H, E, b, mask = _inputs(B, S, D, V)
+    bb, bs, bv = blocks
+    y, i_max = sparton_forward(H, E, b, mask, block_b=bb, block_s=bs,
+                               block_v=bv, interpret=True)
+    y_ref, i_ref = sparton_forward_ref(H, E, b, mask)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(i_max), np.asarray(i_ref))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_forward_dtypes(dtype):
+    H, E, b, mask = _inputs(2, 64, 32, 128, dtype=dtype)
+    y, i_max = sparton_forward(H, E, b, mask, block_b=2, block_s=32,
+                               block_v=64, interpret=True)
+    y_ref, i_ref = sparton_forward_ref(H, E, b, mask)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_forward_softcap():
+    H, E, b, mask = _inputs(2, 32, 16, 64)
+    y, _ = sparton_forward(H, E, b, mask, block_b=2, block_s=16,
+                           block_v=32, softcap=5.0, interpret=True)
+    y_ref, _ = sparton_forward_ref(H, E, b, mask, softcap=5.0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-5)
+    # capped: f(max) <= log1p(cap)
+    assert float(jnp.max(y)) <= np.log1p(5.0) + 1e-6
+
+
+def test_fully_masked_row_yields_zero():
+    H, E, b, _ = _inputs(2, 16, 8, 32)
+    mask = jnp.zeros((2, 16), jnp.int32).at[0, :].set(1)
+    y, _ = sparton_forward(H, E, b, mask, block_b=2, block_s=16,
+                           block_v=32, interpret=True)
+    # masked row: max over -inf -> relu clamps to 0 -> log1p(0) = 0
+    assert float(jnp.max(jnp.abs(y[1]))) == 0.0
+
+
+@pytest.mark.parametrize("B,S,D,V,blocks", SHAPES[:4])
+def test_backward_matches_oracle(B, S, D, V, blocks):
+    H, E, b, mask = _inputs(B, S, D, V, seed=3)
+    bb, bs, bv = blocks
+    y_ref, i_ref = sparton_forward_ref(H, E, b, mask)
+    g = jax.random.normal(jax.random.PRNGKey(9), (B, V))
+    g = jnp.where(y_ref > 0, g * jnp.exp(-y_ref), 0.0)
+    dH, dE = sparton_backward(g, i_ref, H, E, block_b=bb, block_s=bs,
+                              block_v=bv, interpret=True)
+    dH_ref, dE_ref = sparton_backward_ref(g, i_ref, H, E)
+    np.testing.assert_allclose(np.asarray(dH), np.asarray(dH_ref),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(dE), np.asarray(dE_ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_custom_vjp_grads_match_autodiff_oracle():
+    B, S, D, V = 3, 48, 16, 96
+    H, E, b, mask = _inputs(B, S, D, V, seed=7)
+
+    def loss_kernel(H, E, b):
+        y = sparton_head(H, E, b, mask, block_b=1, block_s=16,
+                         block_v=32, interpret=True)
+        return jnp.sum(jnp.sin(y))
+
+    def loss_ref(H, E, b):
+        y, _ = sparton_forward_ref(H, E, b, mask)
+        return jnp.sum(jnp.sin(y))
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(H, E, b)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(H, E, b)
+    for a, c in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                   atol=2e-4, rtol=2e-4)
+
+
+def test_custom_vjp_grads_with_softcap():
+    B, S, D, V = 2, 32, 8, 64
+    H, E, b, mask = _inputs(B, S, D, V, seed=11)
+
+    def loss_kernel(H):
+        y = sparton_head(H, E, b, mask, block_b=2, block_s=16,
+                         block_v=32, softcap=4.0, interpret=True)
+        return jnp.sum(y * y)
+
+    def loss_ref(H):
+        y, _ = sparton_forward_ref(H, E, b, mask, softcap=4.0)
+        return jnp.sum(y * y)
+
+    np.testing.assert_allclose(
+        np.asarray(jax.grad(loss_kernel)(H)),
+        np.asarray(jax.grad(loss_ref)(H)), atol=2e-4, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# property-based tests (hypothesis)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    B=st.integers(1, 5), S=st.integers(1, 40), D=st.integers(1, 24),
+    V=st.integers(1, 70), seed=st.integers(0, 2**16),
+)
+def test_property_forward_equals_oracle(B, S, D, V, seed):
+    H, E, b, mask = _inputs(B, S, D, V, seed=seed)
+    y, _ = sparton_forward(H, E, b, mask, block_b=2, block_s=16,
+                           block_v=32, interpret=True)
+    y_ref, _ = sparton_forward_ref(H, E, b, mask)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_property_monotonicity_reordering(seed):
+    """The paper's core identity: max_s f(l) == f(max_s l)."""
+    H, E, b, mask = _inputs(2, 24, 8, 40, seed=seed)
+    logits = jnp.einsum("bsd,vd->bsv", H, E) + b
+    keep = mask.astype(bool)[:, :, None]
+    f = lambda x: jnp.log1p(jax.nn.relu(x))
+    lhs = jnp.max(jnp.where(keep, f(logits), 0.0), axis=1)
+    rhs = f(jnp.max(jnp.where(keep, logits, -1e30), axis=1))
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_property_output_nonnegative_and_sparse_friendly(seed):
+    H, E, b, mask = _inputs(2, 16, 8, 32, seed=seed)
+    y, _ = sparton_forward(H, E, b, mask, block_b=2, block_s=16,
+                           block_v=32, interpret=True)
+    assert float(jnp.min(y)) >= 0.0  # log1p(relu(.)) >= 0 always

@@ -1,0 +1,136 @@
+"""Optimizers, schedules, accumulation, compression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim.accumulation import GradAccumulator, microbatch_grads
+from repro.optim.compression import compress_int8, compress_tree, \
+    decompress_int8
+from repro.optim.optimizers import (adagrad, adamw, apply_updates,
+                                    clip_by_global_norm, sgd_momentum)
+from repro.optim.schedules import (constant_schedule, cosine_schedule,
+                                   linear_warmup_cosine,
+                                   linear_warmup_linear_decay)
+
+
+def _quadratic_params():
+    return {"w": jnp.array([3.0, -2.0]), "b": jnp.array(1.5)}
+
+
+def _quadratic_grads(params):
+    return jax.grad(
+        lambda p: jnp.sum(p["w"] ** 2) + p["b"] ** 2)(params)
+
+
+@pytest.mark.parametrize("opt_fn", [
+    lambda: adamw(0.1, weight_decay=0.0, max_grad_norm=None),
+    lambda: adagrad(0.5),
+    lambda: sgd_momentum(0.05),
+])
+def test_optimizers_descend_quadratic(opt_fn):
+    opt = opt_fn()
+    params = _quadratic_params()
+    state = opt.init(params)
+    loss0 = float(jnp.sum(params["w"] ** 2) + params["b"] ** 2)
+    step = jnp.zeros((), jnp.int32)
+    for i in range(60):
+        grads = _quadratic_grads(params)
+        updates, state = opt.update(grads, state, params, step + i)
+        params = apply_updates(params, updates)
+    loss1 = float(jnp.sum(params["w"] ** 2) + params["b"] ** 2)
+    assert loss1 < loss0 * 0.05
+
+
+def test_adamw_first_step_is_lr_sized():
+    """After bias correction the first AdamW step is ~lr * sign(g)."""
+    opt = adamw(0.1, weight_decay=0.0, max_grad_norm=None)
+    params = {"w": jnp.array([1.0])}
+    state = opt.init(params)
+    updates, _ = opt.update({"w": jnp.array([123.0])}, state, params,
+                            jnp.zeros((), jnp.int32))
+    np.testing.assert_allclose(np.asarray(updates["w"]), [-0.1], atol=1e-5)
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.array([3.0, 4.0])}  # norm 5
+    clipped, gn = clip_by_global_norm(grads, 1.0)
+    assert abs(float(gn) - 5.0) < 1e-5
+    np.testing.assert_allclose(np.asarray(clipped["a"]), [0.6, 0.8],
+                               atol=1e-6)
+    # under the limit: untouched
+    clipped2, _ = clip_by_global_norm(grads, 10.0)
+    np.testing.assert_allclose(np.asarray(clipped2["a"]), [3.0, 4.0])
+
+
+def test_schedules():
+    s = constant_schedule(0.1)
+    assert float(s(jnp.array(100))) == pytest.approx(0.1)
+    c = cosine_schedule(1.0, 100, final_fraction=0.0)
+    assert float(c(jnp.array(0))) == pytest.approx(1.0)
+    assert float(c(jnp.array(100))) == pytest.approx(0.0, abs=1e-6)
+    w = linear_warmup_cosine(1.0, 10, 100)
+    # warmup counts from step+1 so step 0 is never lr=0
+    assert float(w(jnp.array(4))) == pytest.approx(0.5)
+    assert float(w(jnp.array(0))) == pytest.approx(0.1)
+    assert float(w(jnp.array(10))) == pytest.approx(1.0, abs=1e-2)
+    d = linear_warmup_linear_decay(1.0, 10, 110)
+    assert float(d(jnp.array(60))) == pytest.approx(0.5)
+
+
+def test_microbatch_grads_equals_full_batch():
+    params = {"w": jnp.ones((4, 3))}
+    batch = {"x": jax.random.normal(jax.random.PRNGKey(0), (8, 4)),
+             "y": jax.random.normal(jax.random.PRNGKey(1), (8, 3))}
+
+    def loss_and_grad(p, b):
+        def loss(p):
+            pred = b["x"] @ p["w"]
+            return jnp.mean((pred - b["y"]) ** 2)
+        l, g = jax.value_and_grad(loss)(p)
+        return l, g
+
+    l_full, g_full = loss_and_grad(params, batch)
+    l_micro, g_micro = microbatch_grads(loss_and_grad, params, batch,
+                                        n_micro=4)
+    np.testing.assert_allclose(float(l_full), float(l_micro), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(g_full["w"]),
+                               np.asarray(g_micro["w"]), atol=1e-6)
+
+
+def test_grad_accumulator_renormalizes():
+    acc = GradAccumulator()
+    acc.add({"w": jnp.array(2.0)})
+    acc.add({"w": jnp.array(4.0)})
+    out = acc.mean_and_reset()
+    assert float(out["w"]) == pytest.approx(3.0)
+    assert acc.count == 0
+
+
+def test_int8_roundtrip_error_bounded():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1000,)) * 3
+    q, s = compress_int8(x)
+    assert q.dtype == jnp.int8
+    err = jnp.max(jnp.abs(decompress_int8(q, s) - x))
+    assert float(err) <= float(s) * 0.5 + 1e-6
+
+
+def test_error_feedback_accumulates_residual():
+    grads = {"w": jnp.array([0.001, 1.0])}
+    qs, ss, rs = compress_tree(grads, None)
+    # small value quantizes to 0; its full value must land in residual
+    deq = decompress_int8(qs["w"], ss["w"])
+    np.testing.assert_allclose(np.asarray(rs["w"]),
+                               np.asarray(grads["w"] - deq), atol=1e-7)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16), scale=st.floats(1e-3, 1e3))
+def test_property_compression_relative_error(seed, scale):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (256,)) * scale
+    q, s = compress_int8(x)
+    rel = float(jnp.max(jnp.abs(decompress_int8(q, s) - x))) / max(
+        float(jnp.max(jnp.abs(x))), 1e-12)
+    assert rel <= 1.0 / 127 + 1e-6

@@ -1,0 +1,132 @@
+"""Sparse substrate: segment ops, EmbeddingBag, neighbor sampler."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.synthetic import make_synthetic_graph
+from repro.sparse.embedding_bag import embedding_bag, multi_table_lookup
+from repro.sparse.sampler import CSRGraph, fanout_budget, sample_subgraph
+from repro.sparse.segment import (gather_scatter, segment_max,
+                                  segment_max_with_argmax, segment_mean,
+                                  segment_softmax, segment_sum)
+
+
+def test_segment_sum_vs_numpy():
+    data = np.random.default_rng(0).normal(size=(20, 4)).astype(np.float32)
+    ids = np.random.default_rng(1).integers(0, 5, size=20)
+    out = segment_sum(jnp.asarray(data), jnp.asarray(ids), 5)
+    ref = np.zeros((5, 4), np.float32)
+    np.add.at(ref, ids, data)
+    np.testing.assert_allclose(np.asarray(out), ref, atol=1e-5)
+
+
+def test_segment_mean_empty_segment_is_zero():
+    data = jnp.ones((4, 2))
+    ids = jnp.array([0, 0, 2, 2])
+    out = segment_mean(data, ids, 4)
+    np.testing.assert_allclose(np.asarray(out[1]), 0.0)
+    np.testing.assert_allclose(np.asarray(out[3]), 0.0)
+    np.testing.assert_allclose(np.asarray(out[0]), 1.0)
+
+
+def test_segment_softmax_normalizes():
+    scores = jnp.asarray(np.random.default_rng(2).normal(size=30),
+                         dtype=jnp.float32)
+    ids = jnp.asarray(np.random.default_rng(3).integers(0, 6, size=30))
+    p = segment_softmax(scores, ids, 6)
+    sums = segment_sum(p, ids, 6)
+    present = np.asarray(segment_sum(jnp.ones(30), ids, 6)) > 0
+    np.testing.assert_allclose(np.asarray(sums)[present], 1.0, atol=1e-5)
+
+
+def test_segment_max_with_argmax_routes_to_first_max():
+    data = jnp.array([1.0, 5.0, 5.0, 2.0, 7.0])
+    ids = jnp.array([0, 0, 0, 1, 1])
+    m, arg = segment_max_with_argmax(data, ids, 2)
+    assert float(m[0]) == 5.0 and int(arg[0]) == 1  # first occurrence
+    assert float(m[1]) == 7.0 and int(arg[1]) == 4
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 40), s=st.integers(1, 8),
+       seed=st.integers(0, 2**16))
+def test_property_segment_sum_total_preserved(n, s, seed):
+    rng = np.random.default_rng(seed)
+    data = rng.normal(size=(n, 3)).astype(np.float32)
+    ids = rng.integers(0, s, size=n)
+    out = segment_sum(jnp.asarray(data), jnp.asarray(ids), s)
+    np.testing.assert_allclose(float(jnp.sum(out)), float(data.sum()),
+                               atol=1e-3)
+
+
+def test_embedding_bag_combiners():
+    table = jnp.asarray(np.random.default_rng(0).normal(size=(10, 4)),
+                        dtype=jnp.float32)
+    values = jnp.array([1, 2, 3, 7, 7])
+    bags = jnp.array([0, 0, 1, 1, 1])
+    out_sum = embedding_bag(table, values, bags, 3, combiner="sum")
+    ref0 = np.asarray(table)[1] + np.asarray(table)[2]
+    np.testing.assert_allclose(np.asarray(out_sum[0]), ref0, atol=1e-6)
+    out_mean = embedding_bag(table, values, bags, 3, combiner="mean")
+    np.testing.assert_allclose(np.asarray(out_mean[0]), ref0 / 2, atol=1e-6)
+    out_max = embedding_bag(table, values, bags, 3, combiner="max")
+    np.testing.assert_allclose(
+        np.asarray(out_max[0]),
+        np.maximum(np.asarray(table)[1], np.asarray(table)[2]), atol=1e-6)
+    # empty bag 2 must be zeros for sum
+    np.testing.assert_allclose(np.asarray(out_sum[2]), 0.0)
+
+
+def test_embedding_bag_weighted():
+    table = jnp.eye(4)
+    out = embedding_bag(table, jnp.array([0, 1]), jnp.array([0, 0]), 1,
+                        weights=jnp.array([2.0, 3.0]))
+    np.testing.assert_allclose(np.asarray(out[0]), [2, 3, 0, 0])
+
+
+def test_multi_table_lookup():
+    tables = [jnp.arange(8.0).reshape(4, 2) * (f + 1) for f in range(3)]
+    idx = jnp.array([[0, 1, 2], [3, 0, 1]])
+    out = multi_table_lookup(tables, idx)
+    assert out.shape == (2, 3, 2)
+    np.testing.assert_allclose(np.asarray(out[0, 1]),
+                               np.asarray(tables[1][1]))
+
+
+def test_csr_graph_and_sampler():
+    src, dst = make_synthetic_graph(100, 1000, seed=4)
+    g = CSRGraph.from_edges(src, dst, 100)
+    assert g.n_nodes == 100
+    # neighbors of node = its out-edges
+    for node in [0, 5, 50]:
+        nbrs = set(g.neighbors(node).tolist())
+        expect = set(dst[src == node].tolist())
+        assert nbrs == expect
+
+    rng = np.random.default_rng(0)
+    seeds = np.array([1, 2, 3, 4])
+    total, per_hop = fanout_budget(4, (3, 2))
+    sub = sample_subgraph(g, seeds, (3, 2), rng=rng,
+                          pad_nodes=total, pad_edges_per_hop=per_hop)
+    assert sub.nodes.shape[0] == total
+    assert len(sub.blocks) == 2
+    for hop, blk in enumerate(sub.blocks):
+        assert blk.src.shape[0] == per_hop[hop]
+        assert blk.mask.sum() == blk.n_edges
+        # all real edges point into interned nodes
+        assert (blk.src[:blk.n_edges] < sub.n_nodes).all()
+        assert (blk.dst[:blk.n_edges] < sub.n_nodes).all()
+    # seeds come first in the flat node array
+    np.testing.assert_array_equal(sub.nodes[:4], seeds)
+
+
+def test_gather_scatter_one_hop():
+    feats = jnp.eye(4)
+    src = jnp.array([0, 1, 2])
+    dst = jnp.array([1, 2, 3])
+    out = gather_scatter(feats, src, dst, 4, reduce="sum")
+    np.testing.assert_allclose(np.asarray(out[1]), np.asarray(feats[0]))
+    np.testing.assert_allclose(np.asarray(out[0]), 0.0)
