@@ -1,14 +1,26 @@
 """Paper Table 1: runtime + peak memory of backbone vs backbone+head,
-for eager-equivalent (naive), tiled, and Sparton heads.
+for eager-equivalent (naive), tiled, Sparton (pure-JAX scan) and the
+Pallas Sparton kernel.
 
 The paper measures SPLADE-V3 (bert-base, |V|=30522) at B=320, S=512 on
 an H100. On this CPU container we keep the architecture shape faithful
 but scale B/S down (CPU-feasible) — the *comparison structure*
-(naive vs tiled vs sparton; fwd vs fwd+bwd; time and peak memory) is
-the paper's; columns scale with the workload.
+(naive vs tiled vs sparton vs sparton-kernel; fwd vs fwd+bwd; time and
+peak memory) is the paper's; columns scale with the workload.
+
+``--json PATH`` (or ``run(json_path=...)``) additionally emits
+``BENCH_kernels.json`` — the per-head median ms + peak bytes record CI
+tracks from PR 1 onward. ``--smoke`` (or env ``BENCH_SMOKE=1``) shrinks
+the workload for CI latency; the kernel runs through the Pallas
+interpreter off-TPU either way, so smoke timings order implementations
+rather than predict hardware.
 """
 
 from __future__ import annotations
+
+import argparse
+import json
+import os
 
 import jax
 import jax.numpy as jnp
@@ -17,26 +29,52 @@ from benchmarks._common import compiled_peak_bytes, csv_print, time_fn
 from repro.configs import get_config
 from repro.core.lm_head import (lm_head_naive, lm_head_sparton,
                                 lm_head_tiled)
-from repro.launch.steps import init_state
+from repro.kernels import autotune
+from repro.kernels.ops import sparton_head
 from repro.models import transformer as tfm
 
 B, S = 16, 128  # CPU-scaled stand-ins for the paper's 320 x 512
 
 
-def run(csv: bool = True):
+def _head_impls(blocks, interpret):
+    bb, bs, bv = blocks
+
+    def kernel_head(H, E, b, mask, **_):
+        return sparton_head(H, E, b, mask, block_b=bb, block_s=bs,
+                            block_v=bv, interpret=interpret)
+
+    return [
+        ("naive", lm_head_naive, {}),
+        ("tiled", lm_head_tiled, {"vocab_tile": 4096}),
+        ("sparton-jax", lm_head_sparton, {"vocab_tile": 4096}),
+        ("sparton-kernel", kernel_head, {}),
+    ]
+
+
+def run(csv: bool = True, smoke: bool = False, json_path: str = None):
+    smoke = smoke or os.environ.get("BENCH_SMOKE") == "1"
+    b_sz, s_len = (4, 64) if smoke else (B, S)
+    vocab = 4096 if smoke else 30522
+    iters = 3 if smoke else 10
+
     cfg = get_config("splade_bert").SMOKE
     # widen the smoke config toward bert-base proportions but CPU-sized
     import dataclasses
-    cfg = dataclasses.replace(cfg, n_layers=4, d_model=256, n_heads=8,
-                              n_kv_heads=8, d_head=32, d_ff=1024,
-                              vocab_size=30522)
-    state, _ = init_state("splade_bert", jax.random.PRNGKey(0), smoke=True)
-    # re-init at the widened config
+    if smoke:
+        cfg = dataclasses.replace(cfg, vocab_size=vocab)
+    else:
+        cfg = dataclasses.replace(cfg, n_layers=4, d_model=256, n_heads=8,
+                                  n_kv_heads=8, d_head=32, d_ff=1024,
+                                  vocab_size=vocab)
     params = tfm.init_params(jax.random.PRNGKey(0), cfg)
 
-    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 1,
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b_sz, s_len), 1,
                               cfg.vocab_size)
-    mask = jnp.ones((B, S), jnp.int32)
+    mask = jnp.ones((b_sz, s_len), jnp.int32)
+
+    interpret = jax.default_backend() != "tpu"
+    blocks = autotune.get_blocks(b_sz, s_len, cfg.d_model, cfg.vocab_size)
+    heads = _head_impls(blocks, interpret)
 
     def backbone(params, toks, mask):
         H, _ = tfm.forward_hidden(params, cfg, toks, mask)
@@ -57,45 +95,61 @@ def run(csv: bool = True):
             return jnp.sum(y * y) * 1e-3
         return jax.grad(loss)
 
-    heads = [
-        ("naive", lm_head_naive, {}),
-        ("tiled", lm_head_tiled, {"vocab_tile": 4096}),
-        ("sparton", lm_head_sparton, {"vocab_tile": 4096}),
-    ]
-
     abstract = (jax.eval_shape(lambda: params),
                 jax.ShapeDtypeStruct(toks.shape, toks.dtype),
                 jax.ShapeDtypeStruct(mask.shape, mask.dtype))
 
     rows = []
+    record = {
+        "shape": {"B": b_sz, "S": s_len, "D": cfg.d_model,
+                  "V": cfg.vocab_size},
+        "blocks": list(blocks),
+        "backend": jax.default_backend(),
+        "interpret": interpret,
+        "heads": {},
+    }
     bb_fwd = jax.jit(backbone)
-    t = time_fn(bb_fwd, params, toks, mask)
+    t = time_fn(bb_fwd, params, toks, mask, iters=iters)
     m = compiled_peak_bytes(backbone, *abstract)
     rows.append(("fwd", "backbone", round(t, 1), round(m / 2**20, 1)))
-    bb_bwd = jax.jit(jax.grad(
-        lambda p, t_, m_: jnp.sum(backbone(p, t_, m_) ** 2) * 1e-3))
-    t = time_fn(bb_bwd, params, toks, mask)
-    m = compiled_peak_bytes(
-        jax.grad(lambda p, t_, m_: jnp.sum(backbone(p, t_, m_) ** 2) * 1e-3),
-        *abstract)
+    bb_loss = jax.grad(
+        lambda p, t_, m_: jnp.sum(backbone(p, t_, m_) ** 2) * 1e-3)
+    t = time_fn(jax.jit(bb_loss), params, toks, mask, iters=iters)
+    m = compiled_peak_bytes(bb_loss, *abstract)
     rows.append(("fwd+bwd", "backbone", round(t, 1), round(m / 2**20, 1)))
 
     for name, fn, kw in heads:
         f = full(fn, kw)
-        t = time_fn(jax.jit(f), params, toks, mask)
+        t = time_fn(jax.jit(f), params, toks, mask, iters=iters)
         m = compiled_peak_bytes(f, *abstract)
         rows.append(("fwd", f"+{name}", round(t, 1), round(m / 2**20, 1)))
+        record["heads"].setdefault(name, {})["fwd"] = {
+            "median_ms": round(t, 3),
+            "peak_bytes": None if m != m else int(m)}
     for name, fn, kw in heads:
         g = train(fn, kw)
-        t = time_fn(jax.jit(g), params, toks, mask)
+        t = time_fn(jax.jit(g), params, toks, mask, iters=iters)
         m = compiled_peak_bytes(g, *abstract)
         rows.append(("fwd+bwd", f"+{name}", round(t, 1),
                      round(m / 2**20, 1)))
+        record["heads"].setdefault(name, {})["fwd_bwd"] = {
+            "median_ms": round(t, 3),
+            "peak_bytes": None if m != m else int(m)}
 
     if csv:
         csv_print(("pass", "component", "time_ms", "peak_mib"), rows)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(record, f, indent=2, sort_keys=True)
+        print(f"wrote {json_path}")
     return rows
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized workload")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="emit BENCH_kernels.json-style record here")
+    a = ap.parse_args()
+    run(smoke=a.smoke, json_path=a.json)

@@ -1,0 +1,70 @@
+"""Version-compat shims over the moving parts of the JAX API.
+
+The framework targets the current JAX API (``jax.shard_map`` with
+``check_vma``, ``jax.set_mesh``, ``jax.lax.pcast``) but must also run
+on the pinned 0.4.x toolchain in the CPU container, where those spell
+``jax.experimental.shard_map.shard_map(check_rep=...)``, the ``Mesh``
+context manager, and nothing (replication casts are implicit when the
+rep-check is off). Import the symbols from here instead of ``jax``:
+
+    from repro.compat import shard_map, set_mesh, pcast
+"""
+
+from __future__ import annotations
+
+import contextlib
+import inspect
+
+import jax
+
+try:  # jax >= 0.6
+    from jax import shard_map as _shard_map
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_SHARD_MAP_PARAMS = frozenset(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f, *args, **kwargs):
+    """``jax.shard_map`` accepting either ``check_vma`` or ``check_rep``.
+
+    New-API callers pass ``check_vma``; on 0.4.x it is forwarded as
+    ``check_rep`` (same meaning: disable the replication/varying-axis
+    check around bodies the tracer cannot prove replicated).
+    """
+    if "check_vma" in kwargs and "check_vma" not in _SHARD_MAP_PARAMS:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    elif "check_rep" in kwargs and "check_rep" not in _SHARD_MAP_PARAMS:
+        kwargs["check_vma"] = kwargs.pop("check_rep")
+    return _shard_map(f, *args, **kwargs)
+
+
+if hasattr(jax, "set_mesh"):
+    set_mesh = jax.set_mesh
+else:
+    @contextlib.contextmanager
+    def set_mesh(mesh):
+        """0.4.x fallback: the Mesh object is its own context manager."""
+        with mesh:
+            yield mesh
+
+
+if hasattr(jax.lax, "axis_size"):
+    axis_size = jax.lax.axis_size
+else:
+    def axis_size(axis_name):
+        """0.4.x fallback: psum of the literal 1 folds to the static size."""
+        return jax.lax.psum(1, axis_name)
+
+
+if hasattr(jax.lax, "pcast"):
+    pcast = jax.lax.pcast
+else:
+    def pcast(x, axis_name, *, to=None):
+        """0.4.x fallback: no varying-axis tracking => identity.
+
+        On 0.4.x ``shard_map(check_rep=False)`` performs no replication
+        bookkeeping, so marking a value device-varying is a no-op.
+        """
+        del axis_name, to
+        return x

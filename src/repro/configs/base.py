@@ -69,12 +69,36 @@ class TransformerConfig:
     grad_accum_steps: int = 1
     # LSR head (the paper's technique)
     lsr_head: bool = True          # train objective: LSR contrastive
-    head_block_b: int = 8
-    head_block_s: int = 128
-    head_block_v: int = 128
+    head_impl: str = "jax"         # "jax" (streaming scan) | "kernel" (Pallas)
+    # Pallas head block sizes. None = resolve per call shape via the
+    # autotuner (kernels/autotune.py): cached measured winner if one
+    # exists, else the analytic heuristic. Ints pin the blocks.
+    head_block_b: Optional[int] = None
+    head_block_s: Optional[int] = None
+    head_block_v: Optional[int] = None
     head_vocab_tile: int = 4096    # pure-JAX streaming tile
     attn_unroll: int = 1           # KV-chunk scan unroll (cost probes)
     attn_chunk: int = 512          # KV chunk size (online softmax)
+
+    def head_blocks(self, batch: int, seq_len: int,
+                    dtype: Optional[str] = None
+                    ) -> Tuple[int, int, int]:
+        """Resolved Pallas head blocks for a run shape.
+
+        Pinned config values win; unset (None) components come from the
+        autotuner's cache/heuristic for (batch, seq_len, d_model, V).
+        """
+        pinned = (self.head_block_b, self.head_block_s, self.head_block_v)
+        if all(p is not None for p in pinned):
+            return pinned  # type: ignore[return-value]
+        from repro.kernels.autotune import blocks_for_config
+
+        # Partial pins are resolved *jointly* (pins fixed, free
+        # components re-enumerated) so the combined triple still
+        # respects the kernel VMEM budget.
+        return blocks_for_config(self.vocab_size, self.d_model, batch,
+                                 seq_len, dtype or self.compute_dtype,
+                                 pinned=pinned)
 
     @property
     def is_moe(self) -> bool:

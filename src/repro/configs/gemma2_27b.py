@@ -29,7 +29,11 @@ CONFIG = TransformerConfig(
     tie_embeddings=True,
     param_dtype="bfloat16",
     attn_chunk=2048,   # §Perf: -4% memory term vs 512
-
+    # 256k vocab + D=4608: the (8,128,128) v1 default overflows VMEM
+    # once the backward scratch is counted — autotune per shape.
+    head_block_b=None,
+    head_block_s=None,
+    head_block_v=None,
 )
 
 SMOKE = TransformerConfig(

@@ -22,7 +22,9 @@ CONFIG = TransformerConfig(
     tie_embeddings=True,
     param_dtype="bfloat16",
     attn_chunk=2048,   # §Perf: -4% memory term vs 512
-
+    head_block_b=None,   # autotuned (128k vocab)
+    head_block_s=None,
+    head_block_v=None,
 )
 
 SMOKE = TransformerConfig(

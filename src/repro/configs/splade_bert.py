@@ -19,6 +19,11 @@ CONFIG = TransformerConfig(
     vocab_size=30522,
     bidirectional_encoder=True,
     tie_embeddings=True,
+    # Pallas head blocks: autotuned per run shape (B=320/S=512 on the
+    # paper's Table-1 point); pin ints here to override the tuner.
+    head_block_b=None,
+    head_block_s=None,
+    head_block_v=None,
 )
 
 SMOKE = TransformerConfig(

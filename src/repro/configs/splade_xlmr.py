@@ -18,6 +18,11 @@ CONFIG = TransformerConfig(
     vocab_size=250002,
     bidirectional_encoder=True,
     tie_embeddings=True,
+    # 250k vocab: block_v choice dominates HBM traffic — leave on auto
+    # so the tuner can pick the largest vocab tile that fits VMEM.
+    head_block_b=None,
+    head_block_s=None,
+    head_block_v=None,
 )
 
 SMOKE = TransformerConfig(

@@ -41,9 +41,9 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-Array = jax.Array
+from repro.kernels._common import NEG_INF as _NEG_INF, bwd_factor
 
-_NEG_INF = -1e30  # finite -inf stand-in: keeps argmax well-defined in bf16
+Array = jax.Array
 
 
 def _f(x: Array) -> Array:
@@ -201,22 +201,9 @@ def _sparton_forward_scan(
     return _f(maxima), indices
 
 
-def _sparton_bwd_factor(
-    y: Array, dy: Array, logit_softcap: Optional[float]
-) -> Array:
-    """g = dY/d(raw max logit), from the *stored post-activation* y.
-
-    f(x) = log1p(relu(c(x))),   c = softcap or identity.
-    With m = relu-input value at the max: exp(y) = 1 + relu(c(m)), and
-    y > 0  <=>  c(m) > 0  <=>  m > 0 (softcap is sign-preserving).
-        df/dc = exp(-y)         on c > 0, else 0
-        dc/dm = 1 - (c/cap)^2   (tanh derivative), c = expm1(y)
-    """
-    g = dy * jnp.exp(-y)
-    if logit_softcap is not None:
-        c = jnp.expm1(y)
-        g = g * (1.0 - (c / logit_softcap) ** 2)
-    return jnp.where(y > 0, g, 0.0)
+# g = dY/d(raw max logit) from the stored post-activation y — shared
+# with the Pallas kernels (which fuse it into their backward epilogue).
+_sparton_bwd_factor = bwd_factor
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))

@@ -32,7 +32,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+from repro.compat import axis_size, shard_map
 
 from repro.core.lm_head import lm_head_sparton
 
@@ -148,7 +148,7 @@ def sharded_infonce(
         # global row offset of this shard's queries
         offset = jnp.zeros((), jnp.int32)
         for ax in batch_axes:  # row-major over batch_axes (gather order)
-            offset = offset * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+            offset = offset * axis_size(ax) + jax.lax.axis_index(ax)
         labels = offset * bq_local + jnp.arange(bq_local)
 
         logp = jax.nn.log_softmax(scores, axis=-1)

@@ -5,8 +5,12 @@
   retrieval scoring (never materializes the (B, N) score matrix).
 * ``ops`` — jit'd differentiable wrappers (``custom_vjp``).
 * ``ref`` — pure-jnp oracles for the allclose sweeps.
+* ``autotune`` — block-size selection: VMEM-budgeted candidate
+  enumeration, timing, JSON winner cache.
 """
 
+from repro.kernels import autotune
+from repro.kernels.autotune import autotune_blocks, get_blocks
 from repro.kernels.ops import sparton_head, sparton_lm_head_kernel
 from repro.kernels.sparton import sparton_forward
 from repro.kernels.sparton_bwd import sparton_backward

@@ -1,0 +1,413 @@
+"""Block-size autotuner for the Sparton Pallas kernels.
+
+The v1 kernels hard-coded ``(8, 128, 128)`` blocks for every shape from
+Splade-BERT (V≈30k) to XLM-R (V≈250k). Block choice governs both HBM
+traffic and VMEM residency, and the best point moves with the shape:
+
+* total HBM reads of the forward are
+  ``|H| * V/block_v  +  |E| * B/block_b``
+  (each H tile is re-fetched per vocab block; each E tile per batch
+  block), so large-V shapes want the largest ``block_v`` that fits;
+* VMEM must hold the double-buffered input tiles, the logit tile, the
+  scratch accumulators — and, because the same blocks drive the
+  backward, the ``(block_b, block_s, D)`` / ``(block_v, D)`` backward
+  scratch accumulators too.
+
+This module enumerates candidates under a VMEM budget, scores them
+analytically (``heuristic_blocks``), optionally *times* them
+(``autotune_blocks`` — on a TPU the real kernel, elsewhere the Pallas
+interpreter on a capped proxy shape), and persists measured winners in
+a JSON cache keyed by ``(B, S, D, V, dtype, backend)``.
+
+``get_blocks`` is the cheap entry point used by the kernel wrappers
+when no explicit blocks are passed: cache hit, else heuristic — never
+a measurement (safe to call under ``jax.jit`` tracing).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+import warnings
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Blocks = Tuple[int, int, int]  # (block_b, block_s, block_v)
+
+CACHE_ENV = "SPARTON_AUTOTUNE_CACHE"
+DEFAULT_CACHE = os.path.join(
+    os.path.expanduser("~"), ".cache", "sparton", "autotune.json"
+)
+# ~16 MB VMEM per TensorCore; leave headroom for Mosaic's own buffers.
+VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+
+_BB_CHOICES = (1, 2, 4, 8, 16, 32)
+_BS_CHOICES = (64, 128, 256, 512)
+_BV_CHOICES = (128, 256, 512, 1024, 2048)
+
+# Smallest enumerable triple — the overflow-*minimizing* fallback when
+# no candidate fits the budget (a huge D can make even this overflow,
+# but never by more than any other choice would).
+MIN_BLOCKS: Blocks = (min(_BB_CHOICES), min(_BS_CHOICES),
+                      min(_BV_CHOICES))
+
+# One in-memory cache per JSON file: entries from distinct cache paths
+# must never bleed into each other's saves.
+_caches: Dict[str, Dict[str, dict]] = {}
+
+
+# ---------------------------------------------------------------------------
+# cache
+# ---------------------------------------------------------------------------
+
+def cache_path(path: Optional[str] = None) -> str:
+    return path or os.environ.get(CACHE_ENV) or DEFAULT_CACHE
+
+
+def shape_key(B: int, S: int, D: int, V: int, dtype, backend: str) -> str:
+    return f"B{B}_S{S}_D{D}_V{V}_{jnp.dtype(dtype).name}_{backend}"
+
+
+def _load(path: str) -> Dict[str, dict]:
+    if path not in _caches:
+        cache: Dict[str, dict] = {}
+        try:
+            with open(path) as f:
+                cache.update(json.load(f))
+        except (OSError, ValueError):
+            pass
+        _caches[path] = cache
+    return _caches[path]
+
+
+def _save(path: str) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    # Read-merge-write: another process (a second tuner on a shared
+    # home dir, a parallel CI job) may have persisted winners since our
+    # _load — merge them in rather than clobbering the file with our
+    # stale view. Our own entries win per-key. Not a lock, but it
+    # shrinks the lost-update window to a single key instead of the
+    # whole file.
+    merged: Dict[str, dict] = {}
+    try:
+        with open(path) as f:
+            merged.update(json.load(f))
+    except (OSError, ValueError):
+        pass
+    merged.update(_caches.get(path, {}))
+    _caches[path] = merged
+    tmp = f"{path}.{os.getpid()}.tmp"
+    with open(tmp, "w") as f:
+        json.dump(merged, f, indent=2, sort_keys=True)
+    os.replace(tmp, path)
+
+
+def clear_cache(path: Optional[str] = None, *, disk: bool = False) -> None:
+    """Drop the in-memory caches (and optionally one JSON file)."""
+    _caches.clear()
+    if disk:
+        try:
+            os.remove(cache_path(path))
+        except OSError:
+            pass
+
+
+# ---------------------------------------------------------------------------
+# VMEM model + candidate enumeration
+# ---------------------------------------------------------------------------
+
+def vmem_bytes(blocks: Blocks, D: int, dtype=jnp.float32) -> int:
+    """Worst-case VMEM residency across the fwd/dH/dE kernels.
+
+    Double-buffers the pipelined input/output tiles (factor 2) and adds
+    the single-buffered scratch accumulators and the in-register logit/
+    one-hot tile.
+    """
+    bb, bs, bv = blocks
+    in_b = jnp.dtype(dtype).itemsize
+    f32 = 4
+    tile_bv = bb * bv * f32                      # dy/y/g/out (B, V) tiles
+    fwd = (2 * (bb * bs * D * in_b + bv * D * in_b + bv * f32)
+           + bb * bs * bv * f32                  # logit tile
+           + 2 * 2 * tile_bv                     # y, i outputs
+           + 2 * tile_bv)                        # max/argmax scratch
+    dh = (2 * (3 * tile_bv + bv * D * in_b)
+          + bb * bs * bv * f32                   # one-hot tile
+          + bb * bs * D * f32                    # scratch accumulator
+          + 2 * bb * bs * D * f32)               # output tile
+    de = (2 * (3 * tile_bv + bb * bs * D * in_b)
+          + bb * bs * bv * f32
+          + bv * D * f32 + bv * f32              # scratch accumulators
+          + 2 * (bv * D * f32 + bv * f32))       # output tiles
+    return max(fwd, dh, de)
+
+
+def hbm_traffic_elems(blocks: Blocks, B: int, S: int, D: int,
+                      V: int) -> float:
+    """Analytic forward HBM read volume (elements) for a block choice.
+
+    Uses the *padded* array sizes — the kernel reads whole tiles, so a
+    block larger than the problem dim pays for the padding. This is
+    what makes an oversized block rank strictly worse than a fitting
+    one at equal grid counts (instead of winning the size tiebreak).
+    """
+    bb, bs, bv = blocks
+    n_b = -(-B // bb)
+    n_s = -(-S // bs)
+    n_v = -(-V // bv)
+    h_padded = float(n_b * bb) * (n_s * bs) * D
+    e_padded = float(n_v * bv) * D
+    return h_padded * n_v + e_padded * n_b
+
+
+Pinned = Tuple[Optional[int], Optional[int], Optional[int]]
+
+
+def candidate_blocks(
+    B: int, S: int, D: int, V: int,
+    *,
+    dtype=jnp.float32,
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+    pinned: Optional[Pinned] = None,
+) -> List[Blocks]:
+    """All (block_b, block_s, block_v) under the VMEM budget, best first.
+
+    Candidates keep the MXU/VPU alignment rules (block_v a multiple of
+    the 128 lane width; block_s a multiple of the sublane tile) and skip
+    blocks grossly larger than the padded problem. Sorted by the
+    analytic HBM-traffic model, least traffic first. ``pinned``
+    components (from a config) are honored exactly — only the free
+    components are enumerated, and the VMEM budget is checked on the
+    *combined* triple.
+    """
+    pb, ps, pv = pinned or (None, None, None)
+    bbs = (pb,) if pb is not None else _BB_CHOICES
+    bss = (ps,) if ps is not None else _BS_CHOICES
+    bvs = (pv,) if pv is not None else _BV_CHOICES
+    out = []
+    for bb in bbs:
+        if pb is None and bb > max(8, B):
+            continue
+        for bs in bss:
+            if ps is None and bs > max(128, 2 * S):
+                continue
+            for bv in bvs:
+                if pv is None and bv > max(128, 2 * V):
+                    continue
+                blocks = (bb, bs, bv)
+                if vmem_bytes(blocks, D, dtype) > vmem_budget:
+                    continue
+                out.append(blocks)
+    out.sort(key=lambda blk: (hbm_traffic_elems(blk, B, S, D, V),
+                              -blk[0] * blk[1] * blk[2]))
+    return out
+
+
+def heuristic_blocks(B: int, S: int, D: int, V: int,
+                     *, dtype=jnp.float32,
+                     vmem_budget: int = VMEM_BUDGET_BYTES,
+                     pinned: Optional[Pinned] = None) -> Blocks:
+    """Best candidate by the analytic model — no measurement.
+
+    With pins, the free components shrink as needed to keep the
+    combined triple under the budget; if no free choice fits (the pins
+    alone overflow), the smallest free components are used so the
+    overflow is at least minimal, not amplified.
+    """
+    cands = candidate_blocks(B, S, D, V, dtype=dtype,
+                             vmem_budget=vmem_budget, pinned=pinned)
+    if cands:
+        return cands[0]
+    if pinned and any(p is not None for p in pinned):
+        return tuple(p if p is not None else s
+                     for p, s in zip(pinned, MIN_BLOCKS))  # type: ignore
+    return MIN_BLOCKS
+
+
+# ---------------------------------------------------------------------------
+# lookup + measurement
+# ---------------------------------------------------------------------------
+
+def get_blocks(
+    B: int, S: int, D: int, V: int,
+    *,
+    dtype=jnp.float32,
+    backend: Optional[str] = None,
+    path: Optional[str] = None,
+) -> Blocks:
+    """Cached winner for the shape, else the analytic heuristic.
+
+    Never measures — cheap enough to call on every kernel invocation
+    (including under jit tracing, where it runs once per compilation).
+    """
+    backend = backend or jax.default_backend()
+    cache = _load(cache_path(path))
+    hit = cache.get(shape_key(B, S, D, V, dtype, backend))
+    if hit is not None:
+        return (hit["block_b"], hit["block_s"], hit["block_v"])
+    return heuristic_blocks(B, S, D, V, dtype=dtype)
+
+
+def _measure_shape(B: int, S: int, V: int,
+                   interpret: bool) -> Tuple[int, int, int]:
+    """Interpret mode executes the grid serially on the host — cap the
+    proxy shape so a 250k-vocab tuning run stays seconds, not hours.
+    The cache key still records the *real* shape."""
+    if not interpret:
+        return B, S, V
+    return min(B, 8), min(S, 256), min(V, 2048)
+
+
+def _time_ms(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append((time.perf_counter() - t0) * 1e3)
+    return float(np.median(times))
+
+
+def autotune_blocks(
+    B: int, S: int, D: int, V: int,
+    *,
+    dtype=jnp.float32,
+    backend: Optional[str] = None,
+    softcap: Optional[float] = None,
+    interpret: Optional[bool] = None,
+    max_candidates: int = 8,
+    include_backward: bool = True,
+    path: Optional[str] = None,
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+) -> Blocks:
+    """Time block candidates for the shape, persist and return the winner.
+
+    On a TPU the real Mosaic kernels are timed at the real shape; on
+    CPU/GPU hosts (``interpret`` defaults to True there) the Pallas
+    interpreter is timed on a capped proxy shape — a rough but
+    deterministic ordering that keeps CI and laptops tune-able.
+    """
+    from repro.kernels.ops import sparton_head
+    from repro.kernels.sparton import sparton_forward
+
+    backend = backend or jax.default_backend()
+    if interpret is None:
+        interpret = backend != "tpu"
+    p = cache_path(path)
+    cache = _load(p)
+    key = shape_key(B, S, D, V, dtype, backend)
+    hit = cache.get(key)
+    if hit is not None and hit.get("source") == "measured":
+        return (hit["block_b"], hit["block_s"], hit["block_v"])
+
+    cands = candidate_blocks(B, S, D, V, dtype=dtype,
+                             vmem_budget=vmem_budget)[:max_candidates]
+    if not cands:
+        cands = [MIN_BLOCKS]
+
+    mb, ms, mv = _measure_shape(B, S, V, interpret)
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    H = jax.random.normal(ks[0], (mb, ms, D), dtype)
+    E = jax.random.normal(ks[1], (mv, D), dtype) * 0.2
+    bias = jax.random.normal(ks[2], (mv,), jnp.float32) * 0.2
+    mask = jnp.ones((mb, ms), jnp.int32)
+
+    best: Tuple[float, Blocks] = (float("inf"), cands[0])
+    last_error: Optional[Exception] = None
+    for blocks in cands:
+        bb, bs, bv = blocks
+
+        def fwd(H, E, bias, mask):
+            y, _ = sparton_forward(
+                H, E, bias, mask, block_b=bb, block_s=bs, block_v=bv,
+                softcap=softcap, interpret=interpret)
+            return y
+
+        fn = fwd
+        if include_backward:
+            def fwd_bwd(H, E, bias, mask, _blk=blocks):
+                def loss(H, E, bias):
+                    y = sparton_head(
+                        H, E, bias, mask, block_b=_blk[0],
+                        block_s=_blk[1], block_v=_blk[2],
+                        softcap=softcap, interpret=interpret)
+                    return jnp.sum(y * y)
+                return jax.grad(loss, argnums=(0, 1, 2))(H, E, bias)
+            fn = fwd_bwd
+        try:
+            t = _time_ms(fn, H, E, bias, mask)
+        except Exception as e:   # candidate not lowerable on this backend
+            last_error = e
+            continue
+        if t < best[0]:
+            best = (t, blocks)
+
+    t, blocks = best
+    if t == float("inf"):
+        # Every candidate failed to time (e.g. none lowered on this
+        # backend): fall back to the heuristic and persist NOTHING, so
+        # a later call — possibly in a healthier environment — retries
+        # instead of serving a never-validated winner forever. Surface
+        # the last error — a systematic kernel bug must not degrade
+        # silently into "tuned" blocks.
+        warnings.warn(
+            f"sparton autotune: all {len(cands)} block candidates "
+            f"failed to time for {key}; returning untimed heuristic "
+            f"blocks. Last error: {last_error!r}")
+        return heuristic_blocks(B, S, D, V, dtype=dtype,
+                                vmem_budget=vmem_budget)
+    cache[key] = {
+        "block_b": blocks[0], "block_s": blocks[1], "block_v": blocks[2],
+        "ms": round(t, 3),
+        "source": "measured",
+        "measured_shape": list(_measure_shape(B, S, V, interpret)) + [D],
+        "interpret": bool(interpret),
+    }
+    _save(p)
+    return blocks
+
+
+def resolve_blocks(
+    B: int, S: int, D: int, V: int, dtype,
+    block_b: Optional[int], block_s: Optional[int],
+    block_v: Optional[int],
+) -> Blocks:
+    """Fill the None components of a user-supplied block triple. Shared
+    by every kernel wrapper so forward and backward resolve identically
+    for the same inputs.
+
+    Fully unset triples take the cached winner (or heuristic). Partial
+    pins are re-enumerated *jointly* with the pins fixed — grafting a
+    pin onto a triple tuned without it could blow the VMEM budget —
+    which also means they bypass the winner cache on purpose.
+    """
+    if block_b is not None and block_s is not None and block_v is not None:
+        return (block_b, block_s, block_v)
+    if block_b is None and block_s is None and block_v is None:
+        return get_blocks(B, S, D, V, dtype=dtype)
+    return heuristic_blocks(B, S, D, V, dtype=dtype,
+                            pinned=(block_b, block_s, block_v))
+
+
+def blocks_for_config(vocab_size: int, d_model: int, batch: int,
+                      seq_len: int, dtype: str = "float32",
+                      pinned: Optional[Pinned] = None) -> Blocks:
+    """Config-level convenience: cached/heuristic blocks for a model
+    operating point (used by configs + launch to stop hard-coding).
+
+    Partially pinned configs bypass the winner cache (the cached triple
+    was tuned without the pin) and re-enumerate with the pins fixed so
+    the combined triple still respects the VMEM budget. No memoization
+    beyond the autotune cache itself — a winner persisted later in the
+    process must be visible to the next call.
+    """
+    if pinned is not None and any(p is not None for p in pinned):
+        return heuristic_blocks(batch, seq_len, d_model, vocab_size,
+                                dtype=jnp.dtype(dtype), pinned=pinned)
+    return get_blocks(batch, seq_len, d_model, vocab_size,
+                      dtype=jnp.dtype(dtype))

@@ -3,7 +3,15 @@
 ``sparton_lm_head_kernel`` is the drop-in kernel-backed equivalent of
 ``repro.core.lm_head.lm_head_sparton``: a ``jax.custom_vjp`` whose
 forward runs the fused Pallas forward (saving only ``(y, i_max)``) and
-whose backward runs the two fused Pallas accumulation kernels.
+whose backward runs the two fused Pallas accumulation kernels. The v2
+backward consumes the raw cotangent directly — the activation-
+derivative factor ``g = dy * f'(y)`` and the bias gradient
+``db = sum_b g`` are computed inside the kernels, so no standalone
+``(B, V)`` elementwise pass (and no HBM round-trip of ``g``) remains.
+
+Block sizes default to ``None`` = auto: the autotuner's cached winner
+for the call shape, else its analytic heuristic
+(``repro.kernels.autotune``). Pass ints to pin blocks explicitly.
 
 On this CPU container the kernels run with ``interpret=True`` (the
 kernel body executed by the Pallas interpreter); on TPU the same code
@@ -23,28 +31,15 @@ from repro.kernels.sparton import sparton_forward
 from repro.kernels.sparton_bwd import sparton_backward
 
 
-def _bwd_factor(y, dy, softcap):
-    """dY/d(raw max logit) from the stored post-activation y.
-
-    See core/lm_head.py::_sparton_bwd_factor — duplicated here to keep
-    the kernels package importable standalone.
-    """
-    g = dy.astype(jnp.float32) * jnp.exp(-y)
-    if softcap is not None:
-        c = jnp.expm1(y)
-        g = g * (1.0 - (c / softcap) ** 2)
-    return jnp.where(y > 0, g, 0.0)
-
-
 @functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9))
 def sparton_lm_head_kernel(
     H: jax.Array,
     E: jax.Array,
     b: jax.Array,
     mask: jax.Array,
-    block_b: int = 8,
-    block_s: int = 128,
-    block_v: int = 128,
+    block_b: Optional[int] = None,
+    block_s: Optional[int] = None,
+    block_v: Optional[int] = None,
     softcap: Optional[float] = None,
     interpret: bool = False,
     out_dtype: Optional[jnp.dtype] = None,
@@ -69,13 +64,13 @@ def _fwd(H, E, b, mask, block_b, block_s, block_v, softcap, interpret,
 
 def _bwd(block_b, block_s, block_v, softcap, interpret, out_dtype, res, dy):
     H, E, y, i_max = res
-    g = _bwd_factor(y, dy, softcap)
-    dH, dE = sparton_backward(
-        g, i_max, H, E,
+    # v2: dy and y go straight into the kernels; g and db are computed
+    # tile-wise in their epilogues.
+    dH, dE, db = sparton_backward(
+        dy, y, i_max, H, E,
         block_b=block_b, block_s=block_s, block_v=block_v,
-        interpret=interpret,
+        softcap=softcap, interpret=interpret,
     )
-    db = jnp.sum(g, axis=0)
     return dH.astype(H.dtype), dE.astype(E.dtype), db, None
 
 
@@ -88,15 +83,25 @@ def sparton_head(
     b: Optional[jax.Array] = None,
     mask: Optional[jax.Array] = None,
     *,
-    block_b: int = 8,
-    block_s: int = 128,
-    block_v: int = 128,
+    block_b: Optional[int] = None,
+    block_s: Optional[int] = None,
+    block_v: Optional[int] = None,
     softcap: Optional[float] = None,
     interpret: bool = False,
 ) -> jax.Array:
-    """Convenience entry point with optional bias/mask (kernel-backed)."""
-    B, S, _ = H.shape
+    """Convenience entry point with optional bias/mask (kernel-backed).
+
+    With the default ``block_* = None`` the block sizes are resolved
+    once here — cache hit or heuristic — so forward and backward are
+    guaranteed to agree even if the autotune cache changes mid-step.
+    """
+    B, S, D = H.shape
     V = E.shape[0]
+    if block_b is None or block_s is None or block_v is None:
+        from repro.kernels.autotune import resolve_blocks
+
+        block_b, block_s, block_v = resolve_blocks(
+            B, S, D, V, H.dtype, block_b, block_s, block_v)
     if b is None:
         b = jnp.zeros((V,), jnp.float32)
     if mask is None:

@@ -12,7 +12,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-NEG_INF = -1e30
+from repro.kernels._common import NEG_INF, bwd_factor
 
 
 def _raw_logits(H, E, b, mask, softcap):
@@ -57,6 +57,20 @@ def sparton_backward_ref(
     dH = jnp.einsum("bvs,vd->bsd", w, E.astype(jnp.float32))
     dE = jnp.einsum("bvs,bsd->vd", w, H.astype(jnp.float32))
     return dH, dE
+
+
+def sparton_backward_fused_ref(
+    dy: jax.Array,      # (B, V) — raw upstream cotangent
+    y: jax.Array,       # (B, V) — stored post-activation
+    i_max: jax.Array,   # (B, V)
+    H: jax.Array,       # (B, S, D)
+    E: jax.Array,       # (V, D)
+    softcap: Optional[float] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Oracle for the v2 fused backward: (dH, dE, db) from (dy, y)."""
+    g = bwd_factor(y.astype(jnp.float32), dy, softcap)
+    dH, dE = sparton_backward_ref(g, i_max, H, E)
+    return dH, dE, jnp.sum(g, axis=0)
 
 
 def topk_score_ref(

@@ -1,52 +1,63 @@
-"""Sparton fused LM-head forward — Pallas TPU kernel.
+"""Sparton fused LM-head forward v2 — Pallas TPU kernel.
 
 One kernel fuses: tiled GEMM (``H @ E^T``), bias add, optional
 gemma-2-style logit soft-capping, attention masking, streaming max
 reduction over the sequence dimension (with argmax tracking), and the
 final ``log1p(relu(.))`` epilogue. The full ``(B, S, V)`` logit tensor
 is never materialized — per grid step only a ``(block_b*block_s,
-block_v)`` logit tile lives in VMEM, and only the running ``(B, V)``
-maxima/indices are written to HBM.
+block_v)`` logit tile lives in VMEM.
 
-TPU adaptation of the paper (DESIGN.md §3): the paper ships a *hybrid*
-(cuBLAS GEMM + Triton reduction) because a hand-written Triton GEMM
-loses to cuBLAS. On TPU the in-kernel ``dot_general`` lowers onto the
-MXU — the same unit XLA's GEMMs use — so we implement the paper's
-"ideal" fully-fused design instead.
+v2 over v1 (DESIGN.md §"Kernel v2"):
+
+* The running ``(block_b, block_v)`` max/argmax live in **VMEM
+  scratch** (``scratch_shapes``) across sequence steps; the ``(B, V)``
+  output tiles are written to HBM exactly once, at the finalize step.
+  v1 accumulated through the output refs, leaving the write-back/
+  re-fetch decision to the pipeline; v2 makes the single-store
+  guarantee structural.
+* ``dimension_semantics=("parallel", "parallel", "arbitrary")`` tells
+  Mosaic the batch/vocab grid dims carry no cross-step state, so they
+  can split across the two TensorCores of a megacore chip; only the
+  sequence dim is ordered (it owns the scratch accumulator).
+* bf16 ``H``/``E`` tiles feed the MXU directly (no upcast in VMEM);
+  accumulation is always f32 via ``preferred_element_type``.
 
 Grid layout: ``(B/bb, V/bv, S/bs)`` with the sequence dimension
-innermost, so each ``(b, v)`` output tile is revisited across sequence
-steps and accumulates its running max in-place (the standard Pallas TPU
-reduction idiom; deterministic, no atomics).
+innermost, so each ``(b, v)`` tile's accumulator is live for exactly
+one scratch lifetime (deterministic, no atomics).
 
-VMEM working set per step (fp32):
-    H tile   bb*bs*D
-    E tile   bv*D
-    logits   bb*bs*bv        (register/VMEM temporary)
-    y, i     2 * bb*bv
-Block defaults (8, 128, 128) keep this under ~2 MB at D=4096; the MXU
-contraction dims (bb*bs and bv) are multiples of 128.
+VMEM working set per step:
+    H tile   bb*bs*D        (input dtype)
+    E tile   bv*D           (input dtype)
+    logits   bb*bs*bv       f32 (register/VMEM temporary)
+    scratch  2 * bb*bv      f32/i32 (running max / argmax)
+    y, i     2 * bb*bv      f32/i32 (output tiles)
+Block selection is shape-dependent — see ``kernels/autotune.py``; the
+(8, 128, 128) fallback keeps this under ~2 MB at D=4096.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-NEG_INF = -1e30  # finite stand-in; see core/lm_head.py
+from repro.kernels._common import NEG_INF, pad_to
 
 
 def _fwd_kernel(
-    h_ref,      # (bb, bs, D)
-    e_ref,      # (bv, D)
-    bias_ref,   # (1, bv)
+    h_ref,      # (bb, bs, D)  input dtype (f32 or bf16)
+    e_ref,      # (bv, D)      input dtype
+    bias_ref,   # (1, bv)  f32
     mask_ref,   # (bb, bs) int32
-    y_ref,      # (bb, bv) f32 out — running max, then f(max)
-    i_ref,      # (bb, bv) i32 out — running argmax
+    y_ref,      # (bb, bv) f32 out — written once, at finalize
+    i_ref,      # (bb, bv) i32 out — written once, at finalize
+    acc_ref,    # (bb, bv) f32 VMEM scratch — running max
+    arg_ref,    # (bb, bv) i32 VMEM scratch — running argmax
     *,
     n_s_blocks: int,
     block_s: int,
@@ -56,15 +67,16 @@ def _fwd_kernel(
 
     @pl.when(k == 0)
     def _init():
-        y_ref[...] = jnp.full(y_ref.shape, NEG_INF, jnp.float32)
-        i_ref[...] = jnp.zeros(i_ref.shape, jnp.int32)
+        acc_ref[...] = jnp.full(acc_ref.shape, NEG_INF, jnp.float32)
+        arg_ref[...] = jnp.zeros(arg_ref.shape, jnp.int32)
 
     bb, bs, d = h_ref.shape
     bv = e_ref.shape[0]
 
     h = h_ref[...].reshape(bb * bs, d)
     e = e_ref[...]
-    # (bb*bs, bv) logit tile on the MXU; accumulate in f32.
+    # (bb*bs, bv) logit tile on the MXU; f32 accumulation regardless of
+    # the input dtype (bf16 operands feed the MXU natively).
     logits = jax.lax.dot_general(
         h, e, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     )
@@ -82,25 +94,16 @@ def _fwd_kernel(
     hit = logits >= tile_max[:, None, :]
     tile_arg = jnp.min(jnp.where(hit, s_iota, bs), axis=1) + k * block_s
 
-    cur = y_ref[...]
+    cur = acc_ref[...]
     better = tile_max > cur  # strict: earlier blocks win ties (first occ.)
-    y_ref[...] = jnp.where(better, tile_max, cur)
-    i_ref[...] = jnp.where(better, tile_arg, i_ref[...])
+    acc_ref[...] = jnp.where(better, tile_max, cur)
+    arg_ref[...] = jnp.where(better, tile_arg, arg_ref[...])
 
     @pl.when(k == n_s_blocks - 1)
     def _finalize():
-        raw = y_ref[...]
-        y_ref[...] = jnp.log1p(jnp.maximum(raw, 0.0))
-
-
-def _pad_to(x, axis, multiple, value=0):
-    size = x.shape[axis]
-    pad = (-size) % multiple
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths, constant_values=value)
+        # single HBM store per (b, v) output tile
+        y_ref[...] = jnp.log1p(jnp.maximum(acc_ref[...], 0.0))
+        i_ref[...] = arg_ref[...]
 
 
 @functools.partial(
@@ -109,26 +112,16 @@ def _pad_to(x, axis, multiple, value=0):
         "block_b", "block_s", "block_v", "softcap", "interpret"
     ),
 )
-def sparton_forward(
-    H: jax.Array,        # (B, S, D)
-    E: jax.Array,        # (V, D)
-    b: jax.Array,        # (V,)
-    mask: jax.Array,     # (B, S) int32/bool, 1 = keep
-    *,
-    block_b: int = 8,
-    block_s: int = 128,
-    block_v: int = 128,
-    softcap: Optional[float] = None,
-    interpret: bool = False,
+def _forward_call(
+    H, E, b, mask, *, block_b, block_s, block_v, softcap, interpret
 ):
-    """Fused forward. Returns (y (B, V) f32, i_max (B, V) i32)."""
     B, S, D = H.shape
     V = E.shape[0]
 
-    Hp = _pad_to(_pad_to(H, 0, block_b), 1, block_s)
-    maskp = _pad_to(_pad_to(mask.astype(jnp.int32), 0, block_b), 1, block_s)
-    Ep = _pad_to(E, 0, block_v)
-    bp = _pad_to(b.astype(jnp.float32), 0, block_v).reshape(1, -1)
+    Hp = pad_to(pad_to(H, 0, block_b), 1, block_s)
+    maskp = pad_to(pad_to(mask.astype(jnp.int32), 0, block_b), 1, block_s)
+    Ep = pad_to(E, 0, block_v)
+    bp = pad_to(b.astype(jnp.float32), 0, block_v).reshape(1, -1)
 
     Bp, Sp, _ = Hp.shape
     Vp = Ep.shape[0]
@@ -157,6 +150,42 @@ def sparton_forward(
             jax.ShapeDtypeStruct((Bp, Vp), jnp.float32),
             jax.ShapeDtypeStruct((Bp, Vp), jnp.int32),
         ],
+        scratch_shapes=[
+            pltpu.VMEM((block_b, block_v), jnp.float32),
+            pltpu.VMEM((block_b, block_v), jnp.int32),
+        ],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
         interpret=interpret,
     )(Hp, Ep, bp, maskp)
     return y[:B, :V], i_max[:B, :V]
+
+
+def sparton_forward(
+    H: jax.Array,        # (B, S, D) f32 or bf16
+    E: jax.Array,        # (V, D) f32 or bf16
+    b: jax.Array,        # (V,)
+    mask: jax.Array,     # (B, S) int32/bool, 1 = keep
+    *,
+    block_b: Optional[int] = None,
+    block_s: Optional[int] = None,
+    block_v: Optional[int] = None,
+    softcap: Optional[float] = None,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused forward. Returns (y (B, V) f32, i_max (B, V) i32).
+
+    Block sizes default to the autotuner's cached/heuristic choice for
+    the call shape (``kernels/autotune.py``); pass explicit ints to pin.
+    """
+    if block_b is None or block_s is None or block_v is None:
+        from repro.kernels.autotune import resolve_blocks  # avoids cycle
+
+        B, S, D = H.shape
+        block_b, block_s, block_v = resolve_blocks(
+            B, S, D, E.shape[0], H.dtype, block_b, block_s, block_v)
+    return _forward_call(
+        H, E, b, mask, block_b=block_b, block_s=block_s, block_v=block_v,
+        softcap=softcap, interpret=interpret,
+    )

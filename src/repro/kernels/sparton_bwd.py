@@ -1,4 +1,4 @@
-"""Sparton fused LM-head backward — Pallas TPU kernels.
+"""Sparton fused LM-head backward v2 — Pallas TPU kernels.
 
 The paper's Alg. 3 computes, per (b, v), the activation-derivative
 factor ``g`` and scatters ``g*E[v]`` into ``dH[b, i_max]`` / gathers
@@ -7,166 +7,242 @@ thread blocks. TPU Pallas has no atomics; instead we exploit the
 sequential grid to accumulate deterministically (DESIGN.md §3):
 
 * ``dH`` kernel — grid ``(B/bb, S/bs, V/bv)``, vocab innermost: each
-  ``(b, s)`` tile of ``dH`` is revisited across vocab blocks and
-  accumulates ``sum_v g[b,v] * onehot(i_max[b,v], s) * E[v]``.
+  ``(b, s)`` tile of ``dH`` accumulates
+  ``sum_v g[b,v] * onehot(i_max[b,v], s) * E[v]``.
 * ``dE`` kernel — grid ``(V/bv, B/bb, S/bs)``, batch/seq innermost:
   each vocab tile of ``dE`` accumulates
   ``sum_b g[b,v] * onehot(i_max[b,v], s) * H[b,s]``.
 
+v2 over v1 (DESIGN.md §"Kernel v2"):
+
+* **Fused epilogue** — the kernels take the raw upstream cotangent
+  ``dy`` and the stored post-activation ``y`` and evaluate ``g = dy *
+  f'(y)`` per VMEM tile (``_common.bwd_factor``). v1 materialized ``g``
+  with a standalone ``(B, V)`` elementwise pass: one full HBM write +
+  two reads of a ``(B, V)`` f32 tensor, gone. The factor is recomputed
+  by both kernels — a few VPU ops per tile versus a ``(B, V)`` HBM
+  round-trip.
+* **Fused bias gradient** — ``db = sum_b g`` accumulates in the dE
+  kernel's scratch (one extra ``(1, bv)`` vector), so the wrapper's
+  separate ``jnp.sum`` over a re-read ``g`` is gone too.
+* **VMEM scratch accumulators** — both kernels accumulate into
+  ``scratch_shapes`` and store each output tile to HBM exactly once at
+  their finalize step, mirroring the forward's single-store guarantee.
+* The weighted one-hot tile construction is shared between the two
+  contractions via ``_common.onehot_weights``. (The contractions
+  themselves must stay in separate kernels: dH tiles are indexed by
+  (b, s) and dE tiles by (v), so no single grid order visits both
+  accumulators in consecutive steps — the precondition for
+  deterministic revisit-accumulation on Mosaic pipelines.)
+
 Gather/scatter by ``i_max`` is re-expressed as a *one-hot contraction*
 (``onehot(i_max) @ E`` / ``(onehot*g)^T @ H``) so the irregular memory
 access becomes an MXU matmul — the TPU-native replacement for GPU
-scattered atomics. Positions whose argmax falls outside the current
-sequence block simply produce an all-zero one-hot row, which is what
-routes each gradient to exactly one sequence block.
-
-``g`` (the derivative of ``log1p(relu(.))`` — and optionally of the
-logit softcap — evaluated via the stored post-activation ``y``) is a
-cheap elementwise ``(B, V)`` computation done in plain jnp by the
-wrapper in ``ops.py``; fusing it here would save one small HBM read but
-complicate block unification.
+scattered atomics.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._common import bwd_factor, onehot_weights, pad_to
 
 
 def _dh_kernel(
-    g_ref,     # (bb, bv) f32 — upstream grad * activation derivative
+    dy_ref,    # (bb, bv) f32 — raw upstream cotangent
+    y_ref,     # (bb, bv) f32 — stored post-activation
     i_ref,     # (bb, bv) i32 — argmax sequence index
     e_ref,     # (bv, D)
-    dh_ref,    # (bb, bs, D) out, accumulated over vocab grid dim
+    dh_ref,    # (bb, bs, D) out — written once, at finalize
+    acc_ref,   # (bb, bs, D) f32 VMEM scratch
     *,
     n_v_blocks: int,
     block_s: int,
+    softcap: Optional[float],
 ):
     j = pl.program_id(2)
 
     @pl.when(j == 0)
     def _init():
-        dh_ref[...] = jnp.zeros(dh_ref.shape, jnp.float32)
+        acc_ref[...] = jnp.zeros(acc_ref.shape, jnp.float32)
 
     bb, bs, d = dh_ref.shape
-    bv = e_ref.shape[0]
     k = pl.program_id(1)
 
+    g = bwd_factor(y_ref[...], dy_ref[...], softcap)     # fused epilogue
     local_i = i_ref[...] - k * block_s          # (bb, bv); in-range => hit
-    s_iota = jax.lax.broadcasted_iota(jnp.int32, (bb, bs, bv), 1)
-    onehot = (local_i[:, None, :] == s_iota).astype(jnp.float32)
-    w = onehot * g_ref[...][:, None, :]          # (bb, bs, bv)
+    w = onehot_weights(g, local_i, bs)          # (bb, bs, bv)
     # dH[b, s, :] += sum_v w[b, s, v] * E[v, :]  — one MXU contraction.
     contrib = jax.lax.dot_general(
-        w.reshape(bb * bs, bv), e_ref[...],
+        w.reshape(bb * bs, -1), e_ref[...].astype(jnp.float32),
         (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
     ).reshape(bb, bs, d)
-    dh_ref[...] += contrib
+    acc_ref[...] += contrib
+
+    @pl.when(j == n_v_blocks - 1)
+    def _finalize():
+        dh_ref[...] = acc_ref[...]
 
 
 def _de_kernel(
-    g_ref,     # (bb, bv) f32
+    dy_ref,    # (bb, bv) f32
+    y_ref,     # (bb, bv) f32
     i_ref,     # (bb, bv) i32
     h_ref,     # (bb, bs, D)
-    de_ref,    # (bv, D) out, accumulated over (batch, seq) grid dims
+    de_ref,    # (bv, D) out — written once, at finalize
+    db_ref,    # (1, bv) f32 out — fused bias gradient
+    de_acc,    # (bv, D) f32 VMEM scratch
+    db_acc,    # (1, bv) f32 VMEM scratch
     *,
     n_b_blocks: int,
     n_s_blocks: int,
     block_s: int,
+    softcap: Optional[float],
 ):
     i = pl.program_id(1)
     k = pl.program_id(2)
 
     @pl.when((i == 0) & (k == 0))
     def _init():
-        de_ref[...] = jnp.zeros(de_ref.shape, jnp.float32)
+        de_acc[...] = jnp.zeros(de_acc.shape, jnp.float32)
+        db_acc[...] = jnp.zeros(db_acc.shape, jnp.float32)
 
-    bv, d = de_ref.shape
     bb, bs, _ = h_ref.shape
 
+    g = bwd_factor(y_ref[...], dy_ref[...], softcap)     # fused epilogue
     local_i = i_ref[...] - k * block_s
-    s_iota = jax.lax.broadcasted_iota(jnp.int32, (bb, bs, bv), 1)
-    onehot = (local_i[:, None, :] == s_iota).astype(jnp.float32)
-    w = (onehot * g_ref[...][:, None, :]).reshape(bb * bs, bv)
+    w = onehot_weights(g, local_i, bs).reshape(bb * bs, -1)
     # dE[v, :] += sum_{b,s} w[bs, v] * H[bs, :]
     contrib = jax.lax.dot_general(
-        w, h_ref[...].reshape(bb * bs, d).astype(jnp.float32),
+        w, h_ref[...].reshape(bb * bs, -1).astype(jnp.float32),
         (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32,
     )
-    de_ref[...] += contrib
+    de_acc[...] += contrib
 
+    # db[v] = sum_b g[b, v] — independent of s, so add once per b block.
+    @pl.when(k == 0)
+    def _db():
+        db_acc[...] += jnp.sum(g, axis=0, keepdims=True)
 
-def _pad_to(x, axis, multiple, value=0):
-    size = x.shape[axis]
-    pad = (-size) % multiple
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths, constant_values=value)
+    @pl.when((i == n_b_blocks - 1) & (k == n_s_blocks - 1))
+    def _finalize():
+        de_ref[...] = de_acc[...]
+        db_ref[...] = db_acc[...]
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_b", "block_s", "block_v", "interpret"),
+    static_argnames=("block_b", "block_s", "block_v", "softcap",
+                     "interpret"),
 )
-def sparton_backward(
-    g: jax.Array,       # (B, V) f32 — dy * f'(raw max), zero where y <= 0
-    i_max: jax.Array,   # (B, V) i32
-    H: jax.Array,       # (B, S, D)
-    E: jax.Array,       # (V, D)
-    *,
-    block_b: int = 8,
-    block_s: int = 128,
-    block_v: int = 128,
-    interpret: bool = False,
+def _backward_call(
+    dy, y, i_max, H, E, *, block_b, block_s, block_v, softcap, interpret
 ):
-    """Fused backward. Returns (dH (B,S,D) f32, dE (V,D) f32)."""
     B, S, D = H.shape
     V = E.shape[0]
 
-    gp = _pad_to(_pad_to(g.astype(jnp.float32), 0, block_b), 1, block_v)
-    # Padded batch rows must not route anywhere real: g is zero there, so
-    # any index is safe; padded vocab cols likewise have g == 0.
-    ip = _pad_to(_pad_to(i_max, 0, block_b), 1, block_v)
-    Hp = _pad_to(_pad_to(H, 0, block_b), 1, block_s)
-    Ep = _pad_to(E, 0, block_v)
+    dyp = pad_to(pad_to(dy.astype(jnp.float32), 0, block_b), 1, block_v)
+    # Padded rows/cols must not route anywhere real: y == 0 there, so
+    # bwd_factor yields g == 0 and any index is safe.
+    yp = pad_to(pad_to(y.astype(jnp.float32), 0, block_b), 1, block_v)
+    ip = pad_to(pad_to(i_max, 0, block_b), 1, block_v)
+    Hp = pad_to(pad_to(H, 0, block_b), 1, block_s)
+    Ep = pad_to(E, 0, block_v)
 
     Bp, Sp, _ = Hp.shape
     Vp = Ep.shape[0]
     nb, ns, nv = Bp // block_b, Sp // block_s, Vp // block_v
 
+    bv_spec = pl.BlockSpec((block_b, block_v), lambda i, k, j: (i, j))
     dH = pl.pallas_call(
-        functools.partial(_dh_kernel, n_v_blocks=nv, block_s=block_s),
+        functools.partial(_dh_kernel, n_v_blocks=nv, block_s=block_s,
+                          softcap=softcap),
         grid=(nb, ns, nv),
         in_specs=[
-            pl.BlockSpec((block_b, block_v), lambda i, k, j: (i, j)),
-            pl.BlockSpec((block_b, block_v), lambda i, k, j: (i, j)),
+            bv_spec,
+            bv_spec,
+            bv_spec,
             pl.BlockSpec((block_v, D), lambda i, k, j: (j, 0)),
         ],
         out_specs=pl.BlockSpec(
             (block_b, block_s, D), lambda i, k, j: (i, k, 0)
         ),
         out_shape=jax.ShapeDtypeStruct((Bp, Sp, D), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((block_b, block_s, D), jnp.float32),
+        ],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
         interpret=interpret,
-    )(gp, ip, Ep)
+    )(dyp, yp, ip, Ep)
 
-    dE = pl.pallas_call(
+    vb_spec = pl.BlockSpec((block_b, block_v), lambda j, i, k: (i, j))
+    dE, db = pl.pallas_call(
         functools.partial(
-            _de_kernel, n_b_blocks=nb, n_s_blocks=ns, block_s=block_s
+            _de_kernel, n_b_blocks=nb, n_s_blocks=ns, block_s=block_s,
+            softcap=softcap,
         ),
         grid=(nv, nb, ns),
         in_specs=[
-            pl.BlockSpec((block_b, block_v), lambda j, i, k: (i, j)),
-            pl.BlockSpec((block_b, block_v), lambda j, i, k: (i, j)),
+            vb_spec,
+            vb_spec,
+            vb_spec,
             pl.BlockSpec((block_b, block_s, D), lambda j, i, k: (i, k, 0)),
         ],
-        out_specs=pl.BlockSpec((block_v, D), lambda j, i, k: (j, 0)),
-        out_shape=jax.ShapeDtypeStruct((Vp, D), jnp.float32),
+        out_specs=[
+            pl.BlockSpec((block_v, D), lambda j, i, k: (j, 0)),
+            pl.BlockSpec((1, block_v), lambda j, i, k: (0, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Vp, D), jnp.float32),
+            jax.ShapeDtypeStruct((1, Vp), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_v, D), jnp.float32),
+            pltpu.VMEM((1, block_v), jnp.float32),
+        ],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary"),
+        ),
         interpret=interpret,
-    )(gp, ip, Hp)
+    )(dyp, yp, ip, Hp)
 
-    return dH[:B, :S], dE[:V]
+    return dH[:B, :S], dE[:V], db[0, :V]
+
+
+def sparton_backward(
+    dy: jax.Array,      # (B, V) — raw upstream cotangent (any float dtype)
+    y: jax.Array,       # (B, V) f32 — stored post-activation
+    i_max: jax.Array,   # (B, V) i32
+    H: jax.Array,       # (B, S, D) f32 or bf16
+    E: jax.Array,       # (V, D) f32 or bf16
+    *,
+    block_b: Optional[int] = None,
+    block_s: Optional[int] = None,
+    block_v: Optional[int] = None,
+    softcap: Optional[float] = None,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused backward. Returns (dH (B,S,D), dE (V,D), db (V,)) in f32.
+
+    The activation-derivative factor and the bias gradient are fused
+    into the kernels — no standalone elementwise pass over ``(B, V)``.
+    Block sizes default to the autotuner's choice for the call shape.
+    """
+    if block_b is None or block_s is None or block_v is None:
+        from repro.kernels.autotune import resolve_blocks  # avoids cycle
+
+        B, S, D = H.shape
+        block_b, block_s, block_v = resolve_blocks(
+            B, S, D, E.shape[0], H.dtype, block_b, block_s, block_v)
+    return _backward_call(
+        dy, y, i_max, H, E, block_b=block_b, block_s=block_s,
+        block_v=block_v, softcap=softcap, interpret=interpret,
+    )

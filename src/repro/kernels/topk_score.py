@@ -27,7 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-NEG_INF = -1e30
+from repro.kernels._common import NEG_INF, pad_to
+
 
 
 def _topk_kernel(
@@ -70,16 +71,6 @@ def _topk_kernel(
     idx_ref[...] = top_idx
 
 
-def _pad_to(x, axis, multiple, value=0):
-    size = x.shape[axis]
-    pad = (-size) % multiple
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths, constant_values=value)
-
-
 @functools.partial(
     jax.jit, static_argnames=("k", "block_b", "block_n", "interpret")
 )
@@ -96,8 +87,8 @@ def topk_score(
     B, D = q.shape
     N = C.shape[0]
 
-    qp = _pad_to(q.astype(jnp.float32), 0, block_b)
-    Cp = _pad_to(C.astype(jnp.float32), 0, block_n)
+    qp = pad_to(q.astype(jnp.float32), 0, block_b)
+    Cp = pad_to(C.astype(jnp.float32), 0, block_n)
 
     Bp = qp.shape[0]
     Np = Cp.shape[0]

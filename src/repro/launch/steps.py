@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import pcast
 from repro.configs import get_config
 from repro.configs.base import (DimeNetConfig, RecSysConfig,
                                 TransformerConfig)
@@ -72,6 +73,13 @@ def _encode_fn(cfg: TransformerConfig, mesh: Optional[Mesh],
     moe_shard = _moe_shard(cfg, mesh)
     layer_unroll = cfg.n_layers if unroll else 1
     if mesh is not None and cfg.vocab_size % mesh.shape["model"] == 0:
+        if cfg.head_impl == "kernel":
+            import warnings
+            warnings.warn(
+                "head_impl='kernel' requested but the vocab-sharded "
+                "head only has a pure-JAX body yet — using the "
+                "sharded scan head (see ROADMAP: port the Pallas "
+                "kernel into the shard_map body)")
         baxes = batch_axes_for(mesh, n_batch)
         head = sharded_sparton_head(
             mesh, batch_axes=baxes, vocab_tile=cfg.head_vocab_tile,
@@ -83,6 +91,38 @@ def _encode_fn(cfg: TransformerConfig, mesh: Optional[Mesh],
                                          unroll=layer_unroll)
             E, b = tfm.head_weights(params, cfg)
             y = head(Hs, E.astype(Hs.dtype), b, mask)
+            return y, aux
+        return encode
+
+    if cfg.head_impl == "kernel" and mesh is not None:
+        # Non-divisible vocab with a live mesh: pallas_call has no SPMD
+        # partitioning rule, so the kernel head must not end up inside
+        # a sharded jit — fall through to the GSPMD-partitionable
+        # pure-JAX head, loudly.
+        import warnings
+        warnings.warn(
+            "head_impl='kernel' requested under a mesh — the Pallas "
+            "head is single-device; using the pure-JAX scan head")
+
+    if cfg.head_impl == "kernel" and mesh is None:
+        # Pallas kernel head (single-device path): block sizes come
+        # from the config — pinned ints or the autotuner's choice for
+        # this run shape (configs.base.TransformerConfig.head_blocks).
+        from repro.kernels.ops import sparton_head
+
+        interpret = jax.default_backend() != "tpu"
+
+        def encode(params, tokens, mask):
+            Hs, aux = tfm.forward_hidden(params, cfg, tokens, mask,
+                                         moe_shard=moe_shard,
+                                         unroll=layer_unroll)
+            E, b = tfm.head_weights(params, cfg)
+            bb, bs, bv = cfg.head_blocks(Hs.shape[0], Hs.shape[1],
+                                         str(Hs.dtype))
+            y = sparton_head(Hs, E.astype(Hs.dtype), b, mask,
+                             block_b=bb, block_s=bs, block_v=bv,
+                             softcap=cfg.final_logit_softcap,
+                             interpret=interpret)
             return y, aux
         return encode
 
@@ -303,7 +343,7 @@ def streaming_topk(q: Array, C: Array, *, k: int,
             jnp.zeros((B, k), jnp.int32))
     if vary_axes:
         init = jax.tree.map(
-            lambda x: jax.lax.pcast(x, vary_axes, to="varying"), init)
+            lambda x: pcast(x, vary_axes, to="varying"), init)
     (vals, idx), _ = jax.lax.scan(
         body, init, (C_t, jnp.arange(n_tiles, dtype=jnp.int32)))
     return vals, idx
@@ -341,7 +381,7 @@ def build_retrieval_step(cfg: RecSysConfig, mesh: Optional[Mesh],
         i2 = jnp.take_along_axis(all_i, pos, axis=1)
         return v2, i2
 
-    from jax import shard_map
+    from repro.compat import shard_map
     merged = shard_map(
         sharded_body, mesh=mesh,
         in_specs=(P(), P(axes, None)),

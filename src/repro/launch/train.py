@@ -43,6 +43,12 @@ def main(argv=None) -> int:
                     help="set XLA latency-hiding scheduler flags")
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--lr", type=float, default=2e-4)
+    ap.add_argument("--head-impl", choices=("jax", "kernel"), default=None,
+                    help="LSR head implementation (default: config's)")
+    ap.add_argument("--autotune-head", action="store_true",
+                    help="measure Pallas head block candidates for this "
+                         "run shape and persist the winner before "
+                         "building the train step")
     args = ap.parse_args(argv)
 
     if args.overlap:
@@ -66,6 +72,30 @@ def main(argv=None) -> int:
     cfg = mod.CONFIG if args.full else mod.SMOKE
     state, _ = init_state(args.arch, jax.random.PRNGKey(0),
                           smoke=not args.full)
+
+    if isinstance(cfg, TransformerConfig) and args.head_impl:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, head_impl=args.head_impl)
+
+    if isinstance(cfg, TransformerConfig) and args.autotune_head:
+        import dataclasses
+
+        from repro.kernels.autotune import autotune_blocks
+        if cfg.head_impl != "kernel":
+            # tuned blocks are only read by the Pallas head — don't
+            # spend a timing sweep on a config that would ignore them
+            print("--autotune-head implies --head-impl kernel "
+                  f"(config had {cfg.head_impl!r})")
+            cfg = dataclasses.replace(cfg, head_impl="kernel")
+        blocks = autotune_blocks(
+            args.batch, args.seq_len, cfg.d_model, cfg.vocab_size,
+            dtype=jnp.dtype(cfg.compute_dtype),
+            softcap=cfg.final_logit_softcap)
+        print(f"autotuned head blocks (B={args.batch} S={args.seq_len} "
+              f"D={cfg.d_model} V={cfg.vocab_size}): {blocks}")
+        cfg = dataclasses.replace(
+            cfg, head_block_b=blocks[0], head_block_s=blocks[1],
+            head_block_v=blocks[2])
 
     if isinstance(cfg, TransformerConfig):
         step = build_lsr_train_step(cfg, None, n_micro=1,

@@ -46,7 +46,7 @@ def _apply_moe(x2d: Array, mlp: Params, cfg: TransformerConfig,
             x2d, mlp["router"], mlp["w_gate"], mlp["w_up"], mlp["w_down"],
             top_k=cfg.top_k, capacity_factor=cfg.capacity_factor)
     token_axes, expert_axis = moe_shard
-    from jax import shard_map
+    from repro.compat import shard_map
     from jax.sharding import PartitionSpec as P
     body = functools.partial(
         moe_ffn_local_experts,

@@ -31,6 +31,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import axis_size
+
 Array = jax.Array
 
 
@@ -56,7 +58,7 @@ def distributed_take_local(
     R = idx_local.shape[0]
     n = 1
     for ax in axis_names:
-        n *= jax.lax.axis_size(ax)
+        n *= axis_size(ax)
     C = _capacity(R, n, cap_factor)
 
     owner = jnp.clip(idx_local // rows_local, 0, n - 1)       # (R,)
@@ -108,7 +110,7 @@ def distributed_segment_sum_local(
     R, d = vals_local.shape
     n = 1
     for ax in axis_names:
-        n *= jax.lax.axis_size(ax)
+        n *= axis_size(ax)
     C = _capacity(R, n, cap_factor)
 
     owner = jnp.clip(idx_local // out_local_rows, 0, n - 1)
@@ -146,7 +148,7 @@ def make_distributed_take(mesh, axis_names: Tuple[str, ...],
                           *, cap_factor: float = 1.25):
     """Factory: take(src, idx) -> (rows, dropped) with src row-sharded
     and idx row-sharded over ``axis_names``."""
-    from jax import shard_map
+    from repro.compat import shard_map
     from jax.sharding import PartitionSpec as P
 
     body = functools.partial(distributed_take_local,

@@ -20,7 +20,7 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+from repro.compat import shard_map
 
 Array = jax.Array
 

@@ -1,0 +1,89 @@
+"""Minimal deterministic stand-in for ``hypothesis``.
+
+The container image has no ``hypothesis`` wheel and nothing may be pip
+installed, so ``tests/conftest.py`` registers this module under the
+``hypothesis`` name when the real package is absent. It implements just
+the surface the test-suite uses — ``@given`` with keyword strategies,
+``@settings(max_examples=, deadline=)``, ``st.integers`` and
+``st.sampled_from`` — drawing examples from a PRNG seeded by the test
+name, so every run replays the same example set (no shrinking, no
+database; if the real hypothesis is installed it is used instead).
+"""
+
+from __future__ import annotations
+
+import random
+import types
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: rng.choice(elements))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+def floats(min_value: float, max_value: float) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+_DEFAULT_MAX_EXAMPLES = 10
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategies):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples",
+                        _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(fn.__qualname__)
+            for _ in range(n):
+                drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                fn(*args, **drawn, **kwargs)
+        # No functools.wraps: copying __wrapped__ would make pytest
+        # introspect fn's signature and demand fixtures for the
+        # strategy parameters. Copy only the identity attributes.
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        # @settings is applied above @given: let it mark the wrapper
+        return wrapper
+    return deco
+
+
+def make_module() -> types.ModuleType:
+    """Build module objects registerable as ``hypothesis`` (+ ``.strategies``)."""
+    st_mod = types.ModuleType("hypothesis.strategies")
+    st_mod.integers = integers
+    st_mod.sampled_from = sampled_from
+    st_mod.booleans = booleans
+    st_mod.floats = floats
+
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = st_mod
+    mod.__stub__ = True
+    return mod

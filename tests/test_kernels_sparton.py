@@ -1,5 +1,10 @@
 """Sparton Pallas kernel vs pure-jnp oracle: shape/dtype sweeps +
-hypothesis property tests (interpret mode on CPU)."""
+hypothesis property tests (interpret mode on CPU).
+
+v2 coverage: scratch-accumulated forward on non-divisible shapes, bf16
+inputs against the f32 oracle, the fused backward epilogue (g and db
+computed in-kernel) against both the fused oracle and autograd.
+"""
 
 import jax
 import jax.numpy as jnp
@@ -8,7 +13,8 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.ops import sparton_head, sparton_lm_head_kernel
-from repro.kernels.ref import sparton_backward_ref, sparton_forward_ref
+from repro.kernels.ref import (sparton_backward_fused_ref,
+                               sparton_backward_ref, sparton_forward_ref)
 from repro.kernels.sparton import sparton_forward
 from repro.kernels.sparton_bwd import sparton_backward
 
@@ -48,6 +54,22 @@ def test_forward_matches_oracle(B, S, D, V, blocks):
     np.testing.assert_array_equal(np.asarray(i_max), np.asarray(i_ref))
 
 
+@pytest.mark.parametrize("B,S,D,V,blocks", SHAPES)
+def test_forward_bf16_matches_f32_oracle(B, S, D, V, blocks):
+    """bf16 H/E with f32 in-kernel accumulation vs the f32 oracle."""
+    H, E, b, mask = _inputs(B, S, D, V, dtype=jnp.bfloat16, seed=1)
+    bb, bs, bv = blocks
+    y, i_max = sparton_forward(H, E, b, mask, block_b=bb, block_s=bs,
+                               block_v=bv, interpret=True)
+    assert y.dtype == jnp.float32  # accumulator dtype, not input dtype
+    # oracle at f32 on the *same bf16 values* (exact upcast)
+    y_ref, i_ref = sparton_forward_ref(
+        H.astype(jnp.float32), E.astype(jnp.float32), b, mask)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(i_max), np.asarray(i_ref))
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_forward_dtypes(dtype):
     H, E, b, mask = _inputs(2, 64, 32, 128, dtype=dtype)
@@ -79,20 +101,73 @@ def test_fully_masked_row_yields_zero():
     assert float(jnp.max(jnp.abs(y[1]))) == 0.0
 
 
+def test_forward_auto_blocks():
+    """block_*=None resolves through the autotuner and stays correct."""
+    H, E, b, mask = _inputs(3, 40, 24, 120, seed=5)
+    y, i_max = sparton_forward(H, E, b, mask, interpret=True)
+    y_ref, i_ref = sparton_forward_ref(H, E, b, mask)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(i_max), np.asarray(i_ref))
+
+
 @pytest.mark.parametrize("B,S,D,V,blocks", SHAPES[:4])
-def test_backward_matches_oracle(B, S, D, V, blocks):
+def test_backward_matches_fused_oracle(B, S, D, V, blocks):
+    """v2 backward: raw dy + stored y in, (dH, dE, db) out — the
+    activation-derivative factor is applied inside the kernels."""
     H, E, b, mask = _inputs(B, S, D, V, seed=3)
     bb, bs, bv = blocks
     y_ref, i_ref = sparton_forward_ref(H, E, b, mask)
-    g = jax.random.normal(jax.random.PRNGKey(9), (B, V))
-    g = jnp.where(y_ref > 0, g * jnp.exp(-y_ref), 0.0)
-    dH, dE = sparton_backward(g, i_ref, H, E, block_b=bb, block_s=bs,
-                              block_v=bv, interpret=True)
+    dy = jax.random.normal(jax.random.PRNGKey(9), (B, V))
+    dH, dE, db = sparton_backward(dy, y_ref, i_ref, H, E, block_b=bb,
+                                  block_s=bs, block_v=bv, interpret=True)
+    dH_ref, dE_ref, db_ref = sparton_backward_fused_ref(
+        dy, y_ref, i_ref, H, E)
+    np.testing.assert_allclose(np.asarray(dH), np.asarray(dH_ref),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(dE), np.asarray(dE_ref),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(db), np.asarray(db_ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_backward_fused_factor_equals_manual_g():
+    """The in-kernel g matches applying bwd_factor outside + v1-style
+    contraction oracle (the refactor changed plumbing, not math)."""
+    B, S, D, V = 3, 33, 24, 100
+    H, E, b, mask = _inputs(B, S, D, V, seed=13)
+    y_ref, i_ref = sparton_forward_ref(H, E, b, mask)
+    dy = jax.random.normal(jax.random.PRNGKey(17), (B, V))
+    g = jnp.where(y_ref > 0, dy * jnp.exp(-y_ref), 0.0)
+    dH, dE, db = sparton_backward(dy, y_ref, i_ref, H, E, block_b=2,
+                                  block_s=32, block_v=64, interpret=True)
     dH_ref, dE_ref = sparton_backward_ref(g, i_ref, H, E)
     np.testing.assert_allclose(np.asarray(dH), np.asarray(dH_ref),
                                atol=1e-4, rtol=1e-4)
     np.testing.assert_allclose(np.asarray(dE), np.asarray(dE_ref),
                                atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(db), np.asarray(jnp.sum(g, 0)),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_fused_db_matches_autodiff():
+    """The kernel-accumulated bias grad vs autograd through the pure-JAX
+    reference head (ISSUE satellite: fused-db backward vs autograd)."""
+    B, S, D, V = 3, 48, 16, 96
+    H, E, b, mask = _inputs(B, S, D, V, seed=7)
+
+    def loss_kernel(b):
+        y = sparton_head(H, E, b, mask, block_b=1, block_s=16,
+                         block_v=32, interpret=True)
+        return jnp.sum(jnp.tanh(y) * jnp.arange(V))
+
+    def loss_ref(b):
+        y, _ = sparton_forward_ref(H, E, b, mask)
+        return jnp.sum(jnp.tanh(y) * jnp.arange(V))
+
+    np.testing.assert_allclose(
+        np.asarray(jax.grad(loss_kernel)(b)),
+        np.asarray(jax.grad(loss_ref)(b)), atol=2e-4, rtol=2e-4)
 
 
 def test_custom_vjp_grads_match_autodiff_oracle():
@@ -115,6 +190,31 @@ def test_custom_vjp_grads_match_autodiff_oracle():
                                    atol=2e-4, rtol=2e-4)
 
 
+def test_custom_vjp_grads_bf16_inputs():
+    """bf16 parity through the whole custom_vjp: grads come back in the
+    input dtype and match the f32 oracle at bf16 resolution."""
+    B, S, D, V = 2, 32, 16, 64
+    H, E, b, mask = _inputs(B, S, D, V, dtype=jnp.bfloat16, seed=21)
+
+    def loss_kernel(H, E, b):
+        y = sparton_head(H, E, b, mask, block_b=2, block_s=16,
+                         block_v=32, interpret=True)
+        return jnp.sum(jnp.sin(y.astype(jnp.float32)))
+
+    def loss_ref(H, E, b):
+        y, _ = sparton_forward_ref(H.astype(jnp.float32),
+                                   E.astype(jnp.float32), b, mask)
+        return jnp.sum(jnp.sin(y))
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(H, E, b)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(H, E, b)
+    assert gk[0].dtype == jnp.bfloat16 and gk[1].dtype == jnp.bfloat16
+    for a, c in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(c, np.float32),
+                                   atol=5e-2, rtol=5e-2)
+
+
 def test_custom_vjp_grads_with_softcap():
     B, S, D, V = 2, 32, 8, 64
     H, E, b, mask = _inputs(B, S, D, V, seed=11)
@@ -131,6 +231,30 @@ def test_custom_vjp_grads_with_softcap():
     np.testing.assert_allclose(
         np.asarray(jax.grad(loss_kernel)(H)),
         np.asarray(jax.grad(loss_ref)(H)), atol=2e-4, rtol=2e-4)
+
+
+def test_kernel_grads_match_lm_head_sparton_autograd():
+    """Acceptance: sparton_lm_head_kernel grads == lm_head_sparton
+    autograd to 1e-4."""
+    from repro.core.lm_head import lm_head_sparton
+
+    B, S, D, V = 4, 40, 16, 80
+    H, E, b, mask = _inputs(B, S, D, V, seed=29)
+
+    def loss_kernel(H, E, b):
+        y = sparton_lm_head_kernel(H, E, b, mask, 2, 16, 32, None, True,
+                                   None)
+        return jnp.sum(jnp.tanh(y))
+
+    def loss_jax(H, E, b):
+        y = lm_head_sparton(H, E, b, mask, vocab_tile=32)
+        return jnp.sum(jnp.tanh(y))
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(H, E, b)
+    gj = jax.grad(loss_jax, argnums=(0, 1, 2))(H, E, b)
+    for a, c in zip(gk, gj):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                   atol=1e-4, rtol=1e-4)
 
 
 # ---------------------------------------------------------------------------

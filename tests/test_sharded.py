@@ -22,6 +22,7 @@ _SCRIPT = textwrap.dedent("""
 
     mesh = jax.make_mesh((2, 4), ("data", "model"))
 
+    from repro.compat import set_mesh
     from repro.core.lm_head import lm_head_sparton
     from repro.core.sharded import (sharded_sparton_head, sharded_infonce,
                                     sharded_flops_reg)
@@ -37,7 +38,7 @@ _SCRIPT = textwrap.dedent("""
 
     # ---- sharded sparton head == local head --------------------------
     head = sharded_sparton_head(mesh, batch_axes=("data",), vocab_tile=16)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         y_sharded = jax.jit(head)(H, E, b, mask)
     y_local = lm_head_sparton(H, E, b, mask, vocab_tile=16)
     np.testing.assert_allclose(np.asarray(y_sharded), np.asarray(y_local),
@@ -50,7 +51,7 @@ _SCRIPT = textwrap.dedent("""
     def loss_local(H, E, b):
         return jnp.sum(jnp.sin(lm_head_sparton(H, E, b, mask,
                                                vocab_tile=16)))
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         gs = jax.jit(jax.grad(loss_sharded, (0, 1, 2)))(H, E, b)
     gl = jax.grad(loss_local, (0, 1, 2))(H, E, b)
     for a, c in zip(gs, gl):
@@ -62,7 +63,7 @@ _SCRIPT = textwrap.dedent("""
     yq = jax.random.normal(ks[4], (B, V))
     yd = jax.random.normal(jax.random.PRNGKey(9), (B, V))
     inf = sharded_infonce(mesh, batch_axes=("data",))
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         l_sharded = jax.jit(inf)(yq, yd)
     l_plain = infonce_loss(yq, yd)
     np.testing.assert_allclose(float(l_sharded), float(l_plain), atol=1e-5)
@@ -70,7 +71,7 @@ _SCRIPT = textwrap.dedent("""
 
     # ---- sharded flops reg == plain -----------------------------------
     fl = sharded_flops_reg(mesh, batch_axes=("data",))
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         f_sharded = jax.jit(fl)(jnp.abs(yq))
     f_plain = flops_regularizer(jnp.abs(yq))
     np.testing.assert_allclose(float(f_sharded), float(f_plain),
@@ -79,7 +80,7 @@ _SCRIPT = textwrap.dedent("""
 
     # ---- expert-parallel MoE == local MoE -----------------------------
     from repro.models.moe import moe_ffn, moe_ffn_local_experts
-    from jax import shard_map
+    from repro.compat import shard_map
     T, Dm, F, Eexp = 16, 8, 12, 4
     x = jax.random.normal(jax.random.PRNGKey(11), (T, Dm))
     router = jax.random.normal(jax.random.PRNGKey(12), (Dm, Eexp))
@@ -97,7 +98,7 @@ _SCRIPT = textwrap.dedent("""
                              P("model", None, None), P("model", None, None),
                              P("model", None, None)),
                    out_specs=(P("data", None), P()))
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         out_ep, aux_ep = jax.jit(fn)(x, router, wg, wu, wd)
     # high capacity => no drops on either path => identical outputs
     np.testing.assert_allclose(np.asarray(out_ep), np.asarray(out_local),
@@ -117,7 +118,7 @@ _SCRIPT = textwrap.dedent("""
                     in_specs=(P("data", None), P("data", None)),
                     out_specs=(P(None, None), P(None, None)),
                     check_vma=False)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         mw, mb = jax.jit(fn2)(g_tree["w"], g_tree["b"])
     # each data shard holds 4 rows; mean over the 2 shards
     ref_w = (np.asarray(g_tree["w"][:4]) + np.asarray(g_tree["w"][4:])) / 2
@@ -136,7 +137,7 @@ _SCRIPT = textwrap.dedent("""
         lambda s, i: distributed_take_local(s, i, axis_names=axes2),
         mesh=mesh, in_specs=(P(axes2, None), P(axes2)),
         out_specs=(P(axes2, None), P()), check_vma=False)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         got, ndrop = jax.jit(take2)(src2, idx2)
     np.testing.assert_allclose(np.asarray(got),
                                np.asarray(jnp.take(src2, idx2, axis=0)),
@@ -151,7 +152,7 @@ _SCRIPT = textwrap.dedent("""
             v, i, rows // 8, axis_names=axes2),
         mesh=mesh, in_specs=(P(axes2, None), P(axes2)),
         out_specs=(P(axes2, None), P()), check_vma=False)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         out3, ndrop3 = jax.jit(scat2)(vals2, dst2)
     np.testing.assert_allclose(
         np.asarray(out3),
@@ -165,7 +166,7 @@ _SCRIPT = textwrap.dedent("""
     table = jax.random.normal(jax.random.PRNGKey(22), (32, 8))
     idx = jnp.array([0, 5, 17, 31, 8])
     lookup = make_sharded_lookup(mesh, axis_name="model")
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         out = jax.jit(lookup)(table, idx)
     np.testing.assert_allclose(np.asarray(out),
                                np.asarray(jnp.take(table, idx, axis=0)),
