@@ -9,14 +9,12 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks._common import compiled_peak_bytes, csv_print, time_fn
-from repro.core.lm_head import (lm_head_naive, lm_head_sparton,
-                                lm_head_tiled)
+from repro.core.head_api import HeadSpec, make_head
 
 D = 64
 HEADS = [
-    ("naive", lm_head_naive, {}),
-    ("tiled", lm_head_tiled, {"vocab_tile": 4096}),
-    ("sparton", lm_head_sparton, {"vocab_tile": 4096}),
+    (impl, make_head(HeadSpec(impl=impl, vocab_tile=4096)))
+    for impl in ("naive", "tiled", "sparton")
 ]
 
 
@@ -29,9 +27,9 @@ def _inputs(B, S, V, seed=0):
     return H, E, b, mask
 
 
-def _bwd(head_fn, kw, mask):
+def _bwd(head_fn, mask):
     def loss(H, E, b):
-        return jnp.sum(head_fn(H, E, b, mask, **kw) ** 2)
+        return jnp.sum(head_fn(H, E, b, mask) ** 2)
     return jax.grad(loss, argnums=(0, 1))
 
 
@@ -49,8 +47,8 @@ def run(csv: bool = True):
             habs = (jax.ShapeDtypeStruct(H.shape, H.dtype),
                     jax.ShapeDtypeStruct(E.shape, E.dtype),
                     jax.ShapeDtypeStruct(b.shape, b.dtype))
-            for name, fn, kw in HEADS:
-                g = _bwd(fn, kw, mask)
+            for name, fn in HEADS:
+                g = _bwd(fn, mask)
                 t = time_fn(jax.jit(g), H, E, b, warmup=1, iters=3)
                 m = compiled_peak_bytes(g, *habs)
                 rows.append((sweep, B, S, V, name, round(t, 1),

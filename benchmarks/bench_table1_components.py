@@ -27,28 +27,30 @@ import jax.numpy as jnp
 
 from benchmarks._common import compiled_peak_bytes, csv_print, time_fn
 from repro.configs import get_config
-from repro.core.lm_head import (lm_head_naive, lm_head_sparton,
-                                lm_head_tiled)
+from repro.core.head_api import HeadSpec, make_head
 from repro.kernels import autotune
-from repro.kernels.ops import sparton_head
 from repro.models import transformer as tfm
 
 B, S = 16, 128  # CPU-scaled stand-ins for the paper's 320 x 512
 
+# bench-row label -> registry impl. Labels are the BENCH_kernels.json
+# keys CI has tracked since PR 1 — keep them stable across refactors.
+BENCH_IMPLS = (
+    ("naive", "naive"),
+    ("tiled", "tiled"),
+    ("sparton-jax", "sparton"),
+    ("sparton-kernel", "kernel"),
+)
+
 
 def _head_impls(blocks, interpret):
     bb, bs, bv = blocks
-
-    def kernel_head(H, E, b, mask, **_):
-        return sparton_head(H, E, b, mask, block_b=bb, block_s=bs,
-                            block_v=bv, interpret=interpret)
-
-    return [
-        ("naive", lm_head_naive, {}),
-        ("tiled", lm_head_tiled, {"vocab_tile": 4096}),
-        ("sparton-jax", lm_head_sparton, {"vocab_tile": 4096}),
-        ("sparton-kernel", kernel_head, {}),
-    ]
+    heads = []
+    for label, impl in BENCH_IMPLS:
+        spec = HeadSpec(impl=impl, vocab_tile=4096, block_b=bb,
+                        block_s=bs, block_v=bv, interpret=interpret)
+        heads.append((label, make_head(spec)))
+    return heads
 
 
 def run(csv: bool = True, smoke: bool = False, json_path: str = None):
@@ -80,18 +82,18 @@ def run(csv: bool = True, smoke: bool = False, json_path: str = None):
         H, _ = tfm.forward_hidden(params, cfg, toks, mask)
         return H
 
-    def full(head_fn, head_kw):
+    def full(head_fn):
         def f(params, toks, mask):
             H, _ = tfm.forward_hidden(params, cfg, toks, mask)
             E, b = tfm.head_weights(params, cfg)
-            return head_fn(H, E.astype(H.dtype), b, mask, **head_kw)
+            return head_fn(H, E.astype(H.dtype), b, mask)
         return f
 
-    def train(head_fn, head_kw):
+    def train(head_fn):
         def loss(params, toks, mask):
             H, _ = tfm.forward_hidden(params, cfg, toks, mask)
             E, b = tfm.head_weights(params, cfg)
-            y = head_fn(H, E.astype(H.dtype), b, mask, **head_kw)
+            y = head_fn(H, E.astype(H.dtype), b, mask)
             return jnp.sum(y * y) * 1e-3
         return jax.grad(loss)
 
@@ -118,16 +120,16 @@ def run(csv: bool = True, smoke: bool = False, json_path: str = None):
     m = compiled_peak_bytes(bb_loss, *abstract)
     rows.append(("fwd+bwd", "backbone", round(t, 1), round(m / 2**20, 1)))
 
-    for name, fn, kw in heads:
-        f = full(fn, kw)
+    for name, fn in heads:
+        f = full(fn)
         t = time_fn(jax.jit(f), params, toks, mask, iters=iters)
         m = compiled_peak_bytes(f, *abstract)
         rows.append(("fwd", f"+{name}", round(t, 1), round(m / 2**20, 1)))
         record["heads"].setdefault(name, {})["fwd"] = {
             "median_ms": round(t, 3),
             "peak_bytes": None if m != m else int(m)}
-    for name, fn, kw in heads:
-        g = train(fn, kw)
+    for name, fn in heads:
+        g = train(fn)
         t = time_fn(jax.jit(g), params, toks, mask, iters=iters)
         m = compiled_peak_bytes(g, *abstract)
         rows.append(("fwd+bwd", f"+{name}", round(t, 1),

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks._common import compiled_peak_bytes, csv_print, time_fn
-from repro.core.lm_head import lm_head_sparton, lm_head_tiled
+from repro.core.head_api import HeadSpec, make_head
 
 B, D, V = 4, 64, 30522
 HBM_BUDGET_GB = 40.0  # the paper's A100-40GB
@@ -32,12 +32,11 @@ def run(csv: bool = True):
                 jax.ShapeDtypeStruct(E.shape, E.dtype),
                 jax.ShapeDtypeStruct(b.shape, b.dtype))
 
-        for name, fn, kw in [
-            ("tiled", lm_head_tiled, {"vocab_tile": 4096}),
-            ("sparton", lm_head_sparton, {"vocab_tile": 4096}),
-        ]:
+        for name in ("tiled", "sparton"):
+            fn = make_head(HeadSpec(impl=name, vocab_tile=4096))
+
             def loss(H, E, b):
-                return jnp.sum(fn(H, E, b, mask, **kw) ** 2)
+                return jnp.sum(fn(H, E, b, mask) ** 2)
             g = jax.grad(loss, argnums=(0, 1))
             t = time_fn(jax.jit(g), H, E, b, warmup=1, iters=2)
             m = compiled_peak_bytes(g, *habs)

@@ -23,7 +23,7 @@ from repro.data.synthetic import lsr_pair_batches
 from repro.launch.steps import init_state
 from repro.losses.contrastive import splade_loss
 from repro.models import transformer as tfm
-from repro.core.lm_head import lm_head_naive, lm_head_sparton
+from repro.core.head_api import make_head
 from repro.optim.optimizers import adamw, apply_updates
 
 STEPS = 30
@@ -31,14 +31,12 @@ STEPS = 30
 
 def _build_step(cfg, head):
     opt = adamw(3e-4)
+    head_fn = make_head(cfg.head_spec(impl=head))
 
     def encode(params, toks, mask):
         H, _ = tfm.forward_hidden(params, cfg, toks, mask)
         E, b = tfm.head_weights(params, cfg)
-        if head == "sparton":
-            return lm_head_sparton(H, E.astype(H.dtype), b, mask,
-                                   vocab_tile=4096)
-        return lm_head_naive(H, E.astype(H.dtype), b, mask)
+        return head_fn(H, E.astype(H.dtype), b, mask)
 
     def loss_fn(params, batch):
         yq = encode(params, batch["q_tokens"], batch["q_mask"])
@@ -58,17 +56,22 @@ def _build_step(cfg, head):
     return jax.jit(step, donate_argnums=(0,)), opt
 
 
-def _retrieval_acc(params, cfg, head, n=32):
-    """In-batch retrieval accuracy: does query i rank doc i first?"""
+def _retrieval_acc(params, cfg, n=32):
+    """In-batch retrieval accuracy: does query i rank doc i first?
+
+    Always evaluates with the config's default head so the accuracy
+    column is measured identically across the per-head training rows.
+    """
     gen = lsr_pair_batches(batch=n, q_len=16, d_len=24,
                            vocab=cfg.vocab_size, seed=99)
     b = next(gen)
+    head_fn = make_head(cfg.head_spec())
 
     def encode(toks, mask):
         H, _ = tfm.forward_hidden(params, cfg, jnp.asarray(toks),
                                   jnp.asarray(mask))
         E, bb = tfm.head_weights(params, cfg)
-        return lm_head_sparton(H, E.astype(H.dtype), bb, jnp.asarray(mask))
+        return head_fn(H, E.astype(H.dtype), bb, jnp.asarray(mask))
 
     yq = encode(b["q_tokens"], b["q_mask"])
     yd = encode(b["d_tokens"], b["d_mask"])
@@ -98,7 +101,7 @@ def run(csv: bool = True):
         jax.block_until_ready(state)
         dt = time.perf_counter() - t0
         steps_per_s = (STEPS - 3) / dt
-        acc = _retrieval_acc(state["params"], cfg, head)
+        acc = _retrieval_acc(state["params"], cfg)
         rows.append((head, batch, STEPS, round(steps_per_s, 2),
                      round(losses[2], 3), round(losses[-1], 3),
                      round(acc, 3)))

@@ -29,7 +29,6 @@ Usage:
 
 import argparse
 import dataclasses
-import functools
 import json
 import sys
 from typing import Any, Dict, Optional, Tuple
@@ -38,12 +37,12 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import set_mesh
 from repro.configs import get_config
 from repro.configs.base import RecSysConfig, TransformerConfig
 from repro.configs.specs import cell_spec
-from repro.core.sharded import (sharded_flops_reg, sharded_infonce,
-                                sharded_sparton_head)
-from repro.core.lm_head import lm_head_sparton
+from repro.core.head_api import make_head
+from repro.core.sharded import sharded_flops_reg, sharded_infonce
 from repro.launch import hlo_analysis as hlo
 from repro.launch.mesh import batch_axes, make_production_mesh
 from repro.launch.sharding import batch_axes_for, transformer_param_specs
@@ -72,7 +71,7 @@ class Cost:
 
 
 def _measure(fn, args_abs, mesh, static_argnums=()) -> Cost:
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         compiled = jax.jit(fn).lower(*args_abs).compile()
     flops, byts = hlo.cost_analysis_terms(compiled)
     coll = hlo.parse_collectives(compiled.as_text())
@@ -183,18 +182,16 @@ def _probe_head_loss(cfg: TransformerConfig, mesh, pairs_local_total: int,
         n_shards *= mesh.shape[ax]
     b_local = max(1, pairs_local_total // n_shards)
 
+    # The probe always counts the pure-JAX scan body (pallas_call has
+    # no cost_analysis), with the scans fully unrolled for exact totals.
+    spec = cfg.head_spec(impl="sparton", unroll=n_tiles,
+                         bwd_batch_chunk=max(8, b_local))
     if vocab_ok:
-        head = sharded_sparton_head(
-            mesh, batch_axes=baxes, vocab_tile=cfg.head_vocab_tile,
-            logit_softcap=cfg.final_logit_softcap, unroll=n_tiles,
-            bwd_batch_chunk=max(8, b_local))
+        head = make_head(spec, mesh=mesh, batch_axes=baxes)
         infonce = sharded_infonce(mesh, batch_axes=baxes)
         flops_r = sharded_flops_reg(mesh, batch_axes=baxes)
     else:
-        head = functools.partial(
-            lm_head_sparton, vocab_tile=cfg.head_vocab_tile,
-            logit_softcap=cfg.final_logit_softcap, unroll=n_tiles,
-            bwd_batch_chunk=max(8, b_local))
+        head = make_head(spec)
         infonce = infonce_loss
         flops_r = flops_regularizer
 

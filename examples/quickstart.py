@@ -1,9 +1,9 @@
-"""Quickstart: the Sparton head as a drop-in JAX module.
+"""Quickstart: the Sparton head through the unified head API.
 
-Shows the paper's core contribution in 40 lines: encode a batch of
-token sequences into sparse lexical vectors with the fused,
-memory-lean LM head — and differentiate through it with O(B*V)
-residuals instead of O(B*S*V).
+The paper's core contribution (Eq. 1) behind one seam: a ``HeadSpec``
+describes the head, a registry holds the backends (naive / tiled /
+sparton / kernel), and ``make_head`` returns one canonical callable —
+pure JAX or Pallas, single-device or vocab-sharded, same call.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,8 +11,8 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import jax
 import jax.numpy as jnp
 
-from repro.core.lm_head import (lm_head_naive, lm_head_sparton,
-                                sparton_forward_with_indices)
+from repro.core.head_api import HeadSpec, available_impls, make_head
+from repro.core.lm_head import sparton_forward_with_indices
 
 B, S, D, V = 4, 64, 128, 30522  # bert-base-uncased vocabulary
 
@@ -23,9 +23,13 @@ E = jax.random.normal(ke, (V, D)) * 0.05      # vocab embedding matrix
 b = jax.random.normal(kb, (V,)) * 0.05        # head bias
 mask = (jax.random.uniform(km, (B, S)) > 0.1).astype(jnp.int32)
 
-# --- forward: sparse lexical reps, identical to the naive head -------
-y_sparton = lm_head_sparton(H, E, b, mask)
-y_naive = lm_head_naive(H, E, b, mask)
+# --- one spec, every backend ------------------------------------------
+print("registered head impls:", available_impls())
+spec = HeadSpec(impl="sparton", vocab_tile=4096)
+head = make_head(spec)
+
+y_sparton = head(H, E, b, mask)
+y_naive = make_head(spec.replace(impl="naive"))(H, E, b, mask)
 print("output shape:", y_sparton.shape)
 print("max |sparton - naive|:",
       float(jnp.max(jnp.abs(y_sparton - y_naive))))
@@ -34,9 +38,18 @@ print(f"active vocab dims per example: {nnz:.0f} / {V} "
       "(untrained weights are dense; the FLOPS regularizer induces "
       "sparsity during training — see examples/train_splade.py)")
 
+# --- the Pallas kernel is just another registry entry -----------------
+# (interpret=True runs the kernel body through the Pallas interpreter
+# on CPU; on TPU the same spec compiles to Mosaic.)
+kernel_head = make_head(spec.replace(impl="kernel", interpret=True,
+                                     block_b=4, block_s=64, block_v=2048))
+y_kernel = kernel_head(H, E, b, mask)
+print("max |kernel - sparton|:",
+      float(jnp.max(jnp.abs(y_kernel - y_sparton))))
+
 # --- the memory story: residuals are (y, i_max), not (B, S, V) --------
 def contrastive_ish_loss(H, E, b):
-    y = lm_head_sparton(H, E, b, mask)
+    y = head(H, E, b, mask)
     return jnp.sum(y * y)
 
 grads = jax.grad(contrastive_ish_loss, argnums=(0, 1, 2))(H, E, b)

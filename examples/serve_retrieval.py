@@ -16,12 +16,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.lm_head import lm_head_sparton
 from repro.kernels.topk_score import topk_score
 from repro.launch.steps import init_state, streaming_topk
-from repro.models import transformer as tfm
 from repro.runtime.serving import (BatchedEncoder, BatchPolicy, Request,
-                                   ServingLoop, retrieve_topk)
+                                   ServingLoop, make_config_encoder,
+                                   retrieve_topk)
 
 CORPUS, QUERIES, K = 512, 24, 5
 
@@ -29,12 +28,10 @@ cfg = get_config("splade_bert").SMOKE
 state, _ = init_state("splade_bert", jax.random.PRNGKey(0), smoke=True)
 params = state["params"]
 
-
-@jax.jit
-def encode(tokens, mask):
-    H, _ = tfm.forward_hidden(params, cfg, tokens, mask)
-    E, b = tfm.head_weights(params, cfg)
-    return lm_head_sparton(H, E.astype(H.dtype), b, mask)
+# The encoder comes from the config through the unified head factory
+# (core.head_api.make_head) — head_impl, blocks and logit softcap are
+# all taken from cfg instead of hardcoding one implementation here.
+encode = make_config_encoder(params, cfg)
 
 
 rng = np.random.default_rng(0)

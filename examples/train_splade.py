@@ -66,19 +66,15 @@ def main():
     assert losses[-1][1] < losses[0][1], "training did not reduce loss"
 
     # quick retrieval sanity: does query i retrieve doc i?
-    from repro.core.lm_head import lm_head_sparton
-    from repro.models import transformer as tfm
+    from repro.runtime.serving import make_config_encoder
     gen = lsr_pair_batches(batch=32, q_len=args.seq_len,
                            d_len=args.seq_len, vocab=cfg.vocab_size,
                            seed=123)
     b = next(gen)
+    enc = make_config_encoder(state["params"], cfg)
 
     def encode(toks, mask):
-        H, _ = tfm.forward_hidden(state["params"], cfg,
-                                  jnp.asarray(toks), jnp.asarray(mask))
-        E, bb = tfm.head_weights(state["params"], cfg)
-        return lm_head_sparton(H, E.astype(H.dtype), bb,
-                               jnp.asarray(mask))
+        return enc(jnp.asarray(toks), jnp.asarray(mask))
 
     yq = encode(b["q_tokens"], b["q_mask"])
     yd = encode(b["d_tokens"], b["d_mask"])

@@ -69,7 +69,11 @@ class TransformerConfig:
     grad_accum_steps: int = 1
     # LSR head (the paper's technique)
     lsr_head: bool = True          # train objective: LSR contrastive
-    head_impl: str = "jax"         # "jax" (streaming scan) | "kernel" (Pallas)
+    # Head backend, resolved against the head_api registry by
+    # ``head_spec()``: "jax" is the legacy alias for "sparton"; any
+    # registered name ("naive" | "tiled" | "sparton" | "kernel" | ...)
+    # is valid.
+    head_impl: str = "jax"
     # Pallas head block sizes. None = resolve per call shape via the
     # autotuner (kernels/autotune.py): cached measured winner if one
     # exists, else the analytic heuristic. Ints pin the blocks.
@@ -99,6 +103,31 @@ class TransformerConfig:
         return blocks_for_config(self.vocab_size, self.d_model, batch,
                                  seq_len, dtype or self.compute_dtype,
                                  pinned=pinned)
+
+    def head_spec(self, **overrides):
+        """The config's head as a ``HeadSpec`` for ``make_head``.
+
+        The single translation point from config fields to the unified
+        head API: ``head_impl`` ("jax" → "sparton"), pinned/auto Pallas
+        blocks, the streaming tile and ``final_logit_softcap`` all land
+        in one spec. ``overrides`` replace individual fields (e.g.
+        ``head_spec(impl="kernel")``).
+        """
+        from repro.core.head_api import HeadSpec
+
+        spec = HeadSpec(
+            impl=self.head_impl,
+            block_b=self.head_block_b,
+            block_s=self.head_block_s,
+            block_v=self.head_block_v,
+            vocab_tile=self.head_vocab_tile,
+            logit_softcap=self.final_logit_softcap,
+        )
+        if overrides:
+            spec = spec.replace(**overrides)
+        if spec.impl == "jax":
+            spec = spec.replace(impl="sparton")
+        return spec
 
     @property
     def is_moe(self) -> bool:

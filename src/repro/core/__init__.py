@@ -1,5 +1,17 @@
-"""Sparton LM head — the paper's core contribution (pure JAX + sharded)."""
+"""Sparton LM head — the paper's core contribution (pure JAX + sharded).
 
+``head_api`` is the unified entry point: ``make_head(HeadSpec(...),
+mesh=...)`` returns one canonical callable for every backend
+(naive/tiled/sparton/kernel) and sharding (DESIGN.md §6).
+"""
+
+from repro.core.head_api import (
+    HeadSpec,
+    available_impls,
+    get_head_impl,
+    make_head,
+    register_head_impl,
+)
 from repro.core.lm_head import (
     lm_head,
     lm_head_naive,

@@ -1,0 +1,272 @@
+"""Unified head API — one spec, one registry, one factory (DESIGN.md §6).
+
+The paper contributes a single operator (Eq. 1), but the repo grew four
+divergent surfaces for it: the pure-JAX ladder in ``core.lm_head``, the
+Pallas wrapper in ``kernels.ops`` (with its own kwarg spellings), the
+shard_map factory in ``core.sharded``, and per-call-site if/else
+ladders in ``launch``/``benchmarks``/``examples``. This module is the
+single seam where "which impl, which blocks, which mesh" is decided:
+
+* ``HeadSpec``            — frozen, hashable description of a head
+  configuration (impl name, Pallas blocks, scan tile, softcap, ...).
+* ``register_head_impl``  — registry of backends with ONE normalized
+  calling convention ``fn(H, E, b, mask, *, spec) -> Y``. ``naive``,
+  ``tiled``, ``sparton`` (pure JAX) and ``kernel`` (Pallas) ship
+  registered; new backends (two-pass backward, per-kernel blocks) are
+  one ``register_head_impl`` call, not another if/else.
+* ``make_head(spec, mesh=...)`` — factory returning one canonical
+  callable ``head(H, E, b=None, mask=None) -> Y`` regardless of
+  backend or sharding. With a mesh, the *selected impl* runs inside
+  the vocab-sharded ``shard_map`` body — including the Pallas kernel,
+  whose block sizes resolve against the **local** vocab shard
+  ``V // n_model`` (the shapes the kernel actually sees), so the
+  autotune cache is keyed per shard, not per global vocab.
+
+Sharding contract (global view), identical to ``core.sharded``:
+
+    H    (B, S, D)  — batch over ``batch_axes``, replicated over model
+    E    (V, D)     — rows over ``axis_name``
+    b    (V,)       — over ``axis_name``
+    Y    (B, V)     — batch over ``batch_axes``, vocab over ``axis_name``
+
+The streaming max is per-vocab-column independent, so the sharded
+forward needs zero collectives and ``∇E`` is shard-local; the single
+``∇H`` psum over ``axis_name`` is inserted by shard_map's transpose.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core import lm_head as _lm
+
+Array = jax.Array
+
+# Registered backend convention: fn(H, E, b, mask, *, spec) -> (B, V).
+# H (B, S, D); E (V, D); b (V,) f32; mask (B, S) int32/bool — all
+# concrete (make_head fills the b/mask defaults before dispatch).
+HeadFn = Callable[..., Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class HeadSpec:
+    """Everything needed to build a Sparton head, in one hashable value.
+
+    ``impl``            registry name: naive | tiled | sparton | kernel
+                        (plus anything registered at runtime).
+    ``block_b/s/v``     Pallas kernel blocks; None = autotuner cache /
+                        heuristic for the call shape (local shard shape
+                        under a mesh). Ignored by the pure-JAX impls.
+    ``vocab_tile``      streaming-scan tile of the pure-JAX impls.
+    ``logit_softcap``   gemma-2 style ``c * tanh(x / c)`` on the raw
+                        logits; the ONE canonical spelling (the legacy
+                        ``softcap=`` kwarg is deprecated).
+    ``out_dtype``       output dtype; None = H.dtype.
+    ``interpret``       Pallas interpreter toggle; None = auto
+                        (interpret off-TPU, compiled on TPU).
+    ``bwd_batch_chunk`` batch chunking of the pure-JAX backward scan.
+    ``unroll``          scan unroll of the pure-JAX impls (cost probes).
+    """
+
+    impl: str = "sparton"
+    block_b: Optional[int] = None
+    block_s: Optional[int] = None
+    block_v: Optional[int] = None
+    vocab_tile: int = 4096
+    logit_softcap: Optional[float] = None
+    out_dtype: Optional[str] = None
+    interpret: Optional[bool] = None
+    bwd_batch_chunk: int = 8
+    unroll: int = 1
+
+    def replace(self, **kw) -> "HeadSpec":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, HeadFn] = {}
+
+
+def register_head_impl(name: str, fn: HeadFn) -> None:
+    """Register (or override) a head backend under ``name``.
+
+    ``fn(H, E, b, mask, *, spec: HeadSpec) -> (B, V)`` with concrete
+    ``b``/``mask`` — the factory normalizes the optional arguments
+    before dispatch, so backends never see ``None``.
+    """
+    _REGISTRY[name] = fn
+
+
+def available_impls() -> Tuple[str, ...]:
+    """Registered backend names (the user-facing impl enumeration)."""
+    return tuple(sorted(_REGISTRY))
+
+
+def get_head_impl(name: str) -> HeadFn:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown head impl {name!r}; one of {list(available_impls())}"
+        ) from None
+
+
+def normalize_softcap_kwarg(
+    logit_softcap: Optional[float],
+    softcap: Optional[float],
+    where: str,
+) -> Optional[float]:
+    """Fold the deprecated ``softcap=`` spelling into ``logit_softcap``."""
+    if softcap is None:
+        return logit_softcap
+    warnings.warn(
+        f"{where}: the 'softcap' kwarg is deprecated; use "
+        "'logit_softcap' (one normalized name across every head "
+        "surface)", DeprecationWarning, stacklevel=3)
+    if logit_softcap is not None and logit_softcap != softcap:
+        raise ValueError(
+            f"{where}: conflicting logit_softcap={logit_softcap!r} and "
+            f"deprecated softcap={softcap!r}")
+    return softcap
+
+
+def _cast_out(y: Array, H: Array, spec: HeadSpec) -> Array:
+    return y.astype(jnp.dtype(spec.out_dtype) if spec.out_dtype else H.dtype)
+
+
+# ---------------------------------------------------------------------------
+# built-in backends
+# ---------------------------------------------------------------------------
+
+def _naive_impl(H, E, b, mask, *, spec: HeadSpec) -> Array:
+    y = _lm.lm_head_naive(H, E, b, mask, logit_softcap=spec.logit_softcap)
+    return _cast_out(y, H, spec)
+
+
+def _tiled_impl(H, E, b, mask, *, spec: HeadSpec) -> Array:
+    y = _lm.lm_head_tiled(H, E, b, mask, vocab_tile=spec.vocab_tile,
+                          logit_softcap=spec.logit_softcap)
+    return _cast_out(y, H, spec)
+
+
+def _sparton_impl(H, E, b, mask, *, spec: HeadSpec) -> Array:
+    y = _lm.lm_head_sparton(
+        H, E, b, mask, vocab_tile=spec.vocab_tile,
+        logit_softcap=spec.logit_softcap,
+        bwd_batch_chunk=spec.bwd_batch_chunk, unroll=spec.unroll)
+    return _cast_out(y, H, spec)
+
+
+def _kernel_impl(H, E, b, mask, *, spec: HeadSpec) -> Array:
+    # Lazy import: keep core importable without pulling Pallas until a
+    # kernel head is actually built.
+    from repro.kernels.ops import sparton_head
+
+    interpret = spec.interpret
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    # Block resolution happens here, against the shapes this call sees:
+    # under shard_map that is the LOCAL vocab shard (V // n_model), so
+    # the autotune cache key matches the shard the kernel runs on.
+    y = sparton_head(
+        H, E, b, mask,
+        block_b=spec.block_b, block_s=spec.block_s, block_v=spec.block_v,
+        logit_softcap=spec.logit_softcap, interpret=interpret,
+        out_dtype=jnp.dtype(spec.out_dtype) if spec.out_dtype else None)
+    return y
+
+
+register_head_impl("naive", _naive_impl)
+register_head_impl("tiled", _tiled_impl)
+register_head_impl("sparton", _sparton_impl)
+register_head_impl("kernel", _kernel_impl)
+
+
+# ---------------------------------------------------------------------------
+# factory
+# ---------------------------------------------------------------------------
+
+def _with_defaults(H: Array, E: Array, b: Optional[Array],
+                   mask: Optional[Array]) -> Tuple[Array, Array]:
+    if b is None:
+        b = jnp.zeros((E.shape[0],), jnp.float32)
+    if mask is None:
+        mask = jnp.ones(H.shape[:2], jnp.int32)
+    return b, mask
+
+
+def make_head(
+    spec: HeadSpec,
+    mesh: Optional[Mesh] = None,
+    *,
+    axis_name: str = "model",
+    batch_axes: Tuple[str, ...] = ("pod", "data"),
+) -> Callable[..., Array]:
+    """One canonical ``head(H, E, b=None, mask=None) -> Y`` callable.
+
+    Without a mesh: the registered backend, called directly.
+
+    With a mesh: the backend wrapped in the vocab-sharded shard_map
+    body (E/b rows over ``axis_name``, H/Y batch over ``batch_axes``).
+    Vocab divisibility is a property of the *call* (``E.shape[0]``),
+    not the factory, so the returned callable dispatches per call:
+    divisible vocab runs the sharded body; a non-divisible vocab falls
+    back to the unsharded GSPMD-partitionable path — demoting
+    ``impl="kernel"`` to ``"sparton"`` there, because ``pallas_call``
+    has no SPMD partitioning rule outside shard_map.
+    """
+    impl_fn = get_head_impl(spec.impl)
+
+    if mesh is None:
+        def head(H, E, b=None, mask=None):
+            b, mask = _with_defaults(H, E, b, mask)
+            return impl_fn(H, E, b, mask, spec=spec)
+        return head
+
+    n_shard = mesh.shape[axis_name]
+
+    def body(h, e, b_, m_):
+        return impl_fn(h, e, b_, m_, spec=spec)
+
+    sharded = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(batch_axes, None, None),   # H — replicated over model
+            P(axis_name, None),          # E — vocab rows sharded
+            P(axis_name),                # b
+            P(batch_axes, None),         # mask
+        ),
+        out_specs=P(batch_axes, axis_name),
+        check_vma=False,  # custom_vjp inside: skip replication check
+    )
+
+    if spec.impl == "kernel":
+        # pallas_call only partitions via shard_map; the unsharded
+        # fallback must stay GSPMD-lowerable under the caller's jit.
+        fallback_spec = spec.replace(impl="sparton")
+        fallback_fn = get_head_impl("sparton")
+    else:
+        fallback_spec, fallback_fn = spec, impl_fn
+
+    def head(H, E, b=None, mask=None):
+        b, mask = _with_defaults(H, E, b, mask)
+        if E.shape[0] % n_shard == 0:
+            return sharded(H, E, b, mask)
+        warnings.warn(
+            f"make_head: vocab {E.shape[0]} not divisible by "
+            f"{n_shard} {axis_name!r} shards — running the unsharded "
+            f"{fallback_spec.impl!r} head under GSPMD")
+        return fallback_fn(H, E, b, mask, spec=fallback_spec)
+
+    return head

@@ -320,6 +320,10 @@ def sparton_forward_with_indices(
     return y.astype(H.dtype), i_max
 
 
+# Legacy table of the pure-JAX impls. Kept for external callers; the
+# canonical enumeration (which also includes the Pallas ``kernel``
+# backend and anything registered at runtime) is
+# ``repro.core.head_api.available_impls()``.
 IMPLEMENTATIONS = {
     "naive": lm_head_naive,
     "tiled": lm_head_tiled,
@@ -327,8 +331,23 @@ IMPLEMENTATIONS = {
 }
 
 
-def lm_head(H, E, b=None, mask=None, *, impl="sparton", **kw):
-    """Dispatch across LM-head implementations (see module docstring)."""
-    if impl not in IMPLEMENTATIONS:
-        raise ValueError(f"unknown impl {impl!r}; one of {list(IMPLEMENTATIONS)}")
-    return IMPLEMENTATIONS[impl](H, E, b, mask, **kw)
+def lm_head(H, E, b=None, mask=None, *, impl="sparton", softcap=None, **kw):
+    """Deprecation shim over the unified head API (``core.head_api``).
+
+    Dispatches through the registry — so ``impl="kernel"`` (and any
+    runtime-registered backend) works here too, and an unknown name
+    lists the live registry contents. Keyword arguments are the
+    ``HeadSpec`` fields; irrelevant ones are ignored by the backend
+    (e.g. ``vocab_tile`` for ``naive``). Prefer
+    ``make_head(HeadSpec(...))`` in new code: it also handles meshes.
+    """
+    from repro.core.head_api import (HeadSpec, _with_defaults,
+                                     get_head_impl,
+                                     normalize_softcap_kwarg)
+
+    kw["logit_softcap"] = normalize_softcap_kwarg(
+        kw.get("logit_softcap"), softcap, "lm_head")
+    spec = HeadSpec(impl=impl, **kw)
+    fn = get_head_impl(impl)
+    b, mask = _with_defaults(H, E, b, mask)
+    return fn(H, E, b, mask, spec=spec)

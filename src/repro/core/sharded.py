@@ -26,15 +26,12 @@ a mesh. The train step in ``launch/train.py`` composes them under
 
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.compat import axis_size, shard_map
-
-from repro.core.lm_head import lm_head_sparton
 
 Array = jax.Array
 
@@ -57,33 +54,20 @@ def sharded_sparton_head(
       b    (V,)       — over ``axis_name``
       Y    (B, V)     — batch over ``batch_axes``, vocab over ``axis_name``
 
-    The body is the *pure-JAX* sparton core (custom_vjp): under
-    shard_map each device differentiates its local head; jax transposes
-    the psum-free forward into a psum-free ∇E and XLA inserts the
-    single ∇H psum automatically via the partitioner when H's gradient
-    is reduced across the model axis.
+    Thin wrapper over the unified factory: equivalent to
+    ``make_head(HeadSpec(impl="sparton", ...), mesh=mesh, ...)``. The
+    shard_map body construction (and the kernel-capable variant) lives
+    in ``core.head_api``; each device differentiates its local head,
+    ∇E stays shard-local, and shard_map's transpose inserts the single
+    ∇H psum over ``axis_name``.
     """
-    batch_spec = P(batch_axes)
+    from repro.core.head_api import HeadSpec, make_head
 
-    def body(h, e, b, mask):
-        return lm_head_sparton(
-            h, e, b, mask,
-            vocab_tile=vocab_tile, logit_softcap=logit_softcap,
-            unroll=unroll, bwd_batch_chunk=bwd_batch_chunk,
-        )
-
-    return shard_map(
-        body,
-        mesh=mesh,
-        in_specs=(
-            P(batch_axes, None, None),   # H
-            P(axis_name, None),          # E
-            P(axis_name),                # b
-            P(batch_axes, None),         # mask
-        ),
-        out_specs=P(batch_axes, axis_name),
-        check_vma=False,  # custom_vjp inside: skip replication check
-    )
+    spec = HeadSpec(impl="sparton", vocab_tile=vocab_tile,
+                    logit_softcap=logit_softcap, unroll=unroll,
+                    bwd_batch_chunk=bwd_batch_chunk)
+    return make_head(spec, mesh=mesh, axis_name=axis_name,
+                     batch_axes=batch_axes)
 
 
 def sharded_similarity(

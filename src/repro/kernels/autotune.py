@@ -335,7 +335,7 @@ def autotune_blocks(
                     y = sparton_head(
                         H, E, bias, mask, block_b=_blk[0],
                         block_s=_blk[1], block_v=_blk[2],
-                        softcap=softcap, interpret=interpret)
+                        logit_softcap=softcap, interpret=interpret)
                     return jnp.sum(y * y)
                 return jax.grad(loss, argnums=(0, 1, 2))(H, E, bias)
             fn = fwd_bwd

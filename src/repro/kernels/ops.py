@@ -86,15 +86,27 @@ def sparton_head(
     block_b: Optional[int] = None,
     block_s: Optional[int] = None,
     block_v: Optional[int] = None,
-    softcap: Optional[float] = None,
+    logit_softcap: Optional[float] = None,
     interpret: bool = False,
+    out_dtype: Optional[jnp.dtype] = None,
+    softcap: Optional[float] = None,
 ) -> jax.Array:
     """Convenience entry point with optional bias/mask (kernel-backed).
 
     With the default ``block_* = None`` the block sizes are resolved
-    once here — cache hit or heuristic — so forward and backward are
-    guaranteed to agree even if the autotune cache changes mid-step.
+    once here — cache hit or heuristic, keyed on the shapes of THIS
+    call (under shard_map: the local vocab shard) — so forward and
+    backward are guaranteed to agree even if the autotune cache changes
+    mid-step.
+
+    ``softcap`` is the deprecated spelling of ``logit_softcap`` (kept
+    so pre-registry callers don't break). Prefer building heads through
+    ``repro.core.head_api.make_head``.
     """
+    from repro.core.head_api import normalize_softcap_kwarg
+
+    logit_softcap = normalize_softcap_kwarg(logit_softcap, softcap,
+                                            "sparton_head")
     B, S, D = H.shape
     V = E.shape[0]
     if block_b is None or block_s is None or block_v is None:
@@ -107,5 +119,6 @@ def sparton_head(
     if mask is None:
         mask = jnp.ones((B, S), jnp.int32)
     return sparton_lm_head_kernel(
-        H, E, b, mask, block_b, block_s, block_v, softcap, interpret, None
+        H, E, b, mask, block_b, block_s, block_v, logit_softcap,
+        interpret, out_dtype
     )

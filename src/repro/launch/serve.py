@@ -16,7 +16,13 @@ def main(argv=None) -> int:
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--corpus", type=int, default=1000)
     ap.add_argument("--topk", type=int, default=10)
+    ap.add_argument("--head-impl", default=None,
+                    help="override the config's head backend (any "
+                         "registered impl; see "
+                         "repro.core.head_api.available_impls)")
     args = ap.parse_args(argv)
+
+    import dataclasses
 
     import jax
     import jax.numpy as jnp
@@ -24,21 +30,21 @@ def main(argv=None) -> int:
 
     from repro.configs import get_config
     from repro.launch.steps import init_state
-    from repro.models import transformer as tfm
-    from repro.core.lm_head import lm_head_sparton
     from repro.runtime.serving import (BatchedEncoder, BatchPolicy, Request,
-                                       ServingLoop, retrieve_topk)
+                                       ServingLoop, make_config_encoder,
+                                       retrieve_topk)
 
     mod = get_config(args.arch)
     cfg = mod.SMOKE
+    if args.head_impl:
+        cfg = dataclasses.replace(cfg, head_impl=args.head_impl)
     state, _ = init_state(args.arch, jax.random.PRNGKey(0), smoke=True)
     params = state["params"]
 
-    @jax.jit
-    def encode(tokens, mask):
-        Hs, _ = tfm.forward_hidden(params, cfg, tokens, mask)
-        E, b = tfm.head_weights(params, cfg)
-        return lm_head_sparton(Hs, E.astype(Hs.dtype), b, mask)
+    # Built from the config via the unified head factory: head_impl and
+    # final_logit_softcap are honored (they used to be silently dropped
+    # here — a live correctness bug for gemma2-style softcapped configs).
+    encode = make_config_encoder(params, cfg)
 
     loop = ServingLoop(BatchedEncoder(
         encode, policy=BatchPolicy(max_batch=16, max_wait_s=0.002)))

@@ -33,9 +33,8 @@ from repro.configs import get_config
 from repro.configs.base import (DimeNetConfig, RecSysConfig,
                                 TransformerConfig)
 from repro.configs.specs import CellSpec
-from repro.core.lm_head import lm_head_sparton
-from repro.core.sharded import (sharded_flops_reg, sharded_infonce,
-                                sharded_sparton_head)
+from repro.core.head_api import make_head
+from repro.core.sharded import sharded_flops_reg, sharded_infonce
 from repro.launch.mesh import batch_axes
 from repro.launch.sharding import (batch_axes_for, batch_spec,
                                    dimenet_param_specs, recsys_param_specs,
@@ -69,71 +68,29 @@ def _moe_shard(cfg: TransformerConfig, mesh: Optional[Mesh]):
 
 def _encode_fn(cfg: TransformerConfig, mesh: Optional[Mesh],
                n_batch: int, unroll: bool = False) -> Callable:
-    """(params, tokens, mask) -> (Y, aux). Vocab-sharded when mesh."""
+    """(params, tokens, mask) -> (Y, aux). Vocab-sharded when mesh.
+
+    The head — any registered backend, Pallas kernel included — comes
+    from the unified factory: ``make_head`` puts the selected impl
+    inside the vocab-sharded shard_map body when a mesh is given (with
+    kernel blocks resolved per *local* vocab shard) and handles the
+    non-divisible-vocab fallback itself.
+    """
     moe_shard = _moe_shard(cfg, mesh)
     layer_unroll = cfg.n_layers if unroll else 1
-    if mesh is not None and cfg.vocab_size % mesh.shape["model"] == 0:
-        if cfg.head_impl == "kernel":
-            import warnings
-            warnings.warn(
-                "head_impl='kernel' requested but the vocab-sharded "
-                "head only has a pure-JAX body yet — using the "
-                "sharded scan head (see ROADMAP: port the Pallas "
-                "kernel into the shard_map body)")
-        baxes = batch_axes_for(mesh, n_batch)
-        head = sharded_sparton_head(
-            mesh, batch_axes=baxes, vocab_tile=cfg.head_vocab_tile,
-            logit_softcap=cfg.final_logit_softcap)
-
-        def encode(params, tokens, mask):
-            Hs, aux = tfm.forward_hidden(params, cfg, tokens, mask,
-                                         moe_shard=moe_shard,
-                                         unroll=layer_unroll)
-            E, b = tfm.head_weights(params, cfg)
-            y = head(Hs, E.astype(Hs.dtype), b, mask)
-            return y, aux
-        return encode
-
-    if cfg.head_impl == "kernel" and mesh is not None:
-        # Non-divisible vocab with a live mesh: pallas_call has no SPMD
-        # partitioning rule, so the kernel head must not end up inside
-        # a sharded jit — fall through to the GSPMD-partitionable
-        # pure-JAX head, loudly.
-        import warnings
-        warnings.warn(
-            "head_impl='kernel' requested under a mesh — the Pallas "
-            "head is single-device; using the pure-JAX scan head")
-
-    if cfg.head_impl == "kernel" and mesh is None:
-        # Pallas kernel head (single-device path): block sizes come
-        # from the config — pinned ints or the autotuner's choice for
-        # this run shape (configs.base.TransformerConfig.head_blocks).
-        from repro.kernels.ops import sparton_head
-
-        interpret = jax.default_backend() != "tpu"
-
-        def encode(params, tokens, mask):
-            Hs, aux = tfm.forward_hidden(params, cfg, tokens, mask,
-                                         moe_shard=moe_shard,
-                                         unroll=layer_unroll)
-            E, b = tfm.head_weights(params, cfg)
-            bb, bs, bv = cfg.head_blocks(Hs.shape[0], Hs.shape[1],
-                                         str(Hs.dtype))
-            y = sparton_head(Hs, E.astype(Hs.dtype), b, mask,
-                             block_b=bb, block_s=bs, block_v=bv,
-                             softcap=cfg.final_logit_softcap,
-                             interpret=interpret)
-            return y, aux
-        return encode
+    spec = cfg.head_spec()
+    if mesh is not None:
+        head = make_head(spec, mesh=mesh,
+                         batch_axes=batch_axes_for(mesh, n_batch))
+    else:
+        head = make_head(spec)
 
     def encode(params, tokens, mask):
         Hs, aux = tfm.forward_hidden(params, cfg, tokens, mask,
                                      moe_shard=moe_shard,
                                      unroll=layer_unroll)
         E, b = tfm.head_weights(params, cfg)
-        y = lm_head_sparton(Hs, E.astype(Hs.dtype), b, mask,
-                            vocab_tile=cfg.head_vocab_tile,
-                            logit_softcap=cfg.final_logit_softcap)
+        y = head(Hs, E.astype(Hs.dtype), b, mask)
         return y, aux
     return encode
 

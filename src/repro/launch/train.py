@@ -43,8 +43,11 @@ def main(argv=None) -> int:
                     help="set XLA latency-hiding scheduler flags")
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--lr", type=float, default=2e-4)
-    ap.add_argument("--head-impl", choices=("jax", "kernel"), default=None,
-                    help="LSR head implementation (default: config's)")
+    ap.add_argument("--head-impl", default=None,
+                    help="LSR head implementation (default: config's; "
+                         "any registered backend — validated against "
+                         "repro.core.head_api.available_impls after "
+                         "startup so runtime-registered impls work)")
     ap.add_argument("--autotune-head", action="store_true",
                     help="measure Pallas head block candidates for this "
                          "run shape and persist the winner before "
@@ -75,6 +78,12 @@ def main(argv=None) -> int:
 
     if isinstance(cfg, TransformerConfig) and args.head_impl:
         import dataclasses
+
+        from repro.core.head_api import available_impls
+        if args.head_impl not in ("jax",) + available_impls():
+            raise SystemExit(
+                f"--head-impl {args.head_impl!r}: unknown head impl; "
+                f"one of {('jax',) + available_impls()}")
         cfg = dataclasses.replace(cfg, head_impl=args.head_impl)
 
     if isinstance(cfg, TransformerConfig) and args.autotune_head:

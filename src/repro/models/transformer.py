@@ -28,7 +28,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import TransformerConfig
-from repro.core.lm_head import lm_head_sparton, lm_head_naive, lm_head_tiled
 from repro.models.attention import (apply_rope, chunked_attention,
                                     decode_attention)
 from repro.models.moe import (init_moe_params, moe_ffn,
@@ -243,29 +242,23 @@ def lsr_encode(
     tokens: Array,
     mask: Array,
     *,
-    head_impl: str = "sparton",
+    head_impl: Optional[str] = None,
 ) -> Tuple[Array, Array]:
     """SPLADE-style sparse encoding: backbone + Sparton head (Eq. 1).
 
-    Returns ((B, V) sparse lexical reps, aux_loss).
+    The head is built through the unified registry (``core.head_api``),
+    so ``head_impl`` accepts any registered backend — including
+    ``"kernel"`` — and defaults to the config's choice. Returns
+    ((B, V) sparse lexical reps, aux_loss).
     """
+    from repro.core.head_api import make_head
+
+    spec = cfg.head_spec() if head_impl is None \
+        else cfg.head_spec(impl=head_impl)
+    head = make_head(spec)
     Hs, aux = forward_hidden(params, cfg, tokens, mask)
     E, b = head_weights(params, cfg)
-    E = E.astype(Hs.dtype)
-    if head_impl == "sparton":
-        y = lm_head_sparton(
-            Hs, E, b, mask,
-            vocab_tile=cfg.head_vocab_tile,
-            logit_softcap=cfg.final_logit_softcap,
-        )
-    elif head_impl == "naive":
-        y = lm_head_naive(Hs, E, b, mask,
-                          logit_softcap=cfg.final_logit_softcap)
-    elif head_impl == "tiled":
-        y = lm_head_tiled(Hs, E, b, mask, vocab_tile=cfg.head_vocab_tile,
-                          logit_softcap=cfg.final_logit_softcap)
-    else:
-        raise ValueError(f"unknown head_impl {head_impl!r}")
+    y = head(Hs, E.astype(Hs.dtype), b, mask)
     return y, aux
 
 

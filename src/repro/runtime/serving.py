@@ -30,6 +30,31 @@ import numpy as np
 Array = jax.Array
 
 
+def make_config_encoder(params: Any, cfg: Any, *, spec: Any = None,
+                        mesh: Any = None, jit: bool = True
+                        ) -> Callable[[Array, Array], Array]:
+    """Canonical ``(tokens, mask) -> (B, V)`` encode fn from a config.
+
+    The single serving-side seam over the unified head API: the head is
+    built by ``make_head`` from ``cfg.head_spec()`` (or an explicit
+    ``spec``), so ``head_impl``, pinned/autotuned blocks and
+    ``final_logit_softcap`` are all honored — serving paths must not
+    hardcode a head implementation.
+    """
+    from repro.core.head_api import make_head
+    from repro.models import transformer as tfm
+
+    head = make_head(spec if spec is not None else cfg.head_spec(),
+                     mesh=mesh)
+
+    def encode(tokens: Array, mask: Array) -> Array:
+        Hs, _ = tfm.forward_hidden(params, cfg, tokens, mask)
+        E, b = tfm.head_weights(params, cfg)
+        return head(Hs, E.astype(Hs.dtype), b, mask)
+
+    return jax.jit(encode) if jit else encode
+
+
 @dataclasses.dataclass
 class Request:
     uid: int

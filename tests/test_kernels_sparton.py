@@ -221,7 +221,7 @@ def test_custom_vjp_grads_with_softcap():
 
     def loss_kernel(H):
         y = sparton_head(H, E, b, mask, block_b=2, block_s=16,
-                         block_v=32, softcap=4.0, interpret=True)
+                         block_v=32, logit_softcap=4.0, interpret=True)
         return jnp.sum(y * y)
 
     def loss_ref(H):
