@@ -1,0 +1,124 @@
+"""Retrieval-path benchmark: dense einsum vs fused streaming kernel vs
+inverted impact index, over the same synthetic LSR corpus.
+
+The three paths behind ``repro.retrieval.retrieve`` score identical
+inputs (the corpus is generated as SparseReps; the dense matrix is its
+densification), so the comparison isolates the scoring machinery:
+
+* ``dense``     — (B, N) einsum + top_k over the dense (N, V) matrix
+                  (the memory-hungry fallback; corpus bytes = N*V*4);
+* ``streaming`` — the ``kernels.topk_score`` Pallas kernel (same dense
+                  corpus, but the (B, N) score matrix never exists);
+* ``impact``    — inverted-index segment-sums (corpus bytes = the
+                  postings, O(total nnz)).
+
+Emits ``BENCH_retrieval.json`` with per-method median ms + corpus
+bytes and the cross-method top-k agreement flag, tracked by CI
+alongside ``BENCH_kernels.json``. ``--smoke`` (or ``BENCH_SMOKE=1``)
+shrinks the workload for CI latency; off-TPU the streaming kernel runs
+through the Pallas interpreter, so timings order implementations
+rather than predict hardware (DESIGN.md §5 caveat applies).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._common import time_fn
+from repro.retrieval import build_inverted_index, retrieve, sparsify_topk
+
+# full-size operating point (CPU-feasible stand-in for the paper-scale
+# corpus): 20k docs, 4k vocab, 64 active terms/doc
+FULL = dict(n_docs=20000, vocab=4096, batch=16, k=10, doc_nnz=64,
+            q_nnz=32, block_n=2048)
+SMOKE = dict(n_docs=2000, vocab=1024, batch=4, k=10, doc_nnz=32,
+             q_nnz=16, block_n=512)
+
+
+def _sparse_batch(rng, n, vocab, nnz):
+    """Random non-negative LSR-style reps as a dense matrix."""
+    m = np.zeros((n, vocab), np.float32)
+    rows = np.repeat(np.arange(n), nnz)
+    cols = np.stack([rng.choice(vocab, size=nnz, replace=False)
+                     for _ in range(n)]).ravel()
+    m[rows, cols] = rng.uniform(0.1, 2.0, size=rows.shape[0])
+    return m
+
+
+def run(smoke: bool = False, json_path: str = None):
+    smoke = smoke or os.environ.get("BENCH_SMOKE") == "1"
+    p = SMOKE if smoke else FULL
+    iters = 3 if smoke else 10
+    rng = np.random.default_rng(0)
+
+    q_dense = jnp.asarray(_sparse_batch(rng, p["batch"], p["vocab"],
+                                        p["q_nnz"]))
+    d_dense = jnp.asarray(_sparse_batch(rng, p["n_docs"], p["vocab"],
+                                        p["doc_nnz"]))
+    q_rep = sparsify_topk(q_dense, p["q_nnz"]).block_until_ready()
+    d_rep = sparsify_topk(d_dense, p["doc_nnz"]).block_until_ready()
+    index = build_inverted_index(d_rep, p["vocab"])
+
+    k = p["k"]
+    interpret = jax.default_backend() != "tpu"
+
+    methods = {
+        "dense": (lambda: retrieve(q_dense, d_dense, k, method="dense"),
+                  int(d_dense.nbytes)),
+        "streaming": (lambda: retrieve(
+            q_dense, d_dense, k, method="streaming",
+            block_b=min(8, p["batch"]), block_n=p["block_n"],
+            interpret=interpret), int(d_dense.nbytes)),
+        "impact": (lambda: retrieve(q_rep, index, k, method="impact"),
+                   index.memory_bytes()),
+    }
+
+    record = {
+        "shape": {"N": p["n_docs"], "V": p["vocab"], "B": p["batch"],
+                  "k": k, "doc_nnz": p["doc_nnz"], "q_nnz": p["q_nnz"]},
+        "backend": jax.default_backend(),
+        "interpret": interpret,
+        "methods": {},
+    }
+    ids = {}
+    rows = []
+    for name, (fn, corpus_bytes) in methods.items():
+        t = time_fn(fn, iters=iters)
+        vals, idx = fn()
+        ids[name] = np.asarray(idx)
+        record["methods"][name] = {
+            "median_ms": round(t, 3),
+            "corpus_bytes": corpus_bytes,
+        }
+        rows.append((name, round(t, 2), corpus_bytes))
+
+    agree = bool(
+        np.array_equal(ids["dense"], ids["streaming"])
+        and np.array_equal(ids["dense"], ids["impact"]))
+    record["parity"] = {"topk_ids_equal": agree}
+
+    print("method,median_ms,corpus_bytes")
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    print(f"top-k ids identical across methods: {agree}")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(record, f, indent=2, sort_keys=True)
+        print(f"wrote {json_path}")
+    return record
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized workload")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="emit BENCH_retrieval.json-style record here")
+    a = ap.parse_args()
+    run(smoke=a.smoke, json_path=a.json)

@@ -4,6 +4,7 @@ table sections of EXPERIMENTS.md (between AUTOGEN markers).
 Usage: PYTHONPATH=src python -m benchmarks.report
 """
 
+import glob
 import json
 import os
 import re
@@ -75,6 +76,77 @@ def roofline_table(path: str) -> str:
     return "\n".join(lines)
 
 
+def _bench_metrics(path: str) -> dict:
+    """Flatten one BENCH_*.json record to ``{metric: median_ms}``.
+
+    Understands both shapes: ``BENCH_kernels.json`` (``heads`` ->
+    fwd/fwd_bwd passes) and ``BENCH_retrieval.json`` (``methods``).
+    """
+    d = json.load(open(path))
+    out = {}
+    for head, passes in d.get("heads", {}).items():
+        for pss, rec in passes.items():
+            out[f"{head}/{pss}"] = rec.get("median_ms")
+    for m, rec in d.get("methods", {}).items():
+        out[f"retrieval/{m}"] = rec.get("median_ms")
+    return out
+
+
+def trend_table(paths: list) -> str:
+    """Per-metric median-ms trend across bench snapshots, oldest first.
+
+    The last column is the relative change of the newest snapshot vs
+    its predecessor — the row CI watches once a few PRs of history
+    exist (ROADMAP "start trending" item). Metrics missing from a
+    snapshot render as "-" (bench coverage grows over PRs).
+    """
+    snaps = [(os.path.basename(p), _bench_metrics(p)) for p in paths]
+    metrics = []
+    for _, m in snaps:
+        for key in m:
+            if key not in metrics:
+                metrics.append(key)
+    header = ("| metric | " + " | ".join(n for n, _ in snaps)
+              + " | Δ% (last vs prev) |")
+    lines = [header,
+             "|---|" + "---|" * (len(snaps) + 1)]
+    for key in metrics:
+        vals = [m.get(key) for _, m in snaps]
+        cells = [_fmt(v) if v is not None else "-" for v in vals]
+        prev, last = vals[-2], vals[-1]
+        if prev and last is not None:
+            delta = f"{(last - prev) / prev * 100:+.1f}%"
+        else:
+            delta = "-"
+        lines.append(f"| {key} | " + " | ".join(cells) + f" | {delta} |")
+    return "\n".join(lines)
+
+
+def bench_trends(history_dir: str = "bench_history") -> int:
+    """Print (and inject) trend tables for every bench family that has
+    history: prior snapshots live in ``bench_history/<NAME>*.json``,
+    the current record next to them as ``<NAME>.json``. Returns the
+    number of tables printed."""
+    printed = 0
+    for name in ("BENCH_kernels", "BENCH_retrieval"):
+        hist = sorted(glob.glob(os.path.join(history_dir,
+                                             f"{name}*.json")))
+        cur = f"{name}.json"
+        paths = hist + ([cur] if os.path.exists(cur) else [])
+        if len(paths) < 2:
+            if os.path.exists(cur):
+                print(f"no bench history for {name} (put prior "
+                      f"snapshots in {history_dir}/) — skipping trend")
+            continue
+        table = trend_table(paths)
+        print(f"\n== {name} trend ==")
+        print(table)
+        if os.path.exists("EXPERIMENTS.md"):
+            inject("EXPERIMENTS.md", f"TREND_{name}", table)
+        printed += 1
+    return printed
+
+
 def inject(md_path: str, marker: str, content: str) -> None:
     text = open(md_path).read()
     begin = f"<!-- AUTOGEN:{marker} -->"
@@ -105,6 +177,7 @@ def main() -> int:
             print(f"injected {marker} from {path}")
         else:
             print(f"skip {marker}: {path} missing")
+    bench_trends()
     return 0
 
 

@@ -1,10 +1,14 @@
-"""Serving example: batched sparse encoding + two-stage retrieval.
+"""Serving example: the sparse-native retrieval pipeline end-to-end.
 
-1. Index a synthetic corpus with the Sparton head (document side).
-2. Serve queries through the deadline/size micro-batching loop.
-3. Retrieve top-k: dense scoring for small corpora and the fused
-   streaming top-k (the Sparton-idea transfer) for the 1M-candidate
-   regime — here demonstrated on the kernel's interpret mode.
+1. Index a synthetic corpus with the Sparton head (document side):
+   encode -> on-device top-k sparsify (SparseRep) -> inverted impact
+   index. No dense (N, V) corpus matrix is ever materialized.
+2. Serve queries through the deadline/size micro-batching loop;
+   results come back as SparseReps and are popped with ``take``.
+3. Retrieve top-k through the unified dispatcher: inverted-index
+   impact scoring (the production sparse path), cross-checked against
+   the dense fallback built *from the same SparseReps*, plus the fused
+   streaming top-k kernel on the 1M-candidate-style dense workload.
 
 Run:  PYTHONPATH=src python examples/serve_retrieval.py
 """
@@ -18,32 +22,41 @@ import numpy as np
 from repro.configs import get_config
 from repro.kernels.topk_score import topk_score
 from repro.launch.steps import init_state, streaming_topk
+from repro.retrieval import build_inverted_index, retrieve, stack_rows
 from repro.runtime.serving import (BatchedEncoder, BatchPolicy, Request,
-                                   ServingLoop, make_config_encoder,
-                                   retrieve_topk)
+                                   ServingLoop, make_config_encoder)
 
-CORPUS, QUERIES, K = 512, 24, 5
+CORPUS, QUERIES, K, REP_TOPK = 512, 24, 5, 48
 
 cfg = get_config("splade_bert").SMOKE
+import dataclasses
+# the Unified-LSR knob: reps leave the head as top-48 SparseRep rows
+cfg = dataclasses.replace(cfg, rep_topk=REP_TOPK)
 state, _ = init_state("splade_bert", jax.random.PRNGKey(0), smoke=True)
 params = state["params"]
 
 # The encoder comes from the config through the unified head factory
-# (core.head_api.make_head) — head_impl, blocks and logit softcap are
-# all taken from cfg instead of hardcoding one implementation here.
+# (core.head_api.make_encoder) — head_impl, blocks, logit softcap and
+# the rep sparsifier are all taken from cfg instead of hardcoding.
 encode = make_config_encoder(params, cfg)
-
 
 rng = np.random.default_rng(0)
 
-# --- 1. index the corpus ---------------------------------------------
+# --- 1. index the corpus (sparse; never a dense (N, V) matrix) --------
 doc_tokens = rng.integers(1, cfg.vocab_size, size=(CORPUS, 24))
 doc_tokens = doc_tokens.astype(np.int32)
-doc_reps = np.asarray(encode(jnp.asarray(doc_tokens),
-                             jnp.ones((CORPUS, 24), jnp.int32)))
-print(f"indexed {CORPUS} docs; "
-      f"mean active dims {np.mean((doc_reps > 0).sum(1)):.0f}"
-      f" / {cfg.vocab_size}")
+doc_parts = []
+for lo in range(0, CORPUS, 64):
+    reps = encode(jnp.asarray(doc_tokens[lo:lo + 64]),
+                  jnp.ones((min(64, CORPUS - lo), 24), jnp.int32))
+    doc_parts.append(reps)
+corpus_rep = stack_rows(doc_parts)
+index = build_inverted_index(corpus_rep, cfg.vocab_size)
+st = index.stats()
+print(f"indexed {st['n_docs']} docs; mean active terms "
+      f"{st['n_postings'] / st['n_docs']:.0f} / {cfg.vocab_size}; "
+      f"index {st['memory_bytes'] / 2**10:.0f} KiB vs dense "
+      f"{CORPUS * cfg.vocab_size * 4 / 2**10:.0f} KiB")
 
 # --- 2. serve queries through the batching loop ----------------------
 loop = ServingLoop(BatchedEncoder(
@@ -56,19 +69,23 @@ for uid in range(QUERIES):
     loop.submit(Request(uid=uid, tokens=toks))
     loop.tick()
 loop.drain()
-print(f"served {len(loop.completed)} queries in "
+q_rep = stack_rows([loop.take(u) for u in range(QUERIES)])
+assert not loop.completed, "take() pops — nothing may accumulate"
+print(f"served {QUERIES} queries in "
       f"{(time.monotonic() - t0) * 1e3:.1f} ms; "
       f"batch sizes {loop.batch_sizes}")
 
-# --- 3a. retrieval (cosine top-k over the sparse reps; untrained
-# dense reps have hub documents under raw dot) --------------------------
-q = np.stack([loop.completed[u] for u in range(QUERIES)])
-qn = q / np.maximum(np.linalg.norm(q, axis=1, keepdims=True), 1e-9)
-dn = doc_reps / np.maximum(
-    np.linalg.norm(doc_reps, axis=1, keepdims=True), 1e-9)
-vals, idx = retrieve_topk(jnp.asarray(qn), jnp.asarray(dn), k=K)
+# --- 3a. retrieval: inverted impact index (sparse path) ---------------
+vals, idx = retrieve(q_rep, index, K, method="impact")
 hits = float(np.mean(np.asarray(idx)[:, 0] == np.arange(QUERIES)))
 print(f"top-1 self-retrieval rate: {hits:.2f} (exact-duplicate queries)")
+
+# parity: the dense fallback over the SAME SparseReps must agree
+d_dense = corpus_rep.to_dense(cfg.vocab_size)
+vals_d, idx_d = retrieve(q_rep, d_dense, K, method="dense")
+assert np.array_equal(np.asarray(idx), np.asarray(idx_d))
+assert np.allclose(np.asarray(vals), np.asarray(vals_d), atol=1e-4)
+print("impact scoring == dense fallback (same SparseReps): True")
 
 # --- 3b. the 1M-candidate regime: fused streaming top-k ---------------
 cand = jax.random.normal(jax.random.PRNGKey(1), (20000, 64))

@@ -81,6 +81,12 @@ class TransformerConfig:
     head_block_s: Optional[int] = None
     head_block_v: Optional[int] = None
     head_vocab_tile: int = 4096    # pure-JAX streaming tile
+    # Rep sparsification (Unified-LSR-style model knob): applied to the
+    # (B, V) head output on-device by encoders built via
+    # head_api.make_encoder. Both None = dense reps (the default).
+    rep_topk: Optional[int] = None
+    rep_threshold: Optional[float] = None
+    rep_max_nnz: int = 256         # threshold-only static slot budget
     attn_unroll: int = 1           # KV-chunk scan unroll (cost probes)
     attn_chunk: int = 512          # KV chunk size (online softmax)
 
@@ -122,6 +128,9 @@ class TransformerConfig:
             block_v=self.head_block_v,
             vocab_tile=self.head_vocab_tile,
             logit_softcap=self.final_logit_softcap,
+            rep_topk=self.rep_topk,
+            rep_threshold=self.rep_threshold,
+            rep_max_nnz=self.rep_max_nnz,
         )
         if overrides:
             spec = spec.replace(**overrides)

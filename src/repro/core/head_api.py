@@ -73,6 +73,17 @@ class HeadSpec:
                         (interpret off-TPU, compiled on TPU).
     ``bwd_batch_chunk`` batch chunking of the pure-JAX backward scan.
     ``unroll``          scan unroll of the pure-JAX impls (cost probes).
+    ``rep_topk``        sparsify the (B, V) head output to its top-k
+                        terms per row (Unified-LSR model knob); the
+                        reduction runs on-device via the streaming
+                        merge, so the dense rep never reaches host.
+    ``rep_threshold``   drop rep entries at or below this impact
+                        weight. Composes with ``rep_topk``; alone it
+                        caps rows at ``rep_max_nnz`` slots (largest
+                        entries win).
+    ``rep_max_nnz``     static slot budget of threshold-only
+                        sparsification. Both rep knobs None = dense
+                        (B, V) output, the pre-sparse default.
     """
 
     impl: str = "sparton"
@@ -85,6 +96,14 @@ class HeadSpec:
     interpret: Optional[bool] = None
     bwd_batch_chunk: int = 8
     unroll: int = 1
+    rep_topk: Optional[int] = None
+    rep_threshold: Optional[float] = None
+    rep_max_nnz: int = 256
+
+    @property
+    def sparse_reps(self) -> bool:
+        """Whether encoders built from this spec emit SparseReps."""
+        return self.rep_topk is not None or self.rep_threshold is not None
 
     def replace(self, **kw) -> "HeadSpec":
         return dataclasses.replace(self, **kw)
@@ -270,3 +289,47 @@ def make_head(
         return fallback_fn(H, E, b, mask, spec=fallback_spec)
 
     return head
+
+
+def make_sparsifier(spec: HeadSpec) -> Optional[Callable[[Array], "object"]]:
+    """The spec's rep sparsifier ``(B, V) -> SparseRep``, or None when
+    both rep knobs are off (dense output)."""
+    if not spec.sparse_reps:
+        return None
+    # lazy: keep core importable without pulling the retrieval package
+    from repro.retrieval.sparse_rep import (sparsify_threshold,
+                                            sparsify_topk)
+
+    if spec.rep_topk is not None:
+        topk, thr = spec.rep_topk, spec.rep_threshold or 0.0
+        return lambda y: sparsify_topk(y, topk, threshold=thr)
+    threshold, max_nnz = spec.rep_threshold, spec.rep_max_nnz
+    return lambda y: sparsify_threshold(y, threshold, max_nnz=max_nnz)
+
+
+def make_encoder(
+    spec: HeadSpec,
+    mesh: Optional[Mesh] = None,
+    *,
+    axis_name: str = "model",
+    batch_axes: Tuple[str, ...] = ("pod", "data"),
+) -> Callable[..., "object"]:
+    """Head + fused rep sparsifier: the post-head currency seam.
+
+    Returns ``encode(H, E, b=None, mask=None)`` producing a
+    ``SparseRep`` when the spec's ``rep_topk``/``rep_threshold`` knobs
+    are set, else the dense ``(B, V)`` array (identical to
+    ``make_head`` — the tested fallback). The sparsifier runs on the
+    head output *before* any host transfer, so a sparse encoder never
+    ships more than ``(B, K)`` per batch.
+    """
+    head = make_head(spec, mesh=mesh, axis_name=axis_name,
+                     batch_axes=batch_axes)
+    sparsify = make_sparsifier(spec)
+    if sparsify is None:
+        return head
+
+    def encode(H, E, b=None, mask=None):
+        return sparsify(head(H, E, b, mask))
+
+    return encode

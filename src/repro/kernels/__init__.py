@@ -10,8 +10,11 @@
 """
 
 from repro.kernels import autotune
-from repro.kernels.autotune import autotune_blocks, get_blocks
+from repro.kernels.autotune import (autotune_blocks,
+                                    autotune_kernel_blocks, get_blocks)
 from repro.kernels.ops import sparton_head, sparton_lm_head_kernel
 from repro.kernels.sparton import sparton_forward
-from repro.kernels.sparton_bwd import sparton_backward
-from repro.kernels.topk_score import topk_score
+from repro.kernels.sparton_bwd import (sparton_backward,
+                                       sparton_backward_de,
+                                       sparton_backward_dh)
+from repro.kernels.topk_score import merge_topk, topk_score

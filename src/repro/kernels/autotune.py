@@ -38,6 +38,12 @@ import numpy as np
 
 Blocks = Tuple[int, int, int]  # (block_b, block_s, block_v)
 
+# The three Pallas kernels with independently tunable blocks. One joint
+# triple (the legacy scheme) leaves measurable wins on the table at
+# large D: the dH kernel's VMEM is dominated by its (bb, bs, D) scratch
+# while dE's is (bv, D), so their feasible/optimal regions differ.
+KERNELS = ("fwd", "dh", "de")
+
 CACHE_ENV = "SPARTON_AUTOTUNE_CACHE"
 DEFAULT_CACHE = os.path.join(
     os.path.expanduser("~"), ".cache", "sparton", "autotune.json"
@@ -68,8 +74,17 @@ def cache_path(path: Optional[str] = None) -> str:
     return path or os.environ.get(CACHE_ENV) or DEFAULT_CACHE
 
 
-def shape_key(B: int, S: int, D: int, V: int, dtype, backend: str) -> str:
-    return f"B{B}_S{S}_D{D}_V{V}_{jnp.dtype(dtype).name}_{backend}"
+def shape_key(B: int, S: int, D: int, V: int, dtype, backend: str,
+              kernel: Optional[str] = None) -> str:
+    """Cache key for a shape — optionally extended per kernel.
+
+    ``kernel=None`` is the legacy joint key (one triple for all three
+    kernels); ``"fwd"``/``"dh"``/``"de"`` suffixes address per-kernel
+    winners. Old cache files only hold joint keys and stay readable:
+    per-kernel lookups fall back to the joint entry.
+    """
+    base = f"B{B}_S{S}_D{D}_V{V}_{jnp.dtype(dtype).name}_{backend}"
+    return base if kernel is None else f"{base}_{kernel}"
 
 
 def _load(path: str) -> Dict[str, dict]:
@@ -120,13 +135,11 @@ def clear_cache(path: Optional[str] = None, *, disk: bool = False) -> None:
 # VMEM model + candidate enumeration
 # ---------------------------------------------------------------------------
 
-def vmem_bytes(blocks: Blocks, D: int, dtype=jnp.float32) -> int:
-    """Worst-case VMEM residency across the fwd/dH/dE kernels.
-
-    Double-buffers the pipelined input/output tiles (factor 2) and adds
-    the single-buffered scratch accumulators and the in-register logit/
-    one-hot tile.
-    """
+def _vmem_components(blocks: Blocks, D: int, dtype=jnp.float32
+                     ) -> Dict[str, int]:
+    """Per-kernel VMEM residency (double-buffered pipelined tiles,
+    single-buffered scratch accumulators, in-register logit/one-hot
+    tile)."""
     bb, bs, bv = blocks
     in_b = jnp.dtype(dtype).itemsize
     f32 = 4
@@ -143,17 +156,30 @@ def vmem_bytes(blocks: Blocks, D: int, dtype=jnp.float32) -> int:
           + bb * bs * bv * f32
           + bv * D * f32 + bv * f32              # scratch accumulators
           + 2 * (bv * D * f32 + bv * f32))       # output tiles
-    return max(fwd, dh, de)
+    return {"fwd": fwd, "dh": dh, "de": de}
+
+
+def vmem_bytes(blocks: Blocks, D: int, dtype=jnp.float32,
+               kernel: Optional[str] = None) -> int:
+    """VMEM residency of one kernel, or the worst case over all three
+    (``kernel=None`` — the budget a joint triple must satisfy)."""
+    comps = _vmem_components(blocks, D, dtype)
+    return comps[kernel] if kernel is not None else max(comps.values())
 
 
 def hbm_traffic_elems(blocks: Blocks, B: int, S: int, D: int,
-                      V: int) -> float:
-    """Analytic forward HBM read volume (elements) for a block choice.
+                      V: int, kernel: Optional[str] = None) -> float:
+    """Analytic HBM read volume (elements) of one kernel's grid.
 
-    Uses the *padded* array sizes — the kernel reads whole tiles, so a
+    Uses the *padded* array sizes — the kernels read whole tiles, so a
     block larger than the problem dim pays for the padding. This is
     what makes an oversized block rank strictly worse than a fitting
     one at equal grid counts (instead of winning the size tiebreak).
+    Per kernel (from the grid layouts in ``sparton.py``/
+    ``sparton_bwd.py``): the forward re-fetches H per vocab block and
+    E per batch block; dH re-fetches the three (B, V) operands per
+    sequence block and E per (batch, seq) block; dE re-fetches the
+    (B, V) operands per sequence block and H per vocab block.
     """
     bb, bs, bv = blocks
     n_b = -(-B // bb)
@@ -161,7 +187,14 @@ def hbm_traffic_elems(blocks: Blocks, B: int, S: int, D: int,
     n_v = -(-V // bv)
     h_padded = float(n_b * bb) * (n_s * bs) * D
     e_padded = float(n_v * bv) * D
-    return h_padded * n_v + e_padded * n_b
+    if kernel in (None, "fwd"):
+        return h_padded * n_v + e_padded * n_b
+    y_padded = float(n_b * bb) * (n_v * bv)      # dy/y/i_max operands
+    if kernel == "dh":
+        return 3 * y_padded * n_s + e_padded * n_b * n_s
+    if kernel == "de":
+        return 3 * y_padded * n_s + h_padded * n_v
+    raise ValueError(f"unknown kernel {kernel!r}; one of {KERNELS}")
 
 
 Pinned = Tuple[Optional[int], Optional[int], Optional[int]]
@@ -173,6 +206,7 @@ def candidate_blocks(
     dtype=jnp.float32,
     vmem_budget: int = VMEM_BUDGET_BYTES,
     pinned: Optional[Pinned] = None,
+    kernel: Optional[str] = None,
 ) -> List[Blocks]:
     """All (block_b, block_s, block_v) under the VMEM budget, best first.
 
@@ -182,7 +216,9 @@ def candidate_blocks(
     analytic HBM-traffic model, least traffic first. ``pinned``
     components (from a config) are honored exactly — only the free
     components are enumerated, and the VMEM budget is checked on the
-    *combined* triple.
+    *combined* triple. ``kernel`` scopes both the VMEM residency and
+    the traffic model to one kernel (fwd/dh/de); None keeps the legacy
+    joint behavior (worst-case VMEM, forward traffic).
     """
     pb, ps, pv = pinned or (None, None, None)
     bbs = (pb,) if pb is not None else _BB_CHOICES
@@ -199,10 +235,10 @@ def candidate_blocks(
                 if pv is None and bv > max(128, 2 * V):
                     continue
                 blocks = (bb, bs, bv)
-                if vmem_bytes(blocks, D, dtype) > vmem_budget:
+                if vmem_bytes(blocks, D, dtype, kernel) > vmem_budget:
                     continue
                 out.append(blocks)
-    out.sort(key=lambda blk: (hbm_traffic_elems(blk, B, S, D, V),
+    out.sort(key=lambda blk: (hbm_traffic_elems(blk, B, S, D, V, kernel),
                               -blk[0] * blk[1] * blk[2]))
     return out
 
@@ -210,7 +246,8 @@ def candidate_blocks(
 def heuristic_blocks(B: int, S: int, D: int, V: int,
                      *, dtype=jnp.float32,
                      vmem_budget: int = VMEM_BUDGET_BYTES,
-                     pinned: Optional[Pinned] = None) -> Blocks:
+                     pinned: Optional[Pinned] = None,
+                     kernel: Optional[str] = None) -> Blocks:
     """Best candidate by the analytic model — no measurement.
 
     With pins, the free components shrink as needed to keep the
@@ -219,7 +256,8 @@ def heuristic_blocks(B: int, S: int, D: int, V: int,
     overflow is at least minimal, not amplified.
     """
     cands = candidate_blocks(B, S, D, V, dtype=dtype,
-                             vmem_budget=vmem_budget, pinned=pinned)
+                             vmem_budget=vmem_budget, pinned=pinned,
+                             kernel=kernel)
     if cands:
         return cands[0]
     if pinned and any(p is not None for p in pinned):
@@ -238,18 +276,24 @@ def get_blocks(
     dtype=jnp.float32,
     backend: Optional[str] = None,
     path: Optional[str] = None,
+    kernel: Optional[str] = None,
 ) -> Blocks:
     """Cached winner for the shape, else the analytic heuristic.
 
     Never measures — cheap enough to call on every kernel invocation
     (including under jit tracing, where it runs once per compilation).
+    With ``kernel`` set, the lookup prefers the per-kernel entry and
+    falls back to a legacy joint entry (old cache files stay usable),
+    then to the kernel-scoped heuristic.
     """
     backend = backend or jax.default_backend()
     cache = _load(cache_path(path))
-    hit = cache.get(shape_key(B, S, D, V, dtype, backend))
+    hit = cache.get(shape_key(B, S, D, V, dtype, backend, kernel))
+    if hit is None and kernel is not None:
+        hit = cache.get(shape_key(B, S, D, V, dtype, backend))
     if hit is not None:
         return (hit["block_b"], hit["block_s"], hit["block_v"])
-    return heuristic_blocks(B, S, D, V, dtype=dtype)
+    return heuristic_blocks(B, S, D, V, dtype=dtype, kernel=kernel)
 
 
 def _measure_shape(B: int, S: int, V: int,
@@ -372,10 +416,136 @@ def autotune_blocks(
     return blocks
 
 
+def autotune_kernel_blocks(
+    B: int, S: int, D: int, V: int,
+    *,
+    dtype=jnp.float32,
+    backend: Optional[str] = None,
+    softcap: Optional[float] = None,
+    interpret: Optional[bool] = None,
+    max_candidates: int = 8,
+    path: Optional[str] = None,
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+) -> Dict[str, Blocks]:
+    """Time block candidates **per kernel** (fwd, dH, dE), persist and
+    return ``{kernel: winner}``.
+
+    The joint tuner (``autotune_blocks``) times fwd+bwd with one triple
+    — convenient, but at large D the dH and dE kernels want different
+    blocks (their VMEM is dominated by different scratch shapes). This
+    tuner times each kernel in isolation on its own candidate set and
+    writes one cache entry per kernel (``<shape>_fwd`` etc.); the
+    wrappers' per-kernel lookups pick them up, and old joint entries
+    remain readable as the fallback.
+    """
+    from repro.kernels.sparton import sparton_forward
+    from repro.kernels.sparton_bwd import (sparton_backward_de,
+                                           sparton_backward_dh)
+
+    backend = backend or jax.default_backend()
+    if interpret is None:
+        interpret = backend != "tpu"
+    p = cache_path(path)
+    cache = _load(p)
+    keys = {kn: shape_key(B, S, D, V, dtype, backend, kn)
+            for kn in KERNELS}
+    hits = {kn: cache.get(k) for kn, k in keys.items()}
+    if all(h is not None and h.get("source") == "measured"
+           for h in hits.values()):
+        return {kn: (h["block_b"], h["block_s"], h["block_v"])
+                for kn, h in hits.items()}
+
+    mb, ms, mv = _measure_shape(B, S, V, interpret)
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    H = jax.random.normal(ks[0], (mb, ms, D), dtype)
+    E = jax.random.normal(ks[1], (mv, D), dtype) * 0.2
+    bias = jax.random.normal(ks[2], (mv,), jnp.float32) * 0.2
+    mask = jnp.ones((mb, ms), jnp.int32)
+    # one forward at heuristic blocks supplies the backward operands
+    fwd_heur = heuristic_blocks(mb, ms, D, mv, dtype=dtype,
+                                vmem_budget=vmem_budget, kernel="fwd")
+    y, i_max = sparton_forward(
+        H, E, bias, mask, block_b=fwd_heur[0], block_s=fwd_heur[1],
+        block_v=fwd_heur[2], softcap=softcap, interpret=interpret)
+    dy = jax.random.normal(ks[3], y.shape, jnp.float32)
+
+    def fwd_fn(blocks):
+        bb, bs, bv = blocks
+        return lambda: sparton_forward(
+            H, E, bias, mask, block_b=bb, block_s=bs, block_v=bv,
+            softcap=softcap, interpret=interpret)
+
+    def dh_fn(blocks):
+        bb, bs, bv = blocks
+        return lambda: sparton_backward_dh(
+            dy, y, i_max, E, ms, block_b=bb, block_s=bs, block_v=bv,
+            softcap=softcap, interpret=interpret)
+
+    def de_fn(blocks):
+        bb, bs, bv = blocks
+        return lambda: sparton_backward_de(
+            dy, y, i_max, H, block_b=bb, block_s=bs, block_v=bv,
+            softcap=softcap, interpret=interpret)
+
+    builders = {"fwd": fwd_fn, "dh": dh_fn, "de": de_fn}
+    winners: Dict[str, Blocks] = {}
+    measured_any = False
+    for kn in KERNELS:
+        hit = hits[kn]
+        if hit is not None and hit.get("source") == "measured":
+            winners[kn] = (hit["block_b"], hit["block_s"],
+                           hit["block_v"])
+            continue
+        cands = candidate_blocks(B, S, D, V, dtype=dtype,
+                                 vmem_budget=vmem_budget,
+                                 kernel=kn)[:max_candidates]
+        if not cands:
+            cands = [MIN_BLOCKS]
+        best: Tuple[float, Blocks] = (float("inf"), cands[0])
+        last_error: Optional[Exception] = None
+        for blocks in cands:
+            try:
+                t = _time_ms(builders[kn](blocks))
+            except Exception as e:  # candidate not lowerable here
+                last_error = e
+                continue
+            if t < best[0]:
+                best = (t, blocks)
+        t, blocks = best
+        if t == float("inf"):
+            # same policy as the joint tuner: heuristic, persist
+            # nothing, surface the failure
+            warnings.warn(
+                f"sparton autotune[{kn}]: all {len(cands)} candidates "
+                f"failed to time for {keys[kn]}; returning untimed "
+                f"heuristic blocks. Last error: {last_error!r}")
+            winners[kn] = heuristic_blocks(B, S, D, V, dtype=dtype,
+                                           vmem_budget=vmem_budget,
+                                           kernel=kn)
+            continue
+        cache[keys[kn]] = {
+            "block_b": blocks[0], "block_s": blocks[1],
+            "block_v": blocks[2],
+            "ms": round(t, 3),
+            "source": "measured",
+            "kernel": kn,
+            "measured_shape": list(_measure_shape(B, S, V, interpret))
+            + [D],
+            "interpret": bool(interpret),
+        }
+        winners[kn] = blocks
+        measured_any = True
+    if measured_any:
+        _save(p)
+    return winners
+
+
 def resolve_blocks(
     B: int, S: int, D: int, V: int, dtype,
     block_b: Optional[int], block_s: Optional[int],
     block_v: Optional[int],
+    *,
+    kernel: Optional[str] = None,
 ) -> Blocks:
     """Fill the None components of a user-supplied block triple. Shared
     by every kernel wrapper so forward and backward resolve identically
@@ -385,13 +555,16 @@ def resolve_blocks(
     pins are re-enumerated *jointly* with the pins fixed — grafting a
     pin onto a triple tuned without it could blow the VMEM budget —
     which also means they bypass the winner cache on purpose.
+    ``kernel`` ("fwd"/"dh"/"de") scopes cache lookup, VMEM model and
+    traffic ranking to that kernel; None keeps the joint behavior.
     """
     if block_b is not None and block_s is not None and block_v is not None:
         return (block_b, block_s, block_v)
     if block_b is None and block_s is None and block_v is None:
-        return get_blocks(B, S, D, V, dtype=dtype)
+        return get_blocks(B, S, D, V, dtype=dtype, kernel=kernel)
     return heuristic_blocks(B, S, D, V, dtype=dtype,
-                            pinned=(block_b, block_s, block_v))
+                            pinned=(block_b, block_s, block_v),
+                            kernel=kernel)
 
 
 def blocks_for_config(vocab_size: int, d_model: int, batch: int,

@@ -10,8 +10,10 @@ derivative factor ``g = dy * f'(y)`` and the bias gradient
 ``(B, V)`` elementwise pass (and no HBM round-trip of ``g``) remains.
 
 Block sizes default to ``None`` = auto: the autotuner's cached winner
-for the call shape, else its analytic heuristic
-(``repro.kernels.autotune``). Pass ints to pin blocks explicitly.
+**per kernel** (fwd vs dH vs dE — each contraction has its own cache
+entry and heuristic), else the analytic heuristic
+(``repro.kernels.autotune``). Passing ints pins the same triple across
+all three kernels (the legacy joint behavior).
 
 On this CPU container the kernels run with ``interpret=True`` (the
 kernel body executed by the Pallas interpreter); on TPU the same code
@@ -22,7 +24,7 @@ argument so tests/benchmarks choose explicitly.
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,8 +32,11 @@ import jax.numpy as jnp
 from repro.kernels.sparton import sparton_forward
 from repro.kernels.sparton_bwd import sparton_backward
 
+Blocks = Tuple[int, int, int]
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9))
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(4, 5, 6, 7, 8, 9, 10, 11))
 def sparton_lm_head_kernel(
     H: jax.Array,
     E: jax.Array,
@@ -43,6 +48,8 @@ def sparton_lm_head_kernel(
     softcap: Optional[float] = None,
     interpret: bool = False,
     out_dtype: Optional[jnp.dtype] = None,
+    dh_blocks: Optional[Blocks] = None,
+    de_blocks: Optional[Blocks] = None,
 ) -> jax.Array:
     y, _ = sparton_forward(
         H, E, b, mask,
@@ -53,7 +60,7 @@ def sparton_lm_head_kernel(
 
 
 def _fwd(H, E, b, mask, block_b, block_s, block_v, softcap, interpret,
-         out_dtype):
+         out_dtype, dh_blocks, de_blocks):
     y, i_max = sparton_forward(
         H, E, b, mask,
         block_b=block_b, block_s=block_s, block_v=block_v,
@@ -62,13 +69,17 @@ def _fwd(H, E, b, mask, block_b, block_s, block_v, softcap, interpret,
     return y.astype(out_dtype or H.dtype), (H, E, y, i_max)
 
 
-def _bwd(block_b, block_s, block_v, softcap, interpret, out_dtype, res, dy):
+def _bwd(block_b, block_s, block_v, softcap, interpret, out_dtype,
+         dh_blocks, de_blocks, res, dy):
     H, E, y, i_max = res
     # v2: dy and y go straight into the kernels; g and db are computed
-    # tile-wise in their epilogues.
+    # tile-wise in their epilogues. Each backward contraction runs with
+    # its own blocks (explicit triples win; else block_* pins apply
+    # jointly; else per-kernel autotune cache).
     dH, dE, db = sparton_backward(
         dy, y, i_max, H, E,
         block_b=block_b, block_s=block_s, block_v=block_v,
+        dh_blocks=dh_blocks, de_blocks=de_blocks,
         softcap=softcap, interpret=interpret,
     )
     return dH.astype(H.dtype), dE.astype(E.dtype), db, None
@@ -94,10 +105,12 @@ def sparton_head(
     """Convenience entry point with optional bias/mask (kernel-backed).
 
     With the default ``block_* = None`` the block sizes are resolved
-    once here — cache hit or heuristic, keyed on the shapes of THIS
-    call (under shard_map: the local vocab shard) — so forward and
-    backward are guaranteed to agree even if the autotune cache changes
-    mid-step.
+    once here **per kernel** — cache hit (``_fwd``/``_dh``/``_de``
+    entries, legacy joint entries as fallback) or per-kernel heuristic,
+    keyed on the shapes of THIS call (under shard_map: the local vocab
+    shard) — so forward and backward are guaranteed to agree even if
+    the autotune cache changes mid-step. Explicit ints pin one joint
+    triple across all three kernels.
 
     ``softcap`` is the deprecated spelling of ``logit_softcap`` (kept
     so pre-registry callers don't break). Prefer building heads through
@@ -109,16 +122,24 @@ def sparton_head(
                                             "sparton_head")
     B, S, D = H.shape
     V = E.shape[0]
+    dh_blocks = de_blocks = None
     if block_b is None or block_s is None or block_v is None:
         from repro.kernels.autotune import resolve_blocks
 
+        # cache dtype keys on each kernel's own weight/activation
+        # operand — the rule sparton_bwd's standalone wrappers share
+        pins = (block_b, block_s, block_v)
         block_b, block_s, block_v = resolve_blocks(
-            B, S, D, V, H.dtype, block_b, block_s, block_v)
+            B, S, D, V, H.dtype, *pins, kernel="fwd")
+        dh_blocks = resolve_blocks(B, S, D, V, E.dtype, *pins,
+                                   kernel="dh")
+        de_blocks = resolve_blocks(B, S, D, V, H.dtype, *pins,
+                                   kernel="de")
     if b is None:
         b = jnp.zeros((V,), jnp.float32)
     if mask is None:
         mask = jnp.ones((B, S), jnp.int32)
     return sparton_lm_head_kernel(
         H, E, b, mask, block_b, block_s, block_v, logit_softcap,
-        interpret, out_dtype
+        interpret, out_dtype, dh_blocks, de_blocks
     )

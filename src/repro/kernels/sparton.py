@@ -184,7 +184,8 @@ def sparton_forward(
 
         B, S, D = H.shape
         block_b, block_s, block_v = resolve_blocks(
-            B, S, D, E.shape[0], H.dtype, block_b, block_s, block_v)
+            B, S, D, E.shape[0], H.dtype, block_b, block_s, block_v,
+            kernel="fwd")
     return _forward_call(
         H, E, b, mask, block_b=block_b, block_s=block_s, block_v=block_v,
         softcap=softcap, interpret=interpret,

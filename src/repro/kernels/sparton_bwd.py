@@ -136,27 +136,33 @@ def _de_kernel(
         db_ref[...] = db_acc[...]
 
 
+# The two backward contractions are separately-jitted calls with their
+# OWN block triples: dH tiles are indexed by (b, s) and dE tiles by
+# (v), so the best blocks differ (the autotuner times them apart —
+# ROADMAP per-kernel item). Padding invariant shared by both: padded
+# rows/cols must not route anywhere real — y == 0 there, so bwd_factor
+# yields g == 0 and any index is safe.
+
 @functools.partial(
     jax.jit,
-    static_argnames=("block_b", "block_s", "block_v", "softcap",
-                     "interpret"),
+    static_argnames=("seq_len", "block_b", "block_s", "block_v",
+                     "softcap", "interpret"),
 )
-def _backward_call(
-    dy, y, i_max, H, E, *, block_b, block_s, block_v, softcap, interpret
+def _dh_call(
+    dy, y, i_max, E, *, seq_len, block_b, block_s, block_v, softcap,
+    interpret
 ):
-    B, S, D = H.shape
-    V = E.shape[0]
+    B, V = dy.shape
+    D = E.shape[1]
 
     dyp = pad_to(pad_to(dy.astype(jnp.float32), 0, block_b), 1, block_v)
-    # Padded rows/cols must not route anywhere real: y == 0 there, so
-    # bwd_factor yields g == 0 and any index is safe.
     yp = pad_to(pad_to(y.astype(jnp.float32), 0, block_b), 1, block_v)
     ip = pad_to(pad_to(i_max, 0, block_b), 1, block_v)
-    Hp = pad_to(pad_to(H, 0, block_b), 1, block_s)
     Ep = pad_to(E, 0, block_v)
 
-    Bp, Sp, _ = Hp.shape
+    Bp = dyp.shape[0]
     Vp = Ep.shape[0]
+    Sp = -(-seq_len // block_s) * block_s
     nb, ns, nv = Bp // block_b, Sp // block_s, Vp // block_v
 
     bv_spec = pl.BlockSpec((block_b, block_v), lambda i, k, j: (i, j))
@@ -182,6 +188,28 @@ def _backward_call(
         ),
         interpret=interpret,
     )(dyp, yp, ip, Ep)
+    return dH[:B, :seq_len]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_b", "block_s", "block_v", "softcap",
+                     "interpret"),
+)
+def _de_call(
+    dy, y, i_max, H, *, block_b, block_s, block_v, softcap, interpret
+):
+    B, V = dy.shape
+    S, D = H.shape[1], H.shape[2]
+
+    dyp = pad_to(pad_to(dy.astype(jnp.float32), 0, block_b), 1, block_v)
+    yp = pad_to(pad_to(y.astype(jnp.float32), 0, block_b), 1, block_v)
+    ip = pad_to(pad_to(i_max, 0, block_b), 1, block_v)
+    Hp = pad_to(pad_to(H, 0, block_b), 1, block_s)
+
+    Bp, Sp, _ = Hp.shape
+    Vp = dyp.shape[1]
+    nb, ns, nv = Bp // block_b, Sp // block_s, Vp // block_v
 
     vb_spec = pl.BlockSpec((block_b, block_v), lambda j, i, k: (i, j))
     dE, db = pl.pallas_call(
@@ -213,8 +241,67 @@ def _backward_call(
         ),
         interpret=interpret,
     )(dyp, yp, ip, Hp)
+    return dE[:V], db[0, :V]
 
-    return dH[:B, :S], dE[:V], db[0, :V]
+
+Blocks = Tuple[int, int, int]
+
+
+def _resolve(shape, V, dtype, kernel, block_b, block_s, block_v) -> Blocks:
+    """Autotune-cache resolution. The cache's dtype component keys on
+    the kernel's own weight/activation operand (dy/y are always f32):
+    E for the dH kernel, H for dE — the same rule every entry point
+    (ops.sparton_head, the standalone wrappers) applies, so one tuning
+    sweep serves them all."""
+    if block_b is not None and block_s is not None and block_v is not None:
+        return (block_b, block_s, block_v)
+    from repro.kernels.autotune import resolve_blocks  # avoids cycle
+
+    B, S, D = shape
+    return resolve_blocks(B, S, D, V, dtype, block_b, block_s,
+                          block_v, kernel=kernel)
+
+
+def sparton_backward_dh(
+    dy: jax.Array,      # (B, V) — raw upstream cotangent
+    y: jax.Array,       # (B, V) f32 — stored post-activation
+    i_max: jax.Array,   # (B, V) i32
+    E: jax.Array,       # (V, D) f32 or bf16
+    seq_len: int,
+    *,
+    block_b: Optional[int] = None,
+    block_s: Optional[int] = None,
+    block_v: Optional[int] = None,
+    softcap: Optional[float] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """The dH contraction alone — the unit the autotuner times."""
+    B, V = dy.shape
+    blocks = _resolve((B, seq_len, E.shape[1]), V, E.dtype, "dh",
+                      block_b, block_s, block_v)
+    return _dh_call(dy, y, i_max, E, seq_len=seq_len, block_b=blocks[0],
+                    block_s=blocks[1], block_v=blocks[2],
+                    softcap=softcap, interpret=interpret)
+
+
+def sparton_backward_de(
+    dy: jax.Array,      # (B, V)
+    y: jax.Array,       # (B, V) f32
+    i_max: jax.Array,   # (B, V) i32
+    H: jax.Array,       # (B, S, D) f32 or bf16
+    *,
+    block_b: Optional[int] = None,
+    block_s: Optional[int] = None,
+    block_v: Optional[int] = None,
+    softcap: Optional[float] = None,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """The dE (+ fused db) contraction alone — the autotuner's unit."""
+    blocks = _resolve(H.shape, dy.shape[1], H.dtype, "de",
+                      block_b, block_s, block_v)
+    return _de_call(dy, y, i_max, H, block_b=blocks[0],
+                    block_s=blocks[1], block_v=blocks[2],
+                    softcap=softcap, interpret=interpret)
 
 
 def sparton_backward(
@@ -227,6 +314,8 @@ def sparton_backward(
     block_b: Optional[int] = None,
     block_s: Optional[int] = None,
     block_v: Optional[int] = None,
+    dh_blocks: Optional[Blocks] = None,
+    de_blocks: Optional[Blocks] = None,
     softcap: Optional[float] = None,
     interpret: bool = False,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
@@ -234,15 +323,25 @@ def sparton_backward(
 
     The activation-derivative factor and the bias gradient are fused
     into the kernels — no standalone elementwise pass over ``(B, V)``.
-    Block sizes default to the autotuner's choice for the call shape.
-    """
-    if block_b is None or block_s is None or block_v is None:
-        from repro.kernels.autotune import resolve_blocks  # avoids cycle
 
-        B, S, D = H.shape
-        block_b, block_s, block_v = resolve_blocks(
-            B, S, D, E.shape[0], H.dtype, block_b, block_s, block_v)
-    return _backward_call(
-        dy, y, i_max, H, E, block_b=block_b, block_s=block_s,
-        block_v=block_v, softcap=softcap, interpret=interpret,
-    )
+    Block resolution is **per kernel**: explicit ``dh_blocks`` /
+    ``de_blocks`` triples win; else ``block_b/s/v`` pins apply to both
+    contractions (the legacy joint behavior); unset components come
+    from the autotuner's per-kernel cache ("dh" / "de" entries, falling
+    back to a legacy joint entry when only that exists).
+    """
+    V = E.shape[0]
+    if dh_blocks is None:
+        dh_blocks = _resolve(H.shape, V, E.dtype, "dh",
+                             block_b, block_s, block_v)
+    if de_blocks is None:
+        de_blocks = _resolve(H.shape, V, H.dtype, "de",
+                             block_b, block_s, block_v)
+    dH = _dh_call(dy, y, i_max, E, seq_len=H.shape[1],
+                  block_b=dh_blocks[0], block_s=dh_blocks[1],
+                  block_v=dh_blocks[2], softcap=softcap,
+                  interpret=interpret)
+    dE, db = _de_call(dy, y, i_max, H, block_b=de_blocks[0],
+                      block_s=de_blocks[1], block_v=de_blocks[2],
+                      softcap=softcap, interpret=interpret)
+    return dH, dE, db

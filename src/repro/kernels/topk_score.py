@@ -30,6 +30,29 @@ from jax.experimental import pallas as pl
 from repro.kernels._common import NEG_INF, pad_to
 
 
+def merge_topk(
+    run_vals: jax.Array,    # (B, k) running top-k values
+    run_idx: jax.Array,     # (B, k) running top-k ids
+    new_vals: jax.Array,    # (B, m) this block's values
+    new_idx: jax.Array,     # (B, m) this block's ids
+    k: int,
+):
+    """One step of the running top-k merge: union + re-top-k.
+
+    The single reduction shared by every streaming top-k in the repo —
+    the Pallas kernel below, the pure-JAX ``streaming_topk`` scan in
+    ``launch/steps.py``, and the rep sparsifiers in
+    ``retrieval/sparse_rep.py``. ``lax.top_k`` is stable, and the
+    running set is concatenated *before* the new block, so when blocks
+    are visited in ascending-id order, equal values tie-break toward
+    the lowest id (first occurrence) — the invariant the parity tests
+    rely on.
+    """
+    all_vals = jnp.concatenate([run_vals, new_vals], axis=1)
+    all_idx = jnp.concatenate([run_idx, new_idx], axis=1)
+    top_vals, pos = jax.lax.top_k(all_vals, k)
+    return top_vals, jnp.take_along_axis(all_idx, pos, axis=1)
+
 
 def _topk_kernel(
     q_ref,      # (bb, D)
@@ -63,10 +86,8 @@ def _topk_kernel(
     scores = jnp.where(cand_ids < n_real, scores, NEG_INF)
 
     # merge: union of running top-k and this block, re-top-k
-    all_vals = jnp.concatenate([val_ref[...], scores], axis=1)
-    all_idx = jnp.concatenate([idx_ref[...], cand_ids], axis=1)
-    top_vals, pos = jax.lax.top_k(all_vals, k)
-    top_idx = jnp.take_along_axis(all_idx, pos, axis=1)
+    top_vals, top_idx = merge_topk(val_ref[...], idx_ref[...], scores,
+                                   cand_ids, k)
     val_ref[...] = top_vals
     idx_ref[...] = top_idx
 
@@ -83,7 +104,14 @@ def topk_score(
     block_n: int = 1024,
     interpret: bool = False,
 ):
-    """Fused scoring + streaming top-k. Returns (vals (B,k), idx (B,k))."""
+    """Fused scoring + streaming top-k. Returns (vals (B,k), idx (B,k)).
+
+    Contract for the degenerate ``k > N`` case: the first ``N`` columns
+    are the full descending ranking of the corpus; columns beyond ``N``
+    carry ``NEG_INF`` values (their ids are meaningless). Ties between
+    equal scores resolve to the lowest candidate id (blocks are visited
+    in ascending-id order and the merge is stable).
+    """
     B, D = q.shape
     N = C.shape[0]
 

@@ -1,8 +1,16 @@
 """Serving driver: ``python -m repro.launch.serve --arch <id>``.
 
-Runs the batched LSR encoding loop (backbone + Sparton head) over a
-stream of synthetic requests and reports latency percentiles +
-achieved batch sizes, then retrieves top-k against an in-memory corpus.
+Runs the sparse-native LSR serving pipeline end-to-end:
+
+1. index  — encode a synthetic corpus through backbone + Sparton head,
+            sparsify on-device (``rep_topk``), build the inverted
+            impact index (no dense (N, V) corpus matrix anywhere);
+2. serve  — stream queries through the deadline/size micro-batching
+            loop (results popped via ``take``), reporting latency and
+            achieved batch sizes;
+3. retrieve — top-k via the unified dispatcher (``--method impact``
+            by default; ``dense``/``streaming`` remain for A/B runs —
+            both need the dense corpus, which ``--rep-topk 0`` keeps).
 """
 
 import argparse
@@ -16,11 +24,28 @@ def main(argv=None) -> int:
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--corpus", type=int, default=1000)
     ap.add_argument("--topk", type=int, default=10)
+    ap.add_argument("--rep-topk", type=int, default=64,
+                    help="per-row term budget of the on-device rep "
+                         "sparsifier; 0 = dense reps (legacy path)")
+    ap.add_argument("--method", default="auto",
+                    choices=["auto", "impact", "streaming", "dense"],
+                    help="retrieval path (see repro.retrieval.retrieve)")
+    ap.add_argument("--index-batch", type=int, default=64,
+                    help="corpus encoding batch size")
     ap.add_argument("--head-impl", default=None,
                     help="override the config's head backend (any "
                          "registered impl; see "
                          "repro.core.head_api.available_impls)")
     args = ap.parse_args(argv)
+    # method/rep compatibility is knowable before spending minutes
+    # encoding the corpus — reject bad combinations at argparse time
+    if args.method in ("dense", "streaming") and args.rep_topk > 0:
+        ap.error(f"--method {args.method} needs the dense corpus "
+                 f"matrix; pass --rep-topk 0 to keep it (or use "
+                 f"--method impact/auto with the sparse index)")
+    if args.method == "impact" and args.rep_topk <= 0:
+        ap.error("--method impact needs SparseRep queries and the "
+                 "inverted index; pass a positive --rep-topk")
 
     import dataclasses
 
@@ -30,26 +55,61 @@ def main(argv=None) -> int:
 
     from repro.configs import get_config
     from repro.launch.steps import init_state
+    from repro.retrieval import build_inverted_index, retrieve, stack_rows
     from repro.runtime.serving import (BatchedEncoder, BatchPolicy, Request,
-                                       ServingLoop, make_config_encoder,
-                                       retrieve_topk)
+                                       ServingLoop, make_config_encoder)
 
     mod = get_config(args.arch)
     cfg = mod.SMOKE
+    overrides = {}
     if args.head_impl:
-        cfg = dataclasses.replace(cfg, head_impl=args.head_impl)
+        overrides["head_impl"] = args.head_impl
+    if args.rep_topk > 0:
+        overrides["rep_topk"] = args.rep_topk
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    sparse = args.rep_topk > 0
     state, _ = init_state(args.arch, jax.random.PRNGKey(0), smoke=True)
     params = state["params"]
 
-    # Built from the config via the unified head factory: head_impl and
-    # final_logit_softcap are honored (they used to be silently dropped
-    # here — a live correctness bug for gemma2-style softcapped configs).
+    # Built from the config via the unified head factory: head_impl,
+    # final_logit_softcap and the rep-sparsify knobs are all honored.
     encode = make_config_encoder(params, cfg)
 
+    rng = np.random.default_rng(0)
+
+    # --- 1. index the corpus (batched; never a dense (N, V) matrix) --
+    t0 = time.monotonic()
+    doc_parts, dense_parts = [], []
+    bs = args.index_batch
+    for lo in range(0, args.corpus, bs):
+        n = min(bs, args.corpus - lo)
+        toks = rng.integers(1, cfg.vocab_size, size=(n, 16)).astype(np.int32)
+        reps = encode(jnp.asarray(toks), jnp.ones((n, 16), jnp.int32))
+        if sparse:
+            doc_parts.append(reps)
+        else:
+            dense_parts.append(np.asarray(reps))
+    if sparse:
+        corpus_rep = stack_rows(doc_parts)
+        index = build_inverted_index(corpus_rep, cfg.vocab_size)
+        corpus = index
+        st = index.stats()
+        print(f"indexed {st['n_docs']} docs in "
+              f"{(time.monotonic() - t0) * 1e3:.1f} ms: "
+              f"{st['n_postings']} postings over {st['active_terms']} "
+              f"terms, {st['memory_bytes'] / 2**20:.2f} MiB "
+              f"(dense (N, V) would be "
+              f"{args.corpus * cfg.vocab_size * 4 / 2**20:.2f} MiB)")
+    else:
+        corpus = jnp.asarray(np.concatenate(dense_parts))
+        print(f"indexed {corpus.shape[0]} docs dense in "
+              f"{(time.monotonic() - t0) * 1e3:.1f} ms "
+              f"({corpus.nbytes / 2**20:.2f} MiB)")
+
+    # --- 2. serve queries through the batching loop ------------------
     loop = ServingLoop(BatchedEncoder(
         encode, policy=BatchPolicy(max_batch=16, max_wait_s=0.002)))
-
-    rng = np.random.default_rng(0)
     t0 = time.monotonic()
     for uid in range(args.requests):
         n = int(rng.integers(4, 24))
@@ -58,20 +118,22 @@ def main(argv=None) -> int:
         loop.tick()
     loop.drain()
     dt = time.monotonic() - t0
-
-    print(f"encoded {len(loop.completed)} requests in {dt*1e3:.1f} ms, "
+    results = [loop.take(uid) for uid in range(args.requests)]
+    assert not loop.completed, "take() must leave nothing behind"
+    print(f"encoded {len(results)} requests in {dt*1e3:.1f} ms, "
           f"batches: {loop.batch_sizes}")
 
-    # retrieval against a synthetic corpus
-    corpus_tokens = rng.integers(
-        1, cfg.vocab_size, size=(args.corpus, 16)).astype(np.int32)
-    corpus_reps = np.asarray(encode(
-        jnp.asarray(corpus_tokens),
-        jnp.ones_like(jnp.asarray(corpus_tokens))))
-    q = np.stack([loop.completed[u] for u in sorted(loop.completed)][:8])
-    vals, idx = retrieve_topk(jnp.asarray(q), jnp.asarray(corpus_reps),
-                              k=args.topk)
-    print(f"retrieval: top-{args.topk} for {q.shape[0]} queries, "
+    # --- 3. retrieval through the unified dispatcher ------------------
+    n_q = min(8, args.requests)
+    if sparse:
+        queries = stack_rows(results[:n_q])
+    else:
+        queries = jnp.asarray(np.stack(results[:n_q]))
+    t0 = time.monotonic()
+    vals, idx = retrieve(queries, corpus, args.topk, method=args.method)
+    jax.block_until_ready(vals)
+    print(f"retrieval[{args.method}]: top-{args.topk} for {n_q} queries "
+          f"in {(time.monotonic() - t0) * 1e3:.1f} ms, "
           f"best scores {np.asarray(vals)[:, 0].round(2).tolist()}")
     return 0
 

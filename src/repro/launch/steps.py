@@ -281,6 +281,8 @@ def streaming_topk(q: Array, C: Array, *, k: int,
     n_tiles = Cp.shape[0] // tile
     C_t = Cp.reshape(n_tiles, tile, D)
 
+    from repro.kernels.topk_score import merge_topk
+
     def body(carry, xs):
         vals, idx = carry
         c_tile, t = xs
@@ -290,11 +292,7 @@ def streaming_topk(q: Array, C: Array, *, k: int,
         ids = jnp.broadcast_to(ids, scores.shape)
         # padded rows score q.0 = 0 and would beat real negatives
         scores = jnp.where(ids < N, scores, -1e30)
-        all_v = jnp.concatenate([vals, scores], axis=1)
-        all_i = jnp.concatenate([idx, ids], axis=1)
-        v2, pos = jax.lax.top_k(all_v, k)
-        i2 = jnp.take_along_axis(all_i, pos, axis=1)
-        return (v2, i2), None
+        return merge_topk(vals, idx, scores, ids, k), None
 
     init = (jnp.full((B, k), -1e30, jnp.float32),
             jnp.zeros((B, k), jnp.int32))

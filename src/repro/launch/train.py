@@ -89,22 +89,24 @@ def main(argv=None) -> int:
     if isinstance(cfg, TransformerConfig) and args.autotune_head:
         import dataclasses
 
-        from repro.kernels.autotune import autotune_blocks
+        from repro.kernels.autotune import autotune_kernel_blocks
         if cfg.head_impl != "kernel":
             # tuned blocks are only read by the Pallas head — don't
             # spend a timing sweep on a config that would ignore them
             print("--autotune-head implies --head-impl kernel "
                   f"(config had {cfg.head_impl!r})")
             cfg = dataclasses.replace(cfg, head_impl="kernel")
-        blocks = autotune_blocks(
+        # Per-kernel winners (fwd vs dH vs dE) land in the autotune
+        # cache, where ops.sparton_head's per-kernel resolution reads
+        # them — the config's head_block_* stay unpinned on purpose
+        # (pinning would force one joint triple onto all three).
+        winners = autotune_kernel_blocks(
             args.batch, args.seq_len, cfg.d_model, cfg.vocab_size,
             dtype=jnp.dtype(cfg.compute_dtype),
             softcap=cfg.final_logit_softcap)
         print(f"autotuned head blocks (B={args.batch} S={args.seq_len} "
-              f"D={cfg.d_model} V={cfg.vocab_size}): {blocks}")
-        cfg = dataclasses.replace(
-            cfg, head_block_b=blocks[0], head_block_s=blocks[1],
-            head_block_v=blocks[2])
+              f"D={cfg.d_model} V={cfg.vocab_size}): " +
+              ", ".join(f"{kn}={blk}" for kn, blk in winners.items()))
 
     if isinstance(cfg, TransformerConfig):
         step = build_lsr_train_step(cfg, None, n_micro=1,

@@ -1,0 +1,21 @@
+"""Sparse-native retrieval: SparseRep reps, inverted impact index,
+and the unified ``retrieve()`` dispatcher (DESIGN.md §7)."""
+
+from repro.retrieval.index import InvertedIndex, build_inverted_index
+from repro.retrieval.score import METHODS, impact_scores, retrieve
+from repro.retrieval.sparse_rep import (SparseRep, sparsify_threshold,
+                                        sparsify_topk, split_rows,
+                                        stack_rows)
+
+__all__ = [
+    "InvertedIndex",
+    "METHODS",
+    "SparseRep",
+    "build_inverted_index",
+    "impact_scores",
+    "retrieve",
+    "sparsify_threshold",
+    "sparsify_topk",
+    "split_rows",
+    "stack_rows",
+]

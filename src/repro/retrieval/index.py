@@ -1,0 +1,130 @@
+"""Inverted impact index over SparseReps — the sparse-native corpus.
+
+GPUSparse-style LSR serving scores queries against *posting lists*:
+for every vocab term, the (doc id, impact) pairs of the documents that
+activate it. The corpus then costs ``O(total nnz)`` memory instead of
+the dense ``(N, V)`` matrix (which at V≈250k cannot hold a real N),
+and a query only touches the lists of its own active terms.
+
+Layout: padded CSC over the vocabulary (terms are the major axis),
+flattened into three arrays —
+
+    term_starts  (V,) i32  — offset of each term's postings
+    term_lens    (V,) i32  — posting-list length per term
+    postings_doc (P,) i32  — doc ids, grouped by term
+    postings_val (P,) f32  — impact weights, same order
+
+plus the static aux ``(n_docs, vocab_size, max_postings)``.
+``max_postings`` (the longest posting list) is the static gather width
+the JAX scorer pads every touched list to — see ``score.py``. The
+index is a pytree, so scoring jits over it; the *build* is host-side
+numpy (indexing is the offline half of the pipeline).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import numpy as np
+
+from repro.retrieval.sparse_rep import SparseRep, device_get
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class InvertedIndex:
+    term_starts: Array      # (V,) i32
+    term_lens: Array        # (V,) i32
+    postings_doc: Array     # (P,) i32
+    postings_val: Array     # (P,) f32
+    n_docs: int             # static
+    vocab_size: int         # static
+    max_postings: int       # static — longest posting list (>= 1)
+
+    def tree_flatten(self):
+        children = (self.term_starts, self.term_lens,
+                    self.postings_doc, self.postings_val)
+        aux = (self.n_docs, self.vocab_size, self.max_postings)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @property
+    def n_postings(self) -> int:
+        return self.postings_doc.shape[0]
+
+    def memory_bytes(self) -> int:
+        """Index footprint (the number to compare with N*V*4 dense)."""
+        return int(sum(np.asarray(a).nbytes for a in (
+            self.term_starts, self.term_lens,
+            self.postings_doc, self.postings_val)))
+
+    def stats(self) -> Dict[str, float]:
+        lens = np.asarray(self.term_lens)
+        active = lens > 0
+        return {
+            "n_docs": self.n_docs,
+            "vocab_size": self.vocab_size,
+            "n_postings": self.n_postings,
+            "active_terms": int(active.sum()),
+            "max_postings": self.max_postings,
+            "mean_postings": float(lens[active].mean()) if active.any()
+            else 0.0,
+            "memory_bytes": self.memory_bytes(),
+        }
+
+
+def build_inverted_index(reps: SparseRep, vocab_size: int
+                         ) -> InvertedIndex:
+    """Build the index from a batched ``(N, K)`` corpus rep (host-side).
+
+    Active slots (``value > 0``) are flattened to (term, doc, impact)
+    triples, stably sorted by term (so each posting list is ordered by
+    doc id), and packed into the CSC arrays. An all-empty corpus still
+    yields valid (length-1, zero-impact) postings so the scorer's
+    static shapes never degenerate.
+    """
+    host = device_get(reps) if isinstance(reps.values, jax.Array) else reps
+    k = host.width
+    v = np.asarray(host.values, np.float32).reshape(-1, k)
+    i = np.asarray(host.indices, np.int32).reshape(-1, k)
+    n_docs = v.shape[0]
+
+    active = v > 0
+    terms = i[active]
+    if (terms < 0).any() or (terms >= vocab_size).any():
+        raise ValueError(
+            f"build_inverted_index: term ids outside [0, {vocab_size})")
+    vals = v[active]
+    docs = np.broadcast_to(np.arange(n_docs, dtype=np.int32)[:, None],
+                           i.shape)[active]
+
+    order = np.argsort(terms, kind="stable")
+    terms, vals, docs = terms[order], vals[order], docs[order]
+
+    lens = np.bincount(terms, minlength=vocab_size).astype(np.int32)
+    starts = np.zeros(vocab_size, np.int64)
+    np.cumsum(lens[:-1], out=starts[1:])
+
+    if terms.size == 0:
+        docs = np.zeros(1, np.int32)
+        vals = np.zeros(1, np.float32)
+
+    # device arrays: the scorer indexes these under jit/vmap tracing
+    import jax.numpy as jnp
+
+    return InvertedIndex(
+        term_starts=jnp.asarray(starts.astype(np.int32)),
+        term_lens=jnp.asarray(lens),
+        postings_doc=jnp.asarray(docs.astype(np.int32)),
+        postings_val=jnp.asarray(vals.astype(np.float32)),
+        n_docs=n_docs,
+        vocab_size=vocab_size,
+        max_postings=max(int(lens.max(initial=0)), 1),
+    )

@@ -1,0 +1,169 @@
+"""Retrieval scoring — impact, streaming-kernel, and dense paths
+behind one ``retrieve()`` dispatcher.
+
+Dispatch table (``method=``):
+
+    method       queries            corpus             score matrix
+    ---------    ---------------    ---------------    -------------
+    "impact"     SparseRep          InvertedIndex      never built;
+                                                       segment-sums
+                                                       into (B, N)
+    "streaming"  dense or rep       dense (N, V)       never built;
+                                                       fused Pallas
+                                                       running top-k
+    "dense"      dense or rep       dense (N, V)       (B, N) einsum
+                                                       + lax.top_k
+    "auto"       impact when an InvertedIndex is given; else
+                 streaming for corpora >= AUTO_STREAMING_N rows,
+                 dense below that
+
+All paths return ``(vals (B, k) f32, idx (B, k) i32)`` with identical
+ids (scores within fp tolerance) for equivalent inputs — the parity
+test in ``tests/test_retrieval.py`` pins that down.
+
+The impact path is the sparse-native one: per query row it gathers the
+posting lists of the query's active terms (padded to the index's
+``max_postings`` static width) and reduces them with
+``sparse/segment.py`` segment-sums — ``scores[d] = sum_t q[t] *
+impact[t, d]`` — exactly the inverted-index formulation GPUSparse
+serves LSR with. Work per query is ``O(Q * max_postings)``; the
+padding cost is the usual TPU trade of ragged gathers for one static
+dense gather + masked reduce.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.topk_score import topk_score
+from repro.retrieval.index import InvertedIndex
+from repro.retrieval.sparse_rep import SparseRep
+from repro.sparse.segment import segment_sum
+
+Array = jax.Array
+Queries = Union[Array, SparseRep]
+Corpus = Union[Array, InvertedIndex]
+
+METHODS = ("auto", "impact", "streaming", "dense")
+# corpora at or above this many rows route "auto" to the streaming
+# kernel (the (B, N) score matrix stops being a rounding error)
+AUTO_STREAMING_N = 16384
+
+
+# ---------------------------------------------------------------------------
+# impact scoring (inverted index)
+# ---------------------------------------------------------------------------
+
+def impact_scores(queries: SparseRep, index: InvertedIndex) -> Array:
+    """Dense ``(B, n_docs)`` impact scores — no (N, V) matrix anywhere.
+
+    Padded query slots (value 0) and posting-list padding both
+    contribute exactly 0 to the segment-sums, so no masking state
+    leaks into the scores.
+    """
+    l_max = index.max_postings
+    p_total = index.postings_doc.shape[0]
+    lane = jnp.arange(l_max, dtype=jnp.int32)
+
+    def one(qv: Array, qi: Array) -> Array:
+        starts = index.term_starts[qi]                     # (Q,)
+        lens = index.term_lens[qi]                         # (Q,)
+        pos = starts[:, None] + lane[None, :]              # (Q, Lmax)
+        valid = (lane[None, :] < lens[:, None]) & (qv > 0)[:, None]
+        pos = jnp.clip(pos, 0, p_total - 1)
+        docs = jnp.where(valid, index.postings_doc[pos], 0)
+        w = jnp.where(valid, index.postings_val[pos], 0.0) * qv[:, None]
+        return segment_sum(w.ravel(), docs.ravel(), index.n_docs)
+
+    qv = queries.values.reshape(-1, queries.width).astype(jnp.float32)
+    qi = queries.indices.reshape(-1, queries.width)
+    return jax.vmap(one)(qv, qi)
+
+
+# ---------------------------------------------------------------------------
+# dispatcher
+# ---------------------------------------------------------------------------
+
+def _dense_queries(queries: Queries, vocab_size: int) -> Array:
+    if isinstance(queries, SparseRep):
+        return queries.to_dense(vocab_size)
+    return queries
+
+
+def _resolve_method(method: str, corpus: Corpus) -> str:
+    if method not in METHODS:
+        raise ValueError(f"unknown retrieval method {method!r}; "
+                         f"one of {list(METHODS)}")
+    if method != "auto":
+        return method
+    if isinstance(corpus, InvertedIndex):
+        return "impact"
+    return "streaming" if corpus.shape[0] >= AUTO_STREAMING_N else "dense"
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _dense_retrieve(q: Array, C: Array, k: int) -> Tuple[Array, Array]:
+    scores = jnp.einsum("bv,nv->bn", q.astype(jnp.float32),
+                        C.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+    vals, idx = jax.lax.top_k(scores, k)
+    return vals, idx.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _impact_retrieve(queries: SparseRep, index: InvertedIndex, k: int
+                     ) -> Tuple[Array, Array]:
+    scores = impact_scores(queries, index)
+    vals, idx = jax.lax.top_k(scores, k)
+    return vals, idx.astype(jnp.int32)
+
+
+def retrieve(
+    queries: Queries,           # (B, V) dense or SparseRep
+    corpus: Corpus,             # (N, V) dense matrix or InvertedIndex
+    k: int = 10,
+    *,
+    method: str = "auto",
+    interpret: Optional[bool] = None,
+    block_b: int = 8,
+    block_n: int = 1024,
+) -> Tuple[Array, Array]:
+    """Top-k retrieval via the method table in the module docstring.
+
+    ``k`` is clamped to the corpus size so every path returns the same
+    ``(B, min(k, N))`` shape. ``interpret`` only affects the streaming
+    kernel (None = auto: Pallas interpreter off-TPU).
+    """
+    method = _resolve_method(method, corpus)
+
+    if method == "impact":
+        if not isinstance(corpus, InvertedIndex):
+            raise ValueError(
+                "method='impact' needs an InvertedIndex corpus — build "
+                "one with retrieval.index.build_inverted_index")
+        if not isinstance(queries, SparseRep):
+            raise ValueError(
+                "method='impact' needs SparseRep queries — sparsify "
+                "with retrieval.sparse_rep.sparsify_topk/threshold "
+                "(an explicit budget, not a silent one)")
+        return _impact_retrieve(queries, corpus, min(k, corpus.n_docs))
+
+    if isinstance(corpus, InvertedIndex):
+        raise ValueError(
+            f"method={method!r} needs a dense (N, V) corpus matrix; "
+            "got an InvertedIndex (use method='impact' or 'auto')")
+    n_docs, vocab = corpus.shape
+    q = _dense_queries(queries, vocab)
+    k = min(k, n_docs)
+
+    if method == "dense":
+        return _dense_retrieve(q, corpus, k)
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return topk_score(q, corpus, k=k, block_b=block_b,
+                      block_n=block_n, interpret=interpret)

@@ -1,0 +1,227 @@
+"""SparseRep — the canonical post-head currency of the retrieval stack.
+
+The Sparton head never materializes the ``(B, S, V)`` logit tensor,
+but the serving stack used to throw that win away by shipping the
+dense ``(B, V)`` rep per request (~1 MB/query at V≈250k) and scoring
+against a dense ``(N, V)`` corpus matrix. An LSR rep out of the head
+(``log1p(relu(max))``) is non-negative with a few hundred active
+terms, so the natural wire/index format is a fixed-width sparse row:
+
+    values  (..., K) f32  — impact weights, strictly positive when
+                            active; padded slots hold 0.0
+    indices (..., K) i32  — vocab ids of the active terms; padded
+                            slots hold 0 (harmless: value 0 there)
+    nnz     (...,)   i32  — active slots per row (always a prefix —
+                            the sparsifiers sort by value descending)
+
+The fixed width keeps every consumer jit-able (no ragged shapes), and
+the ``value == 0`` padding convention makes padded slots a no-op for
+every linear operation (scoring, densify-by-scatter-add). The price is
+that non-positive entries are not representable — fine for LSR, whose
+impact weights are non-negative by construction.
+
+Sparsification follows the Unified-LSR view of top-k / thresholding as
+first-class model knobs: ``sparsify_topk`` / ``sparsify_threshold``
+reduce the dense ``(B, V)`` head output on-device with the same
+running-top-k merge the ``kernels/topk_score.py`` streaming kernel
+uses (vocab tiles + ``merge_topk``), so the full-vocab sort is never
+materialized and only ``(B, K)`` ever reaches the host.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels._common import NEG_INF
+from repro.kernels.topk_score import merge_topk
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class SparseRep:
+    """Fixed-width sparse rows (see module docstring for the layout)."""
+
+    values: Array       # (..., K) float
+    indices: Array      # (..., K) int32
+    nnz: Array          # (...,)   int32
+
+    def tree_flatten(self):
+        return (self.values, self.indices, self.nnz), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+    # -- shape helpers ---------------------------------------------------
+
+    @property
+    def width(self) -> int:
+        """K — the fixed per-row slot budget."""
+        return self.values.shape[-1]
+
+    @property
+    def batch_shape(self) -> Tuple[int, ...]:
+        return self.values.shape[:-1]
+
+    @property
+    def n_rows(self) -> int:
+        return int(np.prod(self.batch_shape, dtype=np.int64)) \
+            if self.batch_shape else 1
+
+    # -- conversions -----------------------------------------------------
+
+    def to_dense(self, vocab_size: int) -> Array:
+        """Scatter back to a dense ``(..., V)`` array.
+
+        Padded slots add 0.0 at column 0 — a no-op by construction.
+        Exact inverse of the sparsifiers whenever no active term was
+        dropped (``nnz`` never hit the width/threshold caps).
+        """
+        k = self.width
+        flat_v = self.values.reshape(-1, k)
+        flat_i = self.indices.reshape(-1, k)
+        rows = flat_v.shape[0]
+        out = jnp.zeros((rows, vocab_size), flat_v.dtype)
+        out = out.at[jnp.arange(rows)[:, None], flat_i].add(flat_v)
+        return out.reshape(*self.batch_shape, vocab_size)
+
+    @classmethod
+    def from_dense(cls, dense: Array, *, max_nnz: int,
+                   threshold: float = 0.0, tile: int = 4096
+                   ) -> "SparseRep":
+        return sparsify_threshold(dense, threshold, max_nnz=max_nnz,
+                                  tile=tile)
+
+    def block_until_ready(self) -> "SparseRep":
+        jax.block_until_ready((self.values, self.indices, self.nnz))
+        return self
+
+
+# ---------------------------------------------------------------------------
+# sparsifiers (device-side, jit-able)
+# ---------------------------------------------------------------------------
+
+def _streaming_topk_rows(x: Array, k: int, tile: int
+                         ) -> Tuple[Array, Array]:
+    """Running top-k over vocab tiles of a dense ``(B, V)`` array.
+
+    The same merge machinery as the streaming retrieval kernel
+    (``kernels.topk_score.merge_topk``): scan the vocab in ``tile``
+    chunks keeping only the ``(B, k)`` running winners, so the
+    reduction is on-device and no full-V sort is materialized. Tiles
+    are visited in ascending-id order, so equal values tie-break to
+    the lowest vocab id.
+    """
+    B, V = x.shape
+    x = x.astype(jnp.float32)
+    tile = min(tile, V)
+    pad = (-V) % tile
+    xp = jnp.pad(x, ((0, 0), (0, pad)), constant_values=0.0)
+    n_tiles = xp.shape[1] // tile
+    xt = jnp.moveaxis(xp.reshape(B, n_tiles, tile), 1, 0)  # (T, B, tile)
+    ids0 = jnp.arange(tile, dtype=jnp.int32)
+
+    def body(carry, xs):
+        vals, idx = carry
+        x_tile, t = xs
+        ids = t * tile + jnp.broadcast_to(ids0[None], x_tile.shape)
+        # padded cols (id >= V) hold 0.0 and would beat real entries
+        masked = jnp.where(ids < V, x_tile, NEG_INF)
+        return merge_topk(vals, idx, masked, ids, k), None
+
+    init = (jnp.full((B, k), NEG_INF, jnp.float32),
+            jnp.zeros((B, k), jnp.int32))
+    (vals, idx), _ = jax.lax.scan(
+        body, init, (xt, jnp.arange(n_tiles, dtype=jnp.int32)))
+    return vals, idx
+
+
+def _finalize(vals: Array, idx: Array, threshold: float) -> SparseRep:
+    # Non-positive entries are "absent" (the rep convention); the
+    # winners are value-descending, so kept slots form a prefix.
+    thr = max(float(threshold), 0.0)
+    keep = vals > thr
+    return SparseRep(
+        values=jnp.where(keep, vals, 0.0),
+        indices=jnp.where(keep, idx, 0),
+        nnz=jnp.sum(keep, axis=-1).astype(jnp.int32),
+    )
+
+
+def sparsify_topk(dense: Array, k: int, *, threshold: float = 0.0,
+                  tile: int = 4096) -> SparseRep:
+    """Keep the ``k`` largest strictly-positive entries per row.
+
+    ``threshold`` additionally drops kept entries at or below it (the
+    combined Unified-LSR knob). Width of the result is ``min(k, V)``.
+    """
+    B, V = dense.shape
+    vals, idx = _streaming_topk_rows(dense, min(k, V), tile)
+    return _finalize(vals, idx, threshold)
+
+
+def sparsify_threshold(dense: Array, threshold: float = 0.0, *,
+                       max_nnz: int = 256, tile: int = 4096) -> SparseRep:
+    """Keep entries strictly above ``threshold``, capped at ``max_nnz``.
+
+    The cap keeps the output shape static for jit; when a row has more
+    than ``max_nnz`` qualifying entries the *largest* ones win (the
+    selection is a running top-k, not a truncation by vocab order).
+    """
+    B, V = dense.shape
+    vals, idx = _streaming_topk_rows(dense, min(max_nnz, V), tile)
+    return _finalize(vals, idx, threshold)
+
+
+# ---------------------------------------------------------------------------
+# host-side plumbing (serving loop / index build)
+# ---------------------------------------------------------------------------
+
+def device_get(rep: SparseRep) -> SparseRep:
+    """Rep with numpy leaves (one transfer for all three arrays)."""
+    v, i, n = jax.device_get((rep.values, rep.indices, rep.nnz))
+    return SparseRep(np.asarray(v), np.asarray(i), np.asarray(n))
+
+
+def split_rows(rep: SparseRep) -> List[SparseRep]:
+    """A batched ``(B, K)`` rep as B single-row ``(K,)`` reps (numpy)."""
+    host = device_get(rep)
+    v = host.values.reshape(-1, host.width)
+    i = host.indices.reshape(-1, host.width)
+    n = host.nnz.reshape(-1)
+    return [SparseRep(v[r], i[r], n[r]) for r in range(v.shape[0])]
+
+
+def stack_rows(reps: Sequence[SparseRep]) -> SparseRep:
+    """Stack single-row (or batched) reps into one ``(N, K)`` rep.
+
+    Widths may differ between sources (e.g. corpora indexed with
+    different budgets) — narrower rows are zero-padded to the widest,
+    which is a no-op under the padding convention.
+    """
+    if not reps:
+        raise ValueError("stack_rows: empty sequence")
+    parts = [device_get(r) if isinstance(r.values, jax.Array) else r
+             for r in reps]
+    width = max(p.width for p in parts)
+    vs, is_, ns = [], [], []
+    for p in parts:
+        v = p.values.reshape(-1, p.width)
+        i = p.indices.reshape(-1, p.width)
+        pad = width - p.width
+        if pad:
+            v = np.pad(v, ((0, 0), (0, pad)))
+            i = np.pad(i, ((0, 0), (0, pad)))
+        vs.append(np.asarray(v, np.float32))
+        is_.append(np.asarray(i, np.int32))
+        ns.append(np.asarray(p.nnz).reshape(-1))
+    return SparseRep(np.concatenate(vs), np.concatenate(is_),
+                     np.concatenate(ns).astype(np.int32))

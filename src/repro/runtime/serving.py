@@ -7,14 +7,22 @@ machinery:
    deadline/size policy and pushed through backbone + Sparton head
    (inference forward only stores the reduced (B, V) output — the
    paper's memory win applies to serving too; the argmax indices
-   double as term-level attributions).
-2. **Retrieve** — encoded queries score a candidate corpus. The dense
-   fallback is a matmul + top_k; the fused streaming kernel
-   (``kernels.topk_score``) is the production path for 1M-candidate
-   ``retrieval_cand`` workloads.
+   double as term-level attributions). With the config's rep knobs set
+   (``rep_topk``/``rep_threshold``), the output is sparsified on
+   device and each request completes as a ``SparseRep`` — only
+   ``(B, K)`` crosses to host, never the dense ``(B, V)`` rep.
+2. **Retrieve** — encoded queries score a candidate corpus through
+   ``repro.retrieval.retrieve``: the inverted impact index is the
+   sparse-native production path, the fused streaming kernel
+   (``kernels.topk_score``) covers dense 1M-candidate
+   ``retrieval_cand`` workloads, and the dense einsum remains the
+   tested fallback.
 
 ``ServingLoop`` is synchronous-deterministic (tests drive it tick by
-tick); a thread wrapper is provided for the example server.
+tick); a thread wrapper is provided for the example server. Completed
+results are handed out by ``take(uid)``, which *pops* — the loop holds
+no reference after the caller reads a result, so memory is bounded by
+in-flight work, not by total traffic.
 """
 
 from __future__ import annotations
@@ -32,25 +40,27 @@ Array = jax.Array
 
 def make_config_encoder(params: Any, cfg: Any, *, spec: Any = None,
                         mesh: Any = None, jit: bool = True
-                        ) -> Callable[[Array, Array], Array]:
-    """Canonical ``(tokens, mask) -> (B, V)`` encode fn from a config.
+                        ) -> Callable[[Array, Array], Any]:
+    """Canonical ``(tokens, mask) -> reps`` encode fn from a config.
 
-    The single serving-side seam over the unified head API: the head is
-    built by ``make_head`` from ``cfg.head_spec()`` (or an explicit
-    ``spec``), so ``head_impl``, pinned/autotuned blocks and
-    ``final_logit_softcap`` are all honored — serving paths must not
-    hardcode a head implementation.
+    The single serving-side seam over the unified head API: the
+    encoder is built by ``make_encoder`` from ``cfg.head_spec()`` (or
+    an explicit ``spec``), so ``head_impl``, pinned/autotuned blocks,
+    ``final_logit_softcap`` AND the rep-sparsification knobs are all
+    honored — serving paths must not hardcode a head implementation.
+    Output is a ``SparseRep`` when the spec sets ``rep_topk`` /
+    ``rep_threshold``, else the dense ``(B, V)`` array.
     """
-    from repro.core.head_api import make_head
+    from repro.core.head_api import make_encoder
     from repro.models import transformer as tfm
 
-    head = make_head(spec if spec is not None else cfg.head_spec(),
-                     mesh=mesh)
+    enc = make_encoder(spec if spec is not None else cfg.head_spec(),
+                       mesh=mesh)
 
-    def encode(tokens: Array, mask: Array) -> Array:
+    def encode(tokens: Array, mask: Array):
         Hs, _ = tfm.forward_hidden(params, cfg, tokens, mask)
         E, b = tfm.head_weights(params, cfg)
-        return head(Hs, E.astype(Hs.dtype), b, mask)
+        return enc(Hs, E.astype(Hs.dtype), b, mask)
 
     return jax.jit(encode) if jit else encode
 
@@ -72,12 +82,14 @@ class BatchPolicy:
 class BatchedEncoder:
     """Pads + batches requests and runs the jitted encode fn.
 
-    ``encode_fn(tokens (B, S), mask (B, S)) -> (B, V) sparse reps``.
-    Bucket padding: sequences are padded to the next multiple of
-    ``pad_to_multiple`` so the jit cache stays small.
+    ``encode_fn(tokens (B, S), mask (B, S)) -> reps`` — either a dense
+    ``(B, V)`` array or a batched ``SparseRep``; results are split per
+    request (numpy row / single-row rep). Bucket padding: sequences are
+    padded to the next multiple of ``pad_to_multiple`` so the jit
+    cache stays small.
     """
 
-    def __init__(self, encode_fn: Callable[[Array, Array], Array],
+    def __init__(self, encode_fn: Callable[[Array, Array], Any],
                  *, policy: Optional[BatchPolicy] = None):
         self.encode_fn = encode_fn
         self.policy = policy or BatchPolicy()
@@ -86,7 +98,7 @@ class BatchedEncoder:
         m = self.policy.pad_to_multiple
         return max(m, ((n + m - 1) // m) * m)
 
-    def encode_batch(self, reqs: Sequence[Request]) -> Dict[int, np.ndarray]:
+    def encode_batch(self, reqs: Sequence[Request]) -> Dict[int, Any]:
         if not reqs:
             return {}
         S = self._pad_len(max(len(r.tokens) for r in reqs))
@@ -97,25 +109,45 @@ class BatchedEncoder:
             n = len(r.tokens)
             toks[i, :n] = r.tokens
             mask[i, :n] = 1
-        reps = np.asarray(self.encode_fn(jnp.asarray(toks),
-                                         jnp.asarray(mask)))
-        return {r.uid: reps[i] for i, r in enumerate(reqs)}
+        reps = self.encode_fn(jnp.asarray(toks), jnp.asarray(mask))
+        from repro.retrieval.sparse_rep import SparseRep, split_rows
+
+        if isinstance(reps, SparseRep):
+            rows: Sequence[Any] = split_rows(reps)
+        else:
+            rows = np.asarray(reps)
+        return {r.uid: rows[i] for i, r in enumerate(reqs)}
 
 
 class ServingLoop:
-    """Deadline/size micro-batching over a request queue."""
+    """Deadline/size micro-batching over a request queue.
+
+    ``completed`` holds results only until the caller collects them
+    with ``take(uid)`` — results are popped on read, so a loop serving
+    heavy traffic stays bounded by in-flight work (a long-lived loop
+    whose results were read but never evicted used to grow without
+    bound).
+    """
 
     def __init__(self, encoder: BatchedEncoder,
                  *, clock: Callable[[], float] = time.monotonic):
         self.encoder = encoder
         self.clock = clock
         self.pending: List[Request] = []
-        self.completed: Dict[int, np.ndarray] = {}
+        self.completed: Dict[int, Any] = {}
         self.batch_sizes: List[int] = []
 
     def submit(self, req: Request) -> None:
         req.arrival_t = self.clock()
         self.pending.append(req)
+
+    def take(self, uid: int) -> Any:
+        """Pop and return the completed result for ``uid``.
+
+        Raises ``KeyError`` when the request hasn't completed (or was
+        already taken) — the loop never hands out a result twice.
+        """
+        return self.completed.pop(uid)
 
     def tick(self, *, force: bool = False) -> int:
         """Dispatch one batch if policy triggers. Returns batch size."""
@@ -138,12 +170,17 @@ class ServingLoop:
 
 
 def retrieve_topk(
-    q_reps: Array,          # (B, V) sparse query reps
+    q_reps: Array,          # (B, V) query reps (dense or SparseRep)
     doc_matrix: Array,      # (N, V) document reps (or (N, D) dense)
     k: int = 10,
 ) -> Tuple[Array, Array]:
-    """Dense-fallback retrieval: scores + top-k doc ids."""
-    scores = jnp.einsum("bv,nv->bn", q_reps, doc_matrix,
-                        preferred_element_type=jnp.float32)
-    vals, idx = jax.lax.top_k(scores, k)
-    return vals, idx.astype(jnp.int32)
+    """Dense-fallback retrieval: scores + top-k doc ids.
+
+    Back-compat shim over the unified dispatcher — new code should
+    call ``repro.retrieval.retrieve(queries, corpus, k, method=...)``
+    directly (which also serves the inverted-index and streaming-kernel
+    paths).
+    """
+    from repro.retrieval.score import retrieve
+
+    return retrieve(q_reps, doc_matrix, k, method="dense")

@@ -137,6 +137,75 @@ def test_all_candidates_failing_does_not_poison_cache(
     assert not os.path.exists(isolated_cache)
 
 
+# ---------------------------------------------------------------------------
+# per-kernel tuning (fwd vs dH vs dE)
+# ---------------------------------------------------------------------------
+
+def test_per_kernel_round_trip(isolated_cache):
+    """Per-kernel winners are persisted under kernel-suffixed keys and
+    read back by kernel-scoped lookups (including a cold cache)."""
+    from repro.kernels.autotune import autotune_kernel_blocks
+
+    winners = autotune_kernel_blocks(4, 32, 16, 64, max_candidates=2)
+    assert set(winners) == set(autotune.KERNELS)
+    raw = json.load(open(isolated_cache))
+    backend = jax.default_backend()
+    for kn in autotune.KERNELS:
+        key = shape_key(4, 32, 16, 64, jnp.float32, backend, kn)
+        assert raw[key]["source"] == "measured"
+        assert raw[key]["kernel"] == kn
+    autotune.clear_cache()
+    for kn in autotune.KERNELS:
+        assert get_blocks(4, 32, 16, 64, kernel=kn) == winners[kn]
+    # re-tuning is a pure cache hit
+    assert autotune_kernel_blocks(4, 32, 16, 64) == winners
+
+
+def test_per_kernel_falls_back_to_legacy_joint_entry(isolated_cache):
+    """Old cache files (joint keys only) must keep working: a
+    per-kernel lookup with no suffixed entry reads the joint one."""
+    blocks = autotune_blocks(4, 32, 16, 64, max_candidates=1)
+    autotune.clear_cache()
+    for kn in autotune.KERNELS:
+        assert get_blocks(4, 32, 16, 64, kernel=kn) == blocks
+
+
+def test_per_kernel_vmem_is_component_of_joint():
+    """Kernel-scoped VMEM residency never exceeds the joint worst case,
+    and the joint is exactly the max over the three kernels."""
+    for blocks in [(2, 64, 128), (8, 128, 512), (1, 256, 2048)]:
+        per = [vmem_bytes(blocks, 768, kernel=kn)
+               for kn in autotune.KERNELS]
+        assert vmem_bytes(blocks, 768) == max(per)
+
+
+def test_per_kernel_candidates_admit_more_than_joint():
+    """A tight budget excludes a triple jointly (worst-case kernel
+    overflows) while still admitting it for a cheaper kernel — the
+    reason per-kernel enumeration exists."""
+    B, S, D, V = 16, 256, 2048, 30522
+    per_kernel = {kn: candidate_blocks(B, S, D, V, kernel=kn)
+                  for kn in autotune.KERNELS}
+    joint = candidate_blocks(B, S, D, V)
+    for kn, cands in per_kernel.items():
+        assert set(joint) <= set(cands), kn
+    assert any(len(cands) > len(joint)
+               for cands in per_kernel.values())
+
+
+def test_all_kernel_candidates_failing_does_not_poison_cache(
+        isolated_cache, monkeypatch):
+    from repro.kernels.autotune import autotune_kernel_blocks
+
+    def boom(*a, **k):
+        raise RuntimeError("lowering failed")
+    monkeypatch.setattr(autotune, "_time_ms", boom)
+    winners = autotune_kernel_blocks(4, 32, 16, 64, max_candidates=2)
+    for kn in autotune.KERNELS:
+        assert winners[kn] == heuristic_blocks(4, 32, 16, 64, kernel=kn)
+    assert not os.path.exists(isolated_cache)
+
+
 def test_config_head_blocks_threading():
     """TransformerConfig.head_blocks: pinned fields win, None = auto."""
     from repro.configs import get_config

@@ -216,9 +216,9 @@ _SHARDED_SCRIPT = textwrap.dedent("""
     # vocab shard, not the global V
     seen_V = []
     _orig = autotune.resolve_blocks
-    def _spy(B_, S_, D_, V_, dtype, bb, bs, bv):
+    def _spy(B_, S_, D_, V_, dtype, bb, bs, bv, **kw):
         seen_V.append(V_)
-        return _orig(B_, S_, D_, V_, dtype, bb, bs, bv)
+        return _orig(B_, S_, D_, V_, dtype, bb, bs, bv, **kw)
     autotune.resolve_blocks = _spy
 
     for n_model, softcap in [(1, None), (2, None), (2, 4.0)]:

@@ -187,6 +187,46 @@ def test_serving_loop_deadline_trigger():
     assert 0 in loop.completed
 
 
+def test_take_pops_results_memory_bounded():
+    """Results must be popped on read: a long-lived loop whose caller
+    collects every result holds nothing afterwards — memory is bounded
+    by in-flight work, not total traffic."""
+    clock = FakeClock()
+    enc = BatchedEncoder(_fake_encoder(),
+                         policy=BatchPolicy(max_batch=4, max_wait_s=0.0))
+    loop = ServingLoop(enc, clock=clock)
+    high_water = 0
+    for uid in range(64):
+        loop.submit(Request(uid=uid, tokens=np.array([uid], np.int32)))
+        clock.advance(0.01)
+        loop.tick()
+        high_water = max(high_water, len(loop.completed))
+        if uid % 4 == 3:           # collect the finished micro-batch
+            for u in range(uid - 3, uid + 1):
+                rep = loop.take(u)
+                assert rep.shape == (32,)
+            assert len(loop.completed) == 0
+    loop.drain()
+    # never accumulated more than one dispatched batch
+    assert high_water <= 4
+    assert len(loop.completed) == 0
+
+
+def test_take_raises_on_missing_and_double_take():
+    clock = FakeClock()
+    enc = BatchedEncoder(_fake_encoder(),
+                         policy=BatchPolicy(max_batch=1, max_wait_s=0.0))
+    loop = ServingLoop(enc, clock=clock)
+    loop.submit(Request(uid=7, tokens=np.array([1], np.int32)))
+    clock.advance(1.0)
+    loop.tick()
+    loop.take(7)
+    with pytest.raises(KeyError):
+        loop.take(7)               # a result is never handed out twice
+    with pytest.raises(KeyError):
+        loop.take(8)               # never completed
+
+
 def test_serving_pads_and_masks_correctly():
     enc = BatchedEncoder(_fake_encoder(),
                          policy=BatchPolicy(pad_to_multiple=8))
