@@ -1,0 +1,174 @@
+"""Index-engine benchmark: pruned vs impact vs streaming latency,
+quantized vs raw index bytes, and sharded scaling, on one graded LSR
+corpus (``repro.data.synthetic.lsr_impact_corpus``).
+
+Four comparisons behind ``BENCH_engine.json``:
+
+* ``methods`` — median ms for ``impact`` (exact segment-sums),
+  ``pruned`` (two-tier MaxScore), ``quantized`` (on-the-fly dequant)
+  and ``streaming`` (the dense Pallas kernel over the densified
+  corpus, the PR-3 reference point);
+* ``quantization`` — raw vs compressed index bytes; the acceptance
+  bar is ratio >= 4x at identical top-k ids;
+* ``pruned`` — id parity vs impact at the safe margin plus the
+  fraction of queries whose pruning was provably exact, and the same
+  at an aggressive ``prune_margin`` for the recall/speed trade;
+* ``sharded`` — median ms at 1/2/4 shards (single-device vmap path on
+  CI — a work partition, not a memory win; the shard_map path needs a
+  real mesh) with id parity vs the unsharded scorer.
+
+``--smoke`` (or ``BENCH_SMOKE=1``) shrinks the workload for CI; the
+interpret-mode/CPU caveat from DESIGN.md §5 applies to all timings.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._common import time_fn
+from repro.data.synthetic import lsr_impact_corpus
+from repro.retrieval import (build_inverted_index, pruned_retrieve,
+                             quantize_index, retrieve, shard_index,
+                             sparsify_topk)
+
+FULL = dict(n_docs=8192, vocab=4096, doc_nnz=64, n_queries=16,
+            q_nnz=32, k=10, block_n=2048)
+SMOKE = dict(n_docs=2048, vocab=2048, doc_nnz=48, n_queries=8,
+             q_nnz=28, k=10, block_n=512)
+PRUNE_MARGIN_AGGR = 0.5
+
+
+def run(smoke: bool = False, json_path: str = None):
+    smoke = smoke or os.environ.get("BENCH_SMOKE") == "1"
+    p = SMOKE if smoke else FULL
+    iters = 3 if smoke else 10
+    k = p["k"]
+
+    data = lsr_impact_corpus(
+        n_docs=p["n_docs"], vocab=p["vocab"], doc_nnz=p["doc_nnz"],
+        n_queries=p["n_queries"], q_nnz=p["q_nnz"])
+    q_rep = sparsify_topk(jnp.asarray(data["queries"]),
+                          p["q_nnz"]).block_until_ready()
+    d_rep = sparsify_topk(jnp.asarray(data["docs"]),
+                          p["doc_nnz"]).block_until_ready()
+    d_dense = jnp.asarray(data["docs"])
+
+    raw = build_inverted_index(d_rep, p["vocab"])          # impact path
+    engine = build_inverted_index(d_rep, p["vocab"],
+                                  keep_forward=True)       # pruned path
+    quant = quantize_index(raw)
+    interpret = jax.default_backend() != "tpu"
+
+    record = {
+        "shape": {"N": p["n_docs"], "V": p["vocab"], "B": p["n_queries"],
+                  "k": k, "doc_nnz": p["doc_nnz"], "q_nnz": p["q_nnz"]},
+        "backend": jax.default_backend(),
+        "interpret": interpret,
+        "methods": {},
+    }
+
+    methods = {
+        "impact": (lambda: retrieve(q_rep, raw, k, method="impact"),
+                   raw.memory_bytes()),
+        "pruned": (lambda: retrieve(q_rep, engine, k, method="pruned"),
+                   engine.memory_bytes()),
+        "quantized": (lambda: retrieve(q_rep, quant, k,
+                                       method="quantized"),
+                      quant.memory_bytes()),
+        "streaming": (lambda: retrieve(
+            q_rep, d_dense, k, method="streaming",
+            block_b=min(8, p["n_queries"]), block_n=p["block_n"],
+            interpret=interpret), int(d_dense.nbytes)),
+    }
+    ids = {}
+    for name, (fn, corpus_bytes) in methods.items():
+        t = time_fn(fn, iters=iters)
+        _, idx = fn()
+        ids[name] = np.asarray(idx)
+        record["methods"][name] = {"median_ms": round(t, 3),
+                                   "corpus_bytes": int(corpus_bytes)}
+
+    # quantization: the >= 4x acceptance bar at identical top-k ids
+    ratio = raw.memory_bytes() / quant.memory_bytes()
+    record["quantization"] = {
+        "raw_bytes": raw.memory_bytes(),
+        "quantized_bytes": quant.memory_bytes(),
+        "ratio": round(ratio, 3),
+        "phantom_frac": round(quant.stats()["phantom_frac"], 4),
+        "topk_ids_equal": bool(np.array_equal(ids["impact"],
+                                              ids["quantized"])),
+    }
+
+    # pruned: safe-margin parity + exactness frontier, then the
+    # aggressive-margin operating point
+    _, _, frontier = pruned_retrieve(q_rep, engine, k,
+                                     with_diagnostics=True)
+    _, idx_aggr = pruned_retrieve(q_rep, engine, k,
+                                  prune_margin=PRUNE_MARGIN_AGGR)
+    overlap = np.mean([
+        np.intersect1d(a, b).size / k
+        for a, b in zip(ids["impact"], np.asarray(idx_aggr))])
+    record["pruned"] = {
+        "topk_ids_equal": bool(np.array_equal(ids["impact"],
+                                              ids["pruned"])),
+        "exact_frontier_frac": float(np.asarray(frontier).mean()),
+        "aggr_margin": PRUNE_MARGIN_AGGR,
+        "aggr_topk_overlap": round(float(overlap), 4),
+    }
+
+    # sharded scaling (vmap fallback — shard counts partition the work;
+    # real scaling needs a device mesh, see DESIGN.md §8.3)
+    record["sharded"] = {}
+    for s in (1, 2, 4):
+        sidx = shard_index(d_rep, p["vocab"], s)
+        fn = lambda: retrieve(q_rep, sidx, k, method="sharded")
+        t = time_fn(fn, iters=iters)
+        _, sid = fn()
+        record["sharded"][str(s)] = {
+            "median_ms": round(t, 3),
+            "topk_ids_equal": bool(np.array_equal(ids["impact"],
+                                                  np.asarray(sid))),
+        }
+
+    record["parity"] = {"topk_ids_equal": bool(
+        record["quantization"]["topk_ids_equal"]
+        and record["pruned"]["topk_ids_equal"]
+        and all(v["topk_ids_equal"]
+                for v in record["sharded"].values()))}
+
+    print("method,median_ms,corpus_bytes")
+    for name, rec in record["methods"].items():
+        print(f"{name},{rec['median_ms']},{rec['corpus_bytes']}")
+    print(f"quantized/raw bytes: 1/{ratio:.2f} "
+          f"(ids equal: {record['quantization']['topk_ids_equal']})")
+    print(f"pruned ids equal: {record['pruned']['topk_ids_equal']} "
+          f"(exact frontier: "
+          f"{record['pruned']['exact_frontier_frac']:.2f}, "
+          f"margin={PRUNE_MARGIN_AGGR} overlap: "
+          f"{record['pruned']['aggr_topk_overlap']:.2f})")
+    for s, rec in record["sharded"].items():
+        print(f"sharded x{s}: {rec['median_ms']} ms "
+              f"(ids equal: {rec['topk_ids_equal']})")
+    print(f"top-k ids identical across engine paths: "
+          f"{record['parity']['topk_ids_equal']}")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(record, f, indent=2, sort_keys=True)
+        print(f"wrote {json_path}")
+    return record
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized workload")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="emit BENCH_engine.json-style record here")
+    a = ap.parse_args()
+    run(smoke=a.smoke, json_path=a.json)

@@ -77,10 +77,12 @@ def roofline_table(path: str) -> str:
 
 
 def _bench_metrics(path: str) -> dict:
-    """Flatten one BENCH_*.json record to ``{metric: median_ms}``.
+    """Flatten one BENCH_*.json record to ``{metric: value}``.
 
-    Understands both shapes: ``BENCH_kernels.json`` (``heads`` ->
-    fwd/fwd_bwd passes) and ``BENCH_retrieval.json`` (``methods``).
+    Understands the three shapes: ``BENCH_kernels.json`` (``heads`` ->
+    fwd/fwd_bwd passes), ``BENCH_retrieval.json`` (``methods``), and
+    ``BENCH_engine.json`` (``methods`` + quantization ratio + sharded
+    scaling).
     """
     d = json.load(open(path))
     out = {}
@@ -89,6 +91,10 @@ def _bench_metrics(path: str) -> dict:
             out[f"{head}/{pss}"] = rec.get("median_ms")
     for m, rec in d.get("methods", {}).items():
         out[f"retrieval/{m}"] = rec.get("median_ms")
+    if "quantization" in d:
+        out["quant/ratio"] = d["quantization"].get("ratio")
+    for s, rec in d.get("sharded", {}).items():
+        out[f"sharded/x{s}"] = rec.get("median_ms")
     return out
 
 
@@ -128,7 +134,7 @@ def bench_trends(history_dir: str = "bench_history") -> int:
     the current record next to them as ``<NAME>.json``. Returns the
     number of tables printed."""
     printed = 0
-    for name in ("BENCH_kernels", "BENCH_retrieval"):
+    for name in ("BENCH_kernels", "BENCH_retrieval", "BENCH_engine"):
         hist = sorted(glob.glob(os.path.join(history_dir,
                                              f"{name}*.json")))
         cur = f"{name}.json"

@@ -2,17 +2,28 @@
 
 1. Index a synthetic corpus with the Sparton head (document side):
    encode -> on-device top-k sparsify (SparseRep) -> inverted impact
-   index. No dense (N, V) corpus matrix is ever materialized.
+   index. No dense (N, V) corpus matrix is ever materialized. With
+   ``--engine`` the corpus is instead grown *online* through the
+   incremental ``CorpusEngine``/``IndexBuilder`` (add/flush per batch,
+   a mid-stream remove, compaction), optionally quantized.
 2. Serve queries through the deadline/size micro-batching loop;
    results come back as SparseReps and are popped with ``take``.
 3. Retrieve top-k through the unified dispatcher: inverted-index
    impact scoring (the production sparse path), cross-checked against
    the dense fallback built *from the same SparseReps*, plus the fused
    streaming top-k kernel on the 1M-candidate-style dense workload.
+   ``--prune-margin M`` additionally exercises the two-tier pruned
+   scorer (M = 0 is the safe margin: ids identical to impact).
 
 Run:  PYTHONPATH=src python examples/serve_retrieval.py
+      PYTHONPATH=src python examples/serve_retrieval.py \\
+          --engine --quantize
+      PYTHONPATH=src python examples/serve_retrieval.py \\
+          --engine --prune-margin 0.0
 """
 
+import argparse
+import dataclasses
 import time
 
 import jax
@@ -23,13 +34,29 @@ from repro.configs import get_config
 from repro.kernels.topk_score import topk_score
 from repro.launch.steps import init_state, streaming_topk
 from repro.retrieval import build_inverted_index, retrieve, stack_rows
-from repro.runtime.serving import (BatchedEncoder, BatchPolicy, Request,
-                                   ServingLoop, make_config_encoder)
+from repro.runtime.serving import (BatchedEncoder, BatchPolicy,
+                                   CorpusEngine, Request, ServingLoop,
+                                   make_config_encoder)
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--engine", action="store_true",
+                help="grow the corpus online via CorpusEngine/"
+                     "IndexBuilder instead of one frozen build")
+ap.add_argument("--quantize", action="store_true",
+                help="with --engine: serve the base segment as a "
+                     "compressed QuantizedIndex")
+ap.add_argument("--prune-margin", type=float, default=None, metavar="M",
+                help="with --engine: search through the two-tier "
+                     "pruned scorer at this margin (0 = safe)")
+args = ap.parse_args()
+if (args.quantize or args.prune_margin is not None) and not args.engine:
+    ap.error("--quantize/--prune-margin need --engine")
+if args.quantize and args.prune_margin is not None:
+    ap.error("--quantize and --prune-margin are exclusive")
 
 CORPUS, QUERIES, K, REP_TOPK = 512, 24, 5, 48
 
 cfg = get_config("splade_bert").SMOKE
-import dataclasses
 # the Unified-LSR knob: reps leave the head as top-48 SparseRep rows
 cfg = dataclasses.replace(cfg, rep_topk=REP_TOPK)
 state, _ = init_state("splade_bert", jax.random.PRNGKey(0), smoke=True)
@@ -45,6 +72,22 @@ rng = np.random.default_rng(0)
 # --- 1. index the corpus (sparse; never a dense (N, V) matrix) --------
 doc_tokens = rng.integers(1, cfg.vocab_size, size=(CORPUS, 24))
 doc_tokens = doc_tokens.astype(np.int32)
+engine = None
+if args.engine:
+    engine = CorpusEngine(
+        BatchedEncoder(encode, policy=BatchPolicy(max_batch=64)),
+        cfg.vocab_size, quantize=args.quantize,
+        keep_forward=args.prune_margin is not None)
+    for lo in range(0, CORPUS, 64):
+        engine.add_docs(list(doc_tokens[lo:lo + 64]))
+        engine.flush()          # online growth: visible batch by batch
+    # exercise the lifecycle: tombstone a tail slice, then compact
+    engine.remove_docs(range(CORPUS - 32, CORPUS))
+    engine.flush(force_compact=True)
+    st = engine.stats()
+    print(f"engine-indexed {st['n_alive']} live docs "
+          f"({st['n_compactions']} compactions, quantized base: "
+          f"{st['quantized_base']})")
 doc_parts = []
 for lo in range(0, CORPUS, 64):
     reps = encode(jnp.asarray(doc_tokens[lo:lo + 64]),
@@ -86,6 +129,32 @@ vals_d, idx_d = retrieve(q_rep, d_dense, K, method="dense")
 assert np.array_equal(np.asarray(idx), np.asarray(idx_d))
 assert np.allclose(np.asarray(vals), np.asarray(vals_d), atol=1e-4)
 print("impact scoring == dense fallback (same SparseReps): True")
+
+if engine is not None:
+    # the online-built engine must agree with the frozen build
+    # (external ids == positions here: adds were in order, compaction
+    # dropped only the tombstoned tail) — on query rows whose frozen
+    # top-K contains no tombstoned doc
+    kw = ({"method": "pruned", "prune_margin": args.prune_margin}
+          if args.prune_margin is not None else {})
+    vals_e, ids_e = engine.search(q_rep, K, **kw)
+    rows_ok = (np.asarray(idx) < CORPUS - 32).all(axis=1)
+    tag = "pruned" if kw else ("quantized" if args.quantize
+                               else "impact")
+    if args.quantize or (args.prune_margin or 0) > 0:
+        # lossy modes on an untrained random-rep corpus: pin the top-1
+        # (exact-duplicate queries give it a huge score gap)
+        assert np.array_equal(ids_e[rows_ok, 0],
+                              np.asarray(idx)[rows_ok, 0]), \
+            "engine search lost the exact-duplicate top-1"
+        print(f"engine search [{tag}] top-1 == frozen-index top-1: "
+              f"True")
+    else:
+        assert np.array_equal(ids_e[rows_ok],
+                              np.asarray(idx)[rows_ok]), \
+            "engine search disagrees with the frozen index"
+        print(f"engine search [{tag}] == frozen-index retrieval on "
+              f"live docs: True")
 
 # --- 3b. the 1M-candidate regime: fused streaming top-k ---------------
 cand = jax.random.normal(jax.random.PRNGKey(1), (20000, 64))

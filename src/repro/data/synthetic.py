@@ -68,6 +68,85 @@ def lsr_pair_batches(
         step += 1
 
 
+def lsr_impact_corpus(
+    *,
+    n_docs: int,
+    vocab: int,
+    doc_nnz: int,
+    n_queries: int = 0,
+    q_nnz: int = 16,
+    graded: int = 12,
+    seed: int = 0,
+    term_jitter: float = 0.04,
+) -> Dict[str, np.ndarray]:
+    """Synthetic LSR impact matrices with graded relevance structure —
+    the retrieval-engine benchmark corpus.
+
+    Two properties real LSR corpora have and pure-random matrices
+    lack:
+
+    * **Per-term concentrated impacts.** A term's weight is IDF-like
+      across the documents activating it: term t gets a center ``c_t
+      ~ U(0.5, 2.0)`` and background postings draw ``c_t * (1 +
+      U(-j, +j))`` (``j = term_jitter``), so per-term affine
+      quantization (``engine/quantize``) sees a tight range.
+    * **Graded relevant documents.** Per query, ``graded`` planted
+      docs share a strictly shrinking prefix of the query's terms
+      (``q_nnz - 2i`` terms for grade i) at normal per-term impacts —
+      so the top-``k`` ranking (for ``k <= graded - 2``) has
+      two-whole-terms score gaps between consecutive grades, far
+      above fp/quantization noise, making cross-method id-parity
+      assertions meaningful rather than coin flips on near-ties.
+      (TREC-style graded qrels, in synthetic form.)
+
+    Documents activate ``doc_nnz`` uniform-random distinct terms
+    (planted docs: the shared prefix + random fillers). Returns
+    ``{"docs": (n_docs, vocab) f32[, "queries": (n_queries, vocab)
+    f32]}`` dense matrices (sparsify/index downstream).
+    """
+    if n_queries and n_docs < n_queries * graded:
+        raise ValueError(f"need n_docs >= n_queries*graded = "
+                         f"{n_queries * graded}, got {n_docs}")
+    if n_queries and (doc_nnz < q_nnz or q_nnz < 2 * graded + 2):
+        raise ValueError("planted docs need doc_nnz >= q_nnz and "
+                         "q_nnz >= 2*graded + 2")
+    rng = np.random.default_rng(seed)
+    centers = rng.uniform(0.5, 2.0, size=vocab).astype(np.float32)
+
+    def impacts(cols):
+        jit = rng.uniform(1 - term_jitter, 1 + term_jitter,
+                          size=cols.shape[0]).astype(np.float32)
+        return centers[cols] * jit
+
+    def fill(n, nnz):
+        m = np.zeros((n, vocab), np.float32)
+        rows = np.repeat(np.arange(n), nnz)
+        cols = np.stack([rng.choice(vocab, size=nnz, replace=False)
+                         for _ in range(n)]).ravel()
+        m[rows, cols] = impacts(cols)
+        return m
+
+    docs = fill(n_docs, doc_nnz)
+    out = {"docs": docs}
+    if n_queries:
+        queries = np.zeros((n_queries, vocab), np.float32)
+        for b in range(n_queries):
+            q_terms = rng.choice(vocab, size=q_nnz, replace=False)
+            queries[b, q_terms] = impacts(q_terms)
+            for i in range(graded):
+                d = b * graded + i
+                shared = q_terms[:q_nnz - 2 * i]
+                docs[d] = 0.0
+                docs[d, shared] = impacts(shared)
+                pool = np.setdiff1d(np.arange(vocab), shared,
+                                    assume_unique=False)
+                cols = rng.choice(pool, size=doc_nnz - shared.shape[0],
+                                  replace=False)
+                docs[d, cols] = impacts(cols)
+        out["queries"] = queries
+    return out
+
+
 def lm_token_batches(
     *, batch: int, seq_len: int, vocab: int, seed: int = 0, shard: int = 0,
 ) -> Iterator[Dict[str, np.ndarray]]:

@@ -4,13 +4,18 @@ Runs the sparse-native LSR serving pipeline end-to-end:
 
 1. index  — encode a synthetic corpus through backbone + Sparton head,
             sparsify on-device (``rep_topk``), build the inverted
-            impact index (no dense (N, V) corpus matrix anywhere);
+            impact index (no dense (N, V) corpus matrix anywhere).
+            With ``--engine`` the corpus is grown *online* through the
+            incremental ``CorpusEngine``/``IndexBuilder`` (batches are
+            added and flushed as they arrive; ``--remove-frac``
+            tombstones a slice mid-stream to exercise the lifecycle),
+            optionally compressed (``--quantize``) or served through
+            the two-tier pruned scorer (``--prune-margin``).
 2. serve  — stream queries through the deadline/size micro-batching
             loop (results popped via ``take``), reporting latency and
             achieved batch sizes;
-3. retrieve — top-k via the unified dispatcher (``--method impact``
-            by default; ``dense``/``streaming`` remain for A/B runs —
-            both need the dense corpus, which ``--rep-topk 0`` keeps).
+3. retrieve — top-k via the unified dispatcher (``--method`` selects
+            the path; see repro.retrieval.retrieve's dispatch table).
 """
 
 import argparse
@@ -19,6 +24,8 @@ import time
 
 
 def main(argv=None) -> int:
+    from repro.retrieval import METHODS
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="splade_bert")
     ap.add_argument("--requests", type=int, default=64)
@@ -27,15 +34,32 @@ def main(argv=None) -> int:
     ap.add_argument("--rep-topk", type=int, default=64,
                     help="per-row term budget of the on-device rep "
                          "sparsifier; 0 = dense reps (legacy path)")
-    ap.add_argument("--method", default="auto",
-                    choices=["auto", "impact", "streaming", "dense"],
+    ap.add_argument("--method", default="auto", choices=list(METHODS),
                     help="retrieval path (see repro.retrieval.retrieve)")
+    ap.add_argument("--shards", type=int, default=2,
+                    help="--method sharded: shard count (single-device "
+                         "vmap path unless a mesh is wired in)")
     ap.add_argument("--index-batch", type=int, default=64,
                     help="corpus encoding batch size")
     ap.add_argument("--head-impl", default=None,
                     help="override the config's head backend (any "
                          "registered impl; see "
                          "repro.core.head_api.available_impls)")
+    ap.add_argument("--engine", action="store_true",
+                    help="grow the corpus online through the "
+                         "incremental IndexBuilder instead of one "
+                         "frozen build")
+    ap.add_argument("--quantize", action="store_true",
+                    help="engine mode: serve the base segment as a "
+                         "compressed QuantizedIndex")
+    ap.add_argument("--prune-margin", type=float, default=None,
+                    metavar="M",
+                    help="engine mode: retrieve through the two-tier "
+                         "pruned scorer with this margin (0 = safe)")
+    ap.add_argument("--remove-frac", type=float, default=0.0,
+                    help="engine mode: tombstone this fraction of the "
+                         "corpus mid-stream (exercises remove + "
+                         "compaction)")
     args = ap.parse_args(argv)
     # method/rep compatibility is knowable before spending minutes
     # encoding the corpus — reject bad combinations at argparse time
@@ -43,9 +67,24 @@ def main(argv=None) -> int:
         ap.error(f"--method {args.method} needs the dense corpus "
                  f"matrix; pass --rep-topk 0 to keep it (or use "
                  f"--method impact/auto with the sparse index)")
-    if args.method == "impact" and args.rep_topk <= 0:
-        ap.error("--method impact needs SparseRep queries and the "
-                 "inverted index; pass a positive --rep-topk")
+    if args.method in ("impact", "pruned", "quantized", "sharded") \
+            and args.rep_topk <= 0:
+        ap.error(f"--method {args.method} needs SparseRep queries and "
+                 f"an index; pass a positive --rep-topk")
+    if (args.quantize or args.prune_margin is not None
+            or args.remove_frac) and not args.engine:
+        ap.error("--quantize/--prune-margin/--remove-frac need "
+                 "--engine")
+    if args.engine and args.rep_topk <= 0:
+        ap.error("--engine needs sparse reps; pass a positive "
+                 "--rep-topk")
+    if args.engine and args.quantize and args.prune_margin is not None:
+        ap.error("--quantize and --prune-margin are exclusive (the "
+                 "pruned rescorer reads raw forward rows)")
+    if args.engine and args.method != "auto":
+        ap.error("--engine picks its retrieval path from "
+                 "--quantize/--prune-margin; drop --method (the "
+                 "builder's segments are searched via 'auto')")
 
     import dataclasses
 
@@ -56,8 +95,9 @@ def main(argv=None) -> int:
     from repro.configs import get_config
     from repro.launch.steps import init_state
     from repro.retrieval import build_inverted_index, retrieve, stack_rows
-    from repro.runtime.serving import (BatchedEncoder, BatchPolicy, Request,
-                                       ServingLoop, make_config_encoder)
+    from repro.runtime.serving import (BatchedEncoder, BatchPolicy,
+                                       CorpusEngine, Request, ServingLoop,
+                                       make_config_encoder)
 
     mod = get_config(args.arch)
     cfg = mod.SMOKE
@@ -77,35 +117,80 @@ def main(argv=None) -> int:
     encode = make_config_encoder(params, cfg)
 
     rng = np.random.default_rng(0)
+    bs = args.index_batch
 
     # --- 1. index the corpus (batched; never a dense (N, V) matrix) --
     t0 = time.monotonic()
-    doc_parts, dense_parts = [], []
-    bs = args.index_batch
-    for lo in range(0, args.corpus, bs):
-        n = min(bs, args.corpus - lo)
-        toks = rng.integers(1, cfg.vocab_size, size=(n, 16)).astype(np.int32)
-        reps = encode(jnp.asarray(toks), jnp.ones((n, 16), jnp.int32))
-        if sparse:
-            doc_parts.append(reps)
-        else:
-            dense_parts.append(np.asarray(reps))
-    if sparse:
-        corpus_rep = stack_rows(doc_parts)
-        index = build_inverted_index(corpus_rep, cfg.vocab_size)
-        corpus = index
-        st = index.stats()
-        print(f"indexed {st['n_docs']} docs in "
-              f"{(time.monotonic() - t0) * 1e3:.1f} ms: "
-              f"{st['n_postings']} postings over {st['active_terms']} "
-              f"terms, {st['memory_bytes'] / 2**20:.2f} MiB "
-              f"(dense (N, V) would be "
-              f"{args.corpus * cfg.vocab_size * 4 / 2**20:.2f} MiB)")
+    engine = None
+    if args.engine:
+        engine = CorpusEngine(
+            BatchedEncoder(encode,
+                           policy=BatchPolicy(max_batch=bs)),
+            cfg.vocab_size, quantize=args.quantize,
+            keep_forward=args.prune_margin is not None)
+        for lo in range(0, args.corpus, bs):
+            n = min(bs, args.corpus - lo)
+            toks = [rng.integers(1, cfg.vocab_size, size=16)
+                    .astype(np.int32) for _ in range(n)]
+            engine.add_docs(toks)
+            engine.flush()       # online growth: visible batch by batch
+        if args.remove_frac > 0:
+            drop = rng.choice(args.corpus,
+                              size=int(args.remove_frac * args.corpus),
+                              replace=False)
+            engine.remove_docs(drop.tolist())
+            engine.flush()
+        st = engine.stats()
+        print(f"engine-indexed {st['n_alive']} live docs "
+              f"({st['n_dead']} tombstoned, "
+              f"{st['n_compactions']} compactions, "
+              f"quantized base: {st['quantized_base']}) in "
+              f"{(time.monotonic() - t0) * 1e3:.1f} ms")
     else:
-        corpus = jnp.asarray(np.concatenate(dense_parts))
-        print(f"indexed {corpus.shape[0]} docs dense in "
-              f"{(time.monotonic() - t0) * 1e3:.1f} ms "
-              f"({corpus.nbytes / 2**20:.2f} MiB)")
+        doc_parts, dense_parts = [], []
+        for lo in range(0, args.corpus, bs):
+            n = min(bs, args.corpus - lo)
+            toks = rng.integers(1, cfg.vocab_size,
+                                size=(n, 16)).astype(np.int32)
+            reps = encode(jnp.asarray(toks), jnp.ones((n, 16), jnp.int32))
+            if sparse:
+                doc_parts.append(reps)
+            else:
+                dense_parts.append(np.asarray(reps))
+        if sparse:
+            corpus_rep = stack_rows(doc_parts)
+            index = build_inverted_index(
+                corpus_rep, cfg.vocab_size,
+                keep_forward=args.method == "pruned")
+            corpus = index
+            st = index.stats()
+            print(f"indexed {st['n_docs']} docs in "
+                  f"{(time.monotonic() - t0) * 1e3:.1f} ms: "
+                  f"{st['n_postings']} postings over "
+                  f"{st['active_terms']} terms, "
+                  f"{st['memory_bytes'] / 2**20:.2f} MiB "
+                  f"(dense (N, V) would be "
+                  f"{args.corpus * cfg.vocab_size * 4 / 2**20:.2f} MiB)")
+            if args.method == "quantized":
+                from repro.retrieval import quantize_index
+
+                corpus = quantize_index(index)
+                print(f"quantized index: "
+                      f"{corpus.memory_bytes() / 2**20:.2f} MiB "
+                      f"(1/{index.memory_bytes() / corpus.memory_bytes():.2f} "
+                      f"of raw)")
+            elif args.method == "sharded":
+                from repro.retrieval import shard_index
+
+                corpus = shard_index(corpus_rep, cfg.vocab_size,
+                                     args.shards)
+                print(f"sharded index: {args.shards} shards x "
+                      f"{corpus.docs_per_shard} docs")
+        else:
+            corpus = jnp.asarray(np.concatenate(dense_parts))
+            print(f"indexed {corpus.shape[0]} docs dense in "
+                  f"{(time.monotonic() - t0) * 1e3:.1f} ms "
+                  f"({corpus.nbytes / 2**20:.2f} MiB)")
 
     # --- 2. serve queries through the batching loop ------------------
     loop = ServingLoop(BatchedEncoder(
@@ -130,9 +215,19 @@ def main(argv=None) -> int:
     else:
         queries = jnp.asarray(np.stack(results[:n_q]))
     t0 = time.monotonic()
-    vals, idx = retrieve(queries, corpus, args.topk, method=args.method)
+    if engine is not None:
+        kw = {}
+        if args.prune_margin is not None:
+            kw = {"method": "pruned",
+                  "prune_margin": args.prune_margin}
+        vals, idx = engine.search(queries, args.topk, **kw)
+        tag = "engine" + ("/pruned" if kw else "")
+    else:
+        vals, idx = retrieve(queries, corpus, args.topk,
+                             method=args.method)
+        tag = args.method
     jax.block_until_ready(vals)
-    print(f"retrieval[{args.method}]: top-{args.topk} for {n_q} queries "
+    print(f"retrieval[{tag}]: top-{args.topk} for {n_q} queries "
           f"in {(time.monotonic() - t0) * 1e3:.1f} ms, "
           f"best scores {np.asarray(vals)[:, 0].round(2).tolist()}")
     return 0

@@ -1,6 +1,12 @@
 """Sparse-native retrieval: SparseRep reps, inverted impact index,
-and the unified ``retrieve()`` dispatcher (DESIGN.md §7)."""
+the unified ``retrieve()`` dispatcher, and the index engine —
+pruned / quantized / sharded scoring plus the incremental builder
+(DESIGN.md §7–§8)."""
 
+from repro.retrieval.engine import (IndexBuilder, QuantizedIndex,
+                                    ShardedIndex, pruned_retrieve,
+                                    quantize_index, shard_index,
+                                    sharded_retrieve)
 from repro.retrieval.index import InvertedIndex, build_inverted_index
 from repro.retrieval.score import METHODS, impact_scores, retrieve
 from repro.retrieval.sparse_rep import (SparseRep, sparsify_threshold,
@@ -8,12 +14,19 @@ from repro.retrieval.sparse_rep import (SparseRep, sparsify_threshold,
                                         stack_rows)
 
 __all__ = [
+    "IndexBuilder",
     "InvertedIndex",
     "METHODS",
+    "QuantizedIndex",
+    "ShardedIndex",
     "SparseRep",
     "build_inverted_index",
     "impact_scores",
+    "pruned_retrieve",
+    "quantize_index",
     "retrieve",
+    "shard_index",
+    "sharded_retrieve",
     "sparsify_threshold",
     "sparsify_topk",
     "split_rows",

@@ -1,0 +1,48 @@
+"""Index engine — pruned, quantized, device-sharded inverted retrieval
+with an incremental builder (DESIGN.md §8).
+
+Four pieces over the PR-3 ``InvertedIndex``:
+
+* ``pruning``       — MaxScore/WAND-style two-tier scoring: a cheap
+                      per-term-upper-bound pass selects candidate docs,
+                      exact rescoring runs only on the survivors.
+* ``quantize``      — posting-list compression: nibble-packed u4
+                      impacts with per-term affine scales + u8
+                      delta-encoded doc ids; the scorer dequantizes on
+                      the fly.
+* ``sharded_index`` — doc-sharded index over a mesh via ``shard_map``
+                      (or a single-device vmap fallback), merged with
+                      the same running top-k the kernels use.
+* ``builder``       — incremental ``IndexBuilder``: add/remove/flush
+                      of document batches with tombstones, a base +
+                      delta segment pair, and periodic compaction.
+
+Everything threads through ``repro.retrieval.retrieve`` (methods
+``pruned`` / ``quantized`` / ``sharded``).
+"""
+
+from repro.retrieval.engine.builder import IndexBuilder
+from repro.retrieval.engine.pruning import (default_candidates,
+                                            pruned_retrieve,
+                                            upper_bound_scores)
+from repro.retrieval.engine.quantize import (QuantizedIndex,
+                                             quantize_index,
+                                             quantized_retrieve,
+                                             quantized_scores)
+from repro.retrieval.engine.sharded_index import (ShardedIndex,
+                                                  shard_index,
+                                                  sharded_retrieve)
+
+__all__ = [
+    "IndexBuilder",
+    "QuantizedIndex",
+    "ShardedIndex",
+    "default_candidates",
+    "pruned_retrieve",
+    "quantize_index",
+    "quantized_retrieve",
+    "quantized_scores",
+    "shard_index",
+    "sharded_retrieve",
+    "upper_bound_scores",
+]

@@ -1,0 +1,331 @@
+"""Incremental index builder: online corpus growth without full
+rebuilds (DESIGN.md §8.4).
+
+The PR-3 pipeline froze the corpus at build time — growing it meant
+re-encoding and re-sorting everything. ``IndexBuilder`` keeps the
+served index live under three operations:
+
+* ``add(reps)``    — append a batch of document rows. Buffered
+                     host-side; the next ``flush()`` packs only the
+                     *new* rows into a small **delta segment** (an
+                     ordinary ``InvertedIndex`` over the tail doc
+                     range). The big **base segment** is untouched.
+* ``remove(ids)``  — tombstone documents by external id. A tombstone
+                     in the base segment is applied in place at flush
+                     time by zeroing the doc's postings (an O(P) mask,
+                     no re-sort): the doc then scores 0 and its slot
+                     is reclaimed at the next compaction. Per-term
+                     upper bounds stay *valid* (zeroing only lowers
+                     true impacts), just looser.
+* ``flush()``      — make pending adds/removes visible to ``search``.
+                     When the delta outgrows ``merge_frac`` of the
+                     base, or tombstones exceed ``compact_dead_frac``
+                     of the corpus, flush escalates to ``compact()``:
+                     one full rebuild over the live rows (the
+                     amortized LSM-style merge).
+
+``search`` scores base and delta segments independently and merges
+their top-k with the shared ``merge_topk`` reduction, then maps
+internal slots back to stable **external ids** (compaction renumbers
+slots, never external ids; tombstoned slots surface as id -1).
+With ``quantize=True`` the base segment is served compressed
+(``QuantizedIndex``) while the hot delta stays raw — the classic
+read-optimized/write-optimized split.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.retrieval.index import InvertedIndex, build_inverted_index
+from repro.retrieval.sparse_rep import SparseRep, device_get
+
+Array = jax.Array
+
+
+def _host_rows(reps: SparseRep) -> Tuple[np.ndarray, np.ndarray]:
+    host = device_get(reps) if isinstance(reps.values, jax.Array) else reps
+    k = host.width
+    v = np.asarray(host.values, np.float32).reshape(-1, k)
+    i = np.asarray(host.indices, np.int32).reshape(-1, k)
+    return v, i
+
+
+class IndexBuilder:
+    """Incremental add/remove/flush over an LSR corpus (see module
+    docstring). Not thread-safe; callers serialize like the serving
+    loop does."""
+
+    def __init__(self, vocab_size: int, *, quantize: bool = False,
+                 keep_forward: bool = False, merge_frac: float = 0.25,
+                 compact_dead_frac: float = 0.25):
+        self.vocab_size = vocab_size
+        self.quantize = quantize
+        self.keep_forward = keep_forward
+        self.merge_frac = merge_frac
+        self.compact_dead_frac = compact_dead_frac
+
+        self._values: Optional[np.ndarray] = None    # (N, K) live rows
+        self._indices: Optional[np.ndarray] = None   # (N, K)
+        self._ext_ids = np.zeros(0, np.int64)        # slot -> external
+        self._alive = np.zeros(0, bool)
+        self._slot: Dict[int, int] = {}              # external -> slot
+        self._next_ext = 0
+
+        self._base: Union[InvertedIndex, "QuantizedIndex", None] = None
+        self._base_raw: Optional[InvertedIndex] = None
+        self._base_n = 0          # slots [0, _base_n) live in the base
+        self._delta: Optional[InvertedIndex] = None
+        self._delta_dirty = False      # adds/removes touching the tail
+        self._base_removals: List[int] = []   # tombstoned base slots
+        self.n_compactions = 0
+
+    # -- bookkeeping -----------------------------------------------------
+
+    @property
+    def n_slots(self) -> int:
+        return self._ext_ids.shape[0]
+
+    @property
+    def n_alive(self) -> int:
+        return int(self._alive.sum())
+
+    @property
+    def n_dead(self) -> int:
+        return self.n_slots - self.n_alive
+
+    @property
+    def dirty(self) -> bool:
+        return (self._delta_dirty or bool(self._base_removals)
+                or (self._base is None and self.n_slots > 0))
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "n_slots": self.n_slots,
+            "n_alive": self.n_alive,
+            "n_dead": self.n_dead,
+            "base_docs": self._base_n,
+            "delta_docs": self.n_slots - self._base_n,
+            "n_compactions": self.n_compactions,
+            "quantized_base": bool(self.quantize and self._base
+                                   is not None),
+        }
+
+    # -- mutation --------------------------------------------------------
+
+    def add(self, reps: SparseRep,
+            ids: Optional[Sequence[int]] = None) -> np.ndarray:
+        """Append a batch of document rows; returns their external ids
+        (auto-assigned monotonically unless ``ids`` is given)."""
+        v, i = _host_rows(reps)
+        n = v.shape[0]
+        if ids is None:
+            ids = np.arange(self._next_ext, self._next_ext + n,
+                            dtype=np.int64)
+            self._next_ext += n
+        else:
+            ids = np.asarray(list(ids), np.int64)
+            if ids.shape[0] != n:
+                raise ValueError(f"{ids.shape[0]} ids for {n} rows")
+            dup = [int(e) for e in ids if int(e) in self._slot]
+            if dup:
+                raise ValueError(f"duplicate external ids: {dup[:5]}")
+            self._next_ext = max(self._next_ext, int(ids.max()) + 1)
+
+        base_slot = self.n_slots
+        if self._values is None:
+            self._values, self._indices = v.copy(), i.copy()
+        else:
+            k_old, k_new = self._values.shape[1], v.shape[1]
+            width = max(k_old, k_new)
+            if k_old < width:
+                pad = width - k_old
+                self._values = np.pad(self._values, ((0, 0), (0, pad)))
+                self._indices = np.pad(self._indices, ((0, 0), (0, pad)))
+            if k_new < width:
+                pad = width - k_new
+                v = np.pad(v, ((0, 0), (0, pad)))
+                i = np.pad(i, ((0, 0), (0, pad)))
+            self._values = np.concatenate([self._values, v])
+            self._indices = np.concatenate([self._indices, i])
+        self._ext_ids = np.concatenate([self._ext_ids, ids])
+        self._alive = np.concatenate([self._alive, np.ones(n, bool)])
+        for off, e in enumerate(ids):
+            self._slot[int(e)] = base_slot + off
+        self._delta_dirty = True
+        return ids
+
+    def remove(self, ids: Sequence[int]) -> int:
+        """Tombstone documents by external id; unknown or already
+        removed ids are ignored. Returns the number tombstoned.
+
+        The external id is released immediately (a later ``add`` may
+        reuse it, whether or not the dead slot has been compacted
+        away yet)."""
+        n = 0
+        for e in ids:
+            slot = self._slot.pop(int(e), None)
+            if slot is None or not self._alive[slot]:
+                continue
+            self._alive[slot] = False
+            if slot < self._base_n:
+                self._base_removals.append(slot)
+            else:
+                self._delta_dirty = True
+            n += 1
+        return n
+
+    # -- flush / compaction ----------------------------------------------
+
+    def _tail_rep(self) -> SparseRep:
+        v = self._values[self._base_n:].copy()
+        i = self._indices[self._base_n:]
+        v[~self._alive[self._base_n:]] = 0.0
+        return SparseRep(v, i, (v > 0).sum(axis=1).astype(np.int32))
+
+    def _pack_base(self, values: np.ndarray, indices: np.ndarray
+                   ) -> None:
+        rep = SparseRep(values, indices,
+                        (values > 0).sum(axis=1).astype(np.int32))
+        raw = build_inverted_index(rep, self.vocab_size,
+                                   keep_forward=self.keep_forward)
+        self._base_raw = raw
+        if self.quantize:
+            from repro.retrieval.engine.quantize import quantize_index
+            self._base = quantize_index(raw)
+        else:
+            self._base = raw
+
+    def compact(self) -> None:
+        """Full rebuild over live rows: tombstoned slots are dropped,
+        internal slots renumber, external ids are untouched."""
+        keep = self._alive
+        self._values = (self._values[keep] if self._values is not None
+                        else None)
+        self._indices = (self._indices[keep] if self._indices is not None
+                         else None)
+        self._ext_ids = self._ext_ids[keep]
+        self._alive = np.ones(self._ext_ids.shape[0], bool)
+        self._slot = {int(e): s for s, e in enumerate(self._ext_ids)}
+        self._base_n = self._ext_ids.shape[0]
+        self._base_removals = []
+        self._delta = None
+        self._delta_dirty = False
+        self.n_compactions += 1
+        if self._base_n:
+            self._pack_base(self._values, self._indices)
+        else:
+            self._base = self._base_raw = None
+
+    def flush(self, *, force_compact: bool = False) -> None:
+        """Make pending adds/removes visible to ``search``.
+
+        Cheap paths first: base tombstones are zeroed in place, adds
+        rebuild only the delta segment. Escalates to ``compact()``
+        when the delta outgrows ``merge_frac`` of the base or dead
+        slots exceed ``compact_dead_frac`` of the corpus.
+        """
+        n_delta = self.n_slots - self._base_n
+        needs_compact = (
+            force_compact
+            or (self.n_slots > 0
+                and self.n_dead > self.compact_dead_frac * self.n_slots)
+            or (self._base_n > 0
+                and n_delta > self.merge_frac * self._base_n))
+        if needs_compact:
+            self.compact()
+            return
+
+        if self._base_removals and self._base_raw is not None:
+            import dataclasses
+
+            dead = np.asarray(self._base_removals, np.int64)
+            pdoc = np.asarray(self._base_raw.postings_doc)
+            pval = np.asarray(self._base_raw.postings_val).copy()
+            pval[np.isin(pdoc, dead)] = 0.0
+            kw = {"postings_val": jnp.asarray(pval)}
+            if self._base_raw.doc_values is not None:
+                dv = np.asarray(self._base_raw.doc_values).copy()
+                dv[dead] = 0.0
+                kw["doc_values"] = jnp.asarray(dv)
+            self._base_raw = dataclasses.replace(self._base_raw, **kw)
+            if self.quantize:
+                from repro.retrieval.engine.quantize import quantize_index
+                self._base = quantize_index(self._base_raw)
+            else:
+                self._base = self._base_raw
+            self._base_removals = []
+
+        if self._base is None and self._base_n == 0 and self.n_slots:
+            # first flush: everything becomes the base segment
+            self._base_n = self.n_slots
+            self._pack_base(self._values.copy(), self._indices)
+            self._delta = None
+            self._delta_dirty = False
+            # zero tombstones that arrived before the first flush
+            if not self._alive.all():
+                self._base_removals = list(
+                    np.flatnonzero(~self._alive))
+                self.flush()
+            return
+
+        if self._delta_dirty:
+            tail = self._tail_rep()
+            self._delta = (build_inverted_index(
+                tail, self.vocab_size, keep_forward=self.keep_forward)
+                if tail.values.shape[0] else None)
+            self._delta_dirty = False
+
+    # -- search ----------------------------------------------------------
+
+    def search(self, queries: SparseRep, k: int = 10, *,
+               method: str = "auto", **kw
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        """Top-k over base + delta segments; returns ``(vals, ids)``
+        with **external** doc ids (-1 marks below-top-k padding or
+        tombstoned slots). Flushes pending mutations first."""
+        from repro.kernels.topk_score import merge_topk
+        from repro.retrieval.score import retrieve
+
+        if self.dirty:
+            self.flush()
+        if self.n_slots == 0 or (self._base is None
+                                 and self._delta is None):
+            b = queries.values.reshape(-1, queries.width).shape[0]
+            return (np.full((b, k), -np.inf, np.float32),
+                    np.full((b, k), -1, np.int64))
+
+        parts = []   # (vals (B, k'), global slots (B, k'))
+        if self._base is not None:
+            bv, bi = retrieve(queries, self._base,
+                              min(k, self._base.n_docs),
+                              method=method, **kw)
+            parts.append((bv, bi))
+        if self._delta is not None:
+            dm = "impact" if method in ("pruned", "quantized") else method
+            dv, di = retrieve(queries, self._delta,
+                              min(k, self._delta.n_docs), method=dm)
+            parts.append((dv, di + self._base_n))
+
+        vals, idx = parts[0]
+        for nv, ni in parts[1:]:
+            vals, idx = merge_topk(vals, idx, nv, ni,
+                                   min(k, vals.shape[1] + nv.shape[1]))
+        vals = np.asarray(vals)
+        idx = np.asarray(idx)
+        if vals.shape[1] < k:
+            pad = k - vals.shape[1]
+            vals = np.pad(vals, ((0, 0), (0, pad)),
+                          constant_values=-np.inf)
+            idx = np.pad(idx, ((0, 0), (0, pad)), constant_values=-1)
+
+        ext = np.full(idx.shape, -1, np.int64)
+        ok = idx >= 0
+        slots = np.clip(idx, 0, self.n_slots - 1)
+        ext[ok] = self._ext_ids[slots][ok]
+        ext[ok & ~self._alive[slots]] = -1      # tombstoned slots
+        return vals, ext

@@ -1,0 +1,196 @@
+"""MaxScore/WAND-style two-tier pruned retrieval (DESIGN.md §8.1).
+
+The exact impact scorer walks *every* posting of every active query
+term at full f32 width. Classic dynamic pruning (WAND, MaxScore)
+observes that a per-term score ceiling — ``ub[t] = max impact in
+t's posting list`` — bounds any document's score long before the
+exact sum is known, so most documents never need exact scoring.
+
+The TPU/JAX adaptation keeps static shapes by splitting retrieval
+into two fixed-size tiers instead of a dynamic pointer walk:
+
+* **Tier 1 (upper-bound pass, cheap).** For each query, score every
+  document with the *ceiling* contribution ``c[t] = q[t] * ub[t]``
+  instead of the real posting impact:
+
+      ub_score[d] = sum_{t active in q} c[t] * [d in postings(t)]
+
+  This walks the same posting windows as the exact scorer but gathers
+  only ``postings_doc`` (the i32 ids) — the f32 ``postings_val``
+  stream, half the gather traffic, is never touched. Because impacts
+  are non-negative, ``ub_score[d] >= score[d]`` for every doc.
+
+* **Tier 2 (exact rescoring, narrow).** The top ``C`` docs by upper
+  bound become candidates; only they are scored exactly, from the
+  index's *forward* rows (``doc_values``/``doc_indices``): scatter the
+  query into a dense (V,) vector once, then each candidate costs one
+  (K,) gather + dot — O(C*K) per query instead of O(Q*Lmax).
+
+Safety: a true top-k doc can only be missed if its upper bound fell
+below the candidate cutoff. The pass therefore also reports, per
+query, whether the pruning was *provably exact*: every excluded doc's
+ceiling is <= the exact k-th best candidate score. With the default
+margin (0.0) and a candidate budget comfortably above k this holds in
+practice and the ids are identical to ``method="impact"`` — the
+parity is pinned by tests. ``prune_margin`` trades that guarantee for
+speed: candidates whose *ceiling* cannot reach ``prune_margin`` times
+the k-th best ceiling are dropped before rescoring (0 = keep all, 1 =
+only docs whose ceiling reaches the k-th best ceiling).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.retrieval.index import InvertedIndex
+from repro.retrieval.sparse_rep import SparseRep
+from repro.sparse.segment import segment_sum
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def default_candidates(index: InvertedIndex, k: int) -> int:
+    """Candidate budget for tier 2 — the engine's pruning planner.
+
+    Baseline: ``max(4k, 64)``, clamped to the corpus. When the
+    posting-length percentiles on the index show stopword-like skew
+    (p99 >= 8 * p50), upper bounds are loose for the skewed terms and
+    the ceiling ranking is less selective — double the budget.
+    """
+    base = max(4 * k, 64)
+    pct = index.posting_percentiles
+    if len(pct) == 4 and pct[0] > 0 and pct[2] >= 8 * pct[0]:
+        base *= 2
+    return min(max(base, k), index.n_docs)
+
+
+def upper_bound_scores(queries: SparseRep, index: InvertedIndex) -> Array:
+    """Tier-1 ceilings: dense ``(B, n_docs)`` of per-doc upper bounds.
+
+    Same padded-window walk as ``score.impact_scores`` but the lane
+    weight is the *term ceiling* ``q[t] * ub[t]`` — ``postings_val``
+    is never gathered.
+    """
+    if index.term_ubs is None:
+        raise ValueError(
+            "upper_bound_scores: index has no term_ubs — rebuild with "
+            "build_inverted_index(..., with_upper_bounds=True)")
+    l_max = index.max_postings
+    p_total = index.postings_doc.shape[0]
+    lane = jnp.arange(l_max, dtype=jnp.int32)
+
+    def one(qv: Array, qi: Array) -> Array:
+        c = qv * index.term_ubs[qi]                        # (Q,)
+        starts = index.term_starts[qi]
+        lens = index.term_lens[qi]
+        pos = starts[:, None] + lane[None, :]              # (Q, Lmax)
+        valid = (lane[None, :] < lens[:, None]) & (qv > 0)[:, None]
+        pos = jnp.clip(pos, 0, p_total - 1)
+        docs = jnp.where(valid, index.postings_doc[pos], 0)
+        w = jnp.where(valid, c[:, None], 0.0)
+        return segment_sum(w.ravel(), docs.ravel(), index.n_docs)
+
+    qv = queries.values.reshape(-1, queries.width).astype(jnp.float32)
+    qi = queries.indices.reshape(-1, queries.width)
+    return jax.vmap(one)(qv, qi)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "candidates"))
+def _pruned_retrieve(queries: SparseRep, index: InvertedIndex, k: int,
+                     candidates: int, prune_margin: Array
+                     ) -> Tuple[Array, Array, Array]:
+    ub = upper_bound_scores(queries, index)            # (B, N)
+    n = index.n_docs
+    c_plus = min(candidates + 1, n)
+
+    # tier 1: top-(C+1) ceilings; the (C+1)-th is the best excluded doc
+    ub_top, cand = jax.lax.top_k(ub, c_plus)           # (B, C+1)
+    if c_plus > candidates:
+        excluded_ub = ub_top[:, -1]                    # (B,)
+        ub_top, cand = ub_top[:, :candidates], cand[:, :candidates]
+    else:
+        excluded_ub = jnp.full(ub.shape[0], NEG_INF)   # nothing excluded
+
+    # margin mask: drop candidates whose ceiling cannot reach
+    # prune_margin * (k-th best ceiling)
+    theta = ub_top[:, min(k, candidates) - 1]          # (B,)
+    keep = ub_top >= prune_margin * theta[:, None]
+    excluded_ub = jnp.maximum(
+        excluded_ub, jnp.max(jnp.where(keep, NEG_INF, ub_top), axis=1))
+
+    # candidates sorted by doc id so score ties break to the lowest id,
+    # matching lax.top_k over the dense (N,) exact scores
+    cand_sort = jnp.where(keep, cand, n)
+    order = jnp.argsort(cand_sort, axis=1)
+    cand_sort = jnp.take_along_axis(cand_sort, order, axis=1)
+    keep = cand_sort < n
+    cand_safe = jnp.clip(cand_sort, 0, n - 1)
+
+    # tier 2: exact rescoring from the forward rows
+    qk = queries.width
+    qv = queries.values.reshape(-1, qk).astype(jnp.float32)
+    qi = queries.indices.reshape(-1, qk)
+
+    def rescore(qv_row, qi_row, cand_row, keep_row):
+        q_dense = jnp.zeros(index.vocab_size, jnp.float32)
+        q_dense = q_dense.at[qi_row].add(
+            jnp.where(qv_row > 0, qv_row, 0.0))
+        dv = index.doc_values[cand_row]                # (C, K)
+        di = index.doc_indices[cand_row]               # (C, K)
+        exact = jnp.sum(q_dense[di] * dv, axis=1)      # (C,)
+        return jnp.where(keep_row, exact, NEG_INF)
+
+    exact = jax.vmap(rescore)(qv, qi, cand_safe, keep)     # (B, C)
+    # >= k candidates always survive the margin mask (the top-k docs
+    # by ceiling satisfy ub >= margin * theta for margin <= 1), so
+    # every selected slot holds a rescored survivor
+    vals, pos = jax.lax.top_k(exact, k)
+    idx = jnp.take_along_axis(cand_safe, pos, axis=1).astype(jnp.int32)
+
+    # provably exact iff every excluded doc's ceiling is <= the exact
+    # k-th best candidate score
+    exact_frontier = excluded_ub <= vals[:, min(k, vals.shape[1]) - 1]
+    return vals, idx, exact_frontier
+
+
+def pruned_retrieve(
+    queries: SparseRep,
+    index: InvertedIndex,
+    k: int = 10,
+    *,
+    prune_margin: float = 0.0,
+    candidates: Optional[int] = None,
+    with_diagnostics: bool = False,
+):
+    """Two-tier pruned top-k (see module docstring).
+
+    Returns ``(vals (B, k), idx (B, k))``; with
+    ``with_diagnostics=True`` also a ``(B,)`` bool of per-query
+    provable exactness (every excluded doc's ceiling <= the exact
+    k-th best score).
+    """
+    if index.term_ubs is None:
+        raise ValueError(
+            "pruned_retrieve: the index carries no per-term upper "
+            "bounds (term_ubs) — rebuild with with_upper_bounds=True")
+    if not index.has_forward:
+        raise ValueError(
+            "pruned_retrieve: the index carries no forward rows for "
+            "rescoring — rebuild with keep_forward=True")
+    if not 0.0 <= prune_margin <= 1.0:
+        raise ValueError(f"prune_margin must be in [0, 1], got "
+                         f"{prune_margin}")
+    k = min(k, index.n_docs)
+    if candidates is None:
+        candidates = default_candidates(index, k)
+    candidates = min(max(candidates, k), index.n_docs)
+    vals, idx, frontier = _pruned_retrieve(
+        queries, index, k, candidates, jnp.float32(prune_margin))
+    if with_diagnostics:
+        return vals, idx, frontier
+    return vals, idx

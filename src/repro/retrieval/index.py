@@ -19,12 +19,29 @@ plus the static aux ``(n_docs, vocab_size, max_postings)``.
 the JAX scorer pads every touched list to — see ``score.py``. The
 index is a pytree, so scoring jits over it; the *build* is host-side
 numpy (indexing is the offline half of the pipeline).
+
+Engine extensions (``retrieval/engine/``, DESIGN.md §8):
+
+* ``term_ubs`` (V,) f32 — per-term score upper bounds (the max impact
+  in each posting list), the MaxScore/WAND ingredient the two-tier
+  pruned scorer needs. Cheap (4 bytes/term), so the build always
+  stores them.
+* ``doc_values``/``doc_indices`` (N, K) — the *forward* rep of the
+  corpus (the SparseRep rows the index was built from), kept only when
+  ``keep_forward=True``: the pruned path rescores candidate docs
+  exactly from the forward rows instead of re-walking posting lists.
+* ``posting_percentiles`` — static (p50, p90, p99, max) posting-list
+  lengths over active terms. A stopword-like term active in most docs
+  drags ``max_postings`` toward N and pads *every* query gather to it;
+  the build warns when that happens, and the engine's pruning planner
+  (``engine.pruning.default_candidates``) consumes the skew.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+import warnings
+from typing import Dict, Optional, Tuple
 
 import jax
 import numpy as np
@@ -32,6 +49,11 @@ import numpy as np
 from repro.retrieval.sparse_rep import SparseRep, device_get
 
 Array = jax.Array
+
+# build warns when one posting list covers more than this fraction of
+# the corpus (every query gather is padded to max_postings, so a
+# stopword-like term makes *all* queries pay ~N)
+STOPWORD_WARN_FRAC = 0.5
 
 
 @jax.tree_util.register_pytree_node_class
@@ -44,31 +66,58 @@ class InvertedIndex:
     n_docs: int             # static
     vocab_size: int         # static
     max_postings: int       # static — longest posting list (>= 1)
+    term_ubs: Optional[Array] = None      # (V,) f32 — max impact/term
+    doc_values: Optional[Array] = None    # (N, K) f32 — forward rep
+    doc_indices: Optional[Array] = None   # (N, K) i32 — forward rep
+    # static (p50, p90, p99, max) posting lengths over active terms
+    posting_percentiles: Tuple[float, ...] = ()
 
     def tree_flatten(self):
         children = (self.term_starts, self.term_lens,
-                    self.postings_doc, self.postings_val)
-        aux = (self.n_docs, self.vocab_size, self.max_postings)
+                    self.postings_doc, self.postings_val,
+                    self.term_ubs, self.doc_values, self.doc_indices)
+        aux = (self.n_docs, self.vocab_size, self.max_postings,
+               self.posting_percentiles)
         return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, *aux)
+        n_docs, vocab_size, max_postings, pct = aux
+        return cls(*children[:4], n_docs=n_docs, vocab_size=vocab_size,
+                   max_postings=max_postings, term_ubs=children[4],
+                   doc_values=children[5], doc_indices=children[6],
+                   posting_percentiles=pct)
 
     @property
     def n_postings(self) -> int:
         return self.postings_doc.shape[0]
 
+    @property
+    def has_upper_bounds(self) -> bool:
+        return self.term_ubs is not None
+
+    @property
+    def has_forward(self) -> bool:
+        return self.doc_values is not None and self.doc_indices is not None
+
     def memory_bytes(self) -> int:
-        """Index footprint (the number to compare with N*V*4 dense)."""
-        return int(sum(np.asarray(a).nbytes for a in (
-            self.term_starts, self.term_lens,
-            self.postings_doc, self.postings_val)))
+        """Index footprint (the number to compare with N*V*4 dense).
+
+        Counts every stored array — posting lists, upper bounds, and
+        the forward rep when kept — so the quantized-vs-raw comparison
+        in ``engine/quantize.py`` is apples to apples.
+        """
+        arrays = [self.term_starts, self.term_lens,
+                  self.postings_doc, self.postings_val]
+        for opt in (self.term_ubs, self.doc_values, self.doc_indices):
+            if opt is not None:
+                arrays.append(opt)
+        return int(sum(np.asarray(a).nbytes for a in arrays))
 
     def stats(self) -> Dict[str, float]:
         lens = np.asarray(self.term_lens)
         active = lens > 0
-        return {
+        out = {
             "n_docs": self.n_docs,
             "vocab_size": self.vocab_size,
             "n_postings": self.n_postings,
@@ -78,9 +127,25 @@ class InvertedIndex:
             else 0.0,
             "memory_bytes": self.memory_bytes(),
         }
+        if self.posting_percentiles:
+            for name, v in zip(("p50", "p90", "p99", "max"),
+                               self.posting_percentiles):
+                out[f"postings_{name}"] = v
+        return out
 
 
-def build_inverted_index(reps: SparseRep, vocab_size: int
+def _posting_percentiles(lens: np.ndarray) -> Tuple[float, ...]:
+    active = lens[lens > 0]
+    if active.size == 0:
+        return (0.0, 0.0, 0.0, 0.0)
+    p50, p90, p99 = np.percentile(active, (50, 90, 99))
+    return (float(p50), float(p90), float(p99), float(active.max()))
+
+
+def build_inverted_index(reps: SparseRep, vocab_size: int, *,
+                         keep_forward: bool = False,
+                         with_upper_bounds: bool = True,
+                         stopword_warn_frac: float = STOPWORD_WARN_FRAC,
                          ) -> InvertedIndex:
     """Build the index from a batched ``(N, K)`` corpus rep (host-side).
 
@@ -89,6 +154,14 @@ def build_inverted_index(reps: SparseRep, vocab_size: int
     doc id), and packed into the CSC arrays. An all-empty corpus still
     yields valid (length-1, zero-impact) postings so the scorer's
     static shapes never degenerate.
+
+    ``keep_forward=True`` additionally stores the (N, K) forward rows
+    on the index — required by the engine's pruned rescoring path.
+    Per-term upper bounds and posting-length percentiles are always
+    computed (both are O(V) extras); a ``UserWarning`` with the
+    percentile stats fires when the longest posting list covers more
+    than ``stopword_warn_frac`` of the corpus, since that term pads
+    every query gather to ~N.
     """
     host = device_get(reps) if isinstance(reps.values, jax.Array) else reps
     k = host.width
@@ -112,9 +185,26 @@ def build_inverted_index(reps: SparseRep, vocab_size: int
     starts = np.zeros(vocab_size, np.int64)
     np.cumsum(lens[:-1], out=starts[1:])
 
+    ubs = np.zeros(vocab_size, np.float32)
+    if terms.size:
+        np.maximum.at(ubs, terms, vals)
+
     if terms.size == 0:
         docs = np.zeros(1, np.int32)
         vals = np.zeros(1, np.float32)
+
+    pct = _posting_percentiles(lens)
+    max_postings = max(int(lens.max(initial=0)), 1)
+    if n_docs and max_postings > stopword_warn_frac * n_docs:
+        warnings.warn(
+            f"build_inverted_index: longest posting list covers "
+            f"{max_postings}/{n_docs} docs (> {stopword_warn_frac:.0%} "
+            f"of the corpus) — a stopword-like term pads every query "
+            f"gather to ~N. Posting-length percentiles (active terms): "
+            f"p50={pct[0]:.0f} p90={pct[1]:.0f} p99={pct[2]:.0f} "
+            f"max={pct[3]:.0f}. Consider a higher sparsifier threshold "
+            f"or dropping the offending terms.",
+            UserWarning, stacklevel=2)
 
     # device arrays: the scorer indexes these under jit/vmap tracing
     import jax.numpy as jnp
@@ -126,5 +216,9 @@ def build_inverted_index(reps: SparseRep, vocab_size: int
         postings_val=jnp.asarray(vals.astype(np.float32)),
         n_docs=n_docs,
         vocab_size=vocab_size,
-        max_postings=max(int(lens.max(initial=0)), 1),
+        max_postings=max_postings,
+        term_ubs=jnp.asarray(ubs) if with_upper_bounds else None,
+        doc_values=jnp.asarray(v) if keep_forward else None,
+        doc_indices=jnp.asarray(i) if keep_forward else None,
+        posting_percentiles=pct,
     )

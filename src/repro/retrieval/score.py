@@ -1,25 +1,46 @@
-"""Retrieval scoring — impact, streaming-kernel, and dense paths
-behind one ``retrieve()`` dispatcher.
+"""Retrieval scoring — impact, pruned, quantized, sharded,
+streaming-kernel, and dense paths behind one ``retrieve()``
+dispatcher.
 
 Dispatch table (``method=``):
 
-    method       queries            corpus             score matrix
+    method       queries            corpus             scoring
     ---------    ---------------    ---------------    -------------
-    "impact"     SparseRep          InvertedIndex      never built;
+    "impact"     SparseRep          InvertedIndex      exact segment-
+                                                       sums into (B, N)
+    "pruned"     SparseRep          InvertedIndex      two-tier MaxScore:
+                                    (+ term_ubs and    upper-bound pass
+                                    forward rows)      -> exact rescore
+                                                       of candidates
+                                                       (engine/pruning)
+    "quantized"  SparseRep          QuantizedIndex     on-the-fly
+                                                       dequantized
                                                        segment-sums
-                                                       into (B, N)
-    "streaming"  dense or rep       dense (N, V)       never built;
-                                                       fused Pallas
+                                                       (engine/quantize)
+    "sharded"    SparseRep          ShardedIndex       per-shard impact
+                                                       + cross-shard
+                                                       top-k merge
+                                                       (engine/
+                                                       sharded_index)
+    "streaming"  dense or rep       dense (N, V)       fused Pallas
                                                        running top-k
     "dense"      dense or rep       dense (N, V)       (B, N) einsum
                                                        + lax.top_k
-    "auto"       impact when an InvertedIndex is given; else
-                 streaming for corpora >= AUTO_STREAMING_N rows,
-                 dense below that
+    "auto"       resolved from the corpus type:
+                 * QuantizedIndex              -> "quantized"
+                 * ShardedIndex                -> "sharded"
+                 * InvertedIndex with upper bounds AND forward rows
+                   (an engine build)           -> "pruned"
+                 * any other InvertedIndex     -> "impact"
+                 * dense matrix: "streaming" for corpora >=
+                   AUTO_STREAMING_N rows, "dense" below that
 
 All paths return ``(vals (B, k) f32, idx (B, k) i32)`` with identical
-ids (scores within fp tolerance) for equivalent inputs — the parity
-test in ``tests/test_retrieval.py`` pins that down.
+ids (scores within fp/quantization tolerance) for equivalent inputs —
+the parity tests in ``tests/test_retrieval.py`` and
+``tests/test_engine.py`` pin that down. ``pruned`` is id-identical to
+``impact`` at the default safe margin (0.0) with a sufficient
+candidate budget; ``prune_margin`` > 0 trades recall for speed.
 
 The impact path is the sparse-native one: per query row it gathers the
 posting lists of the query's active terms (padded to the index's
@@ -48,7 +69,10 @@ Array = jax.Array
 Queries = Union[Array, SparseRep]
 Corpus = Union[Array, InvertedIndex]
 
-METHODS = ("auto", "impact", "streaming", "dense")
+METHODS = ("auto", "impact", "pruned", "quantized", "sharded",
+           "streaming", "dense")
+# methods that need an index-shaped corpus (not a dense matrix)
+_INDEX_METHODS = ("impact", "pruned", "quantized", "sharded")
 # corpora at or above this many rows route "auto" to the streaming
 # kernel (the (B, N) score matrix stops being a rounding error)
 AUTO_STREAMING_N = 16384
@@ -95,12 +119,23 @@ def _dense_queries(queries: Queries, vocab_size: int) -> Array:
 
 
 def _resolve_method(method: str, corpus: Corpus) -> str:
+    from repro.retrieval.engine.quantize import QuantizedIndex
+    from repro.retrieval.engine.sharded_index import ShardedIndex
+
     if method not in METHODS:
         raise ValueError(f"unknown retrieval method {method!r}; "
                          f"one of {list(METHODS)}")
     if method != "auto":
         return method
+    if isinstance(corpus, QuantizedIndex):
+        return "quantized"
+    if isinstance(corpus, ShardedIndex):
+        return "sharded"
     if isinstance(corpus, InvertedIndex):
+        # an engine build (upper bounds + forward rows) can serve the
+        # two-tier pruned path; a bare PR-3 index only the exact one
+        if corpus.has_upper_bounds and corpus.has_forward:
+            return "pruned"
         return "impact"
     return "streaming" if corpus.shape[0] >= AUTO_STREAMING_N else "dense"
 
@@ -124,38 +159,70 @@ def _impact_retrieve(queries: SparseRep, index: InvertedIndex, k: int
 
 def retrieve(
     queries: Queries,           # (B, V) dense or SparseRep
-    corpus: Corpus,             # (N, V) dense matrix or InvertedIndex
+    corpus: Corpus,             # (N, V) dense matrix or an index
     k: int = 10,
     *,
     method: str = "auto",
     interpret: Optional[bool] = None,
     block_b: int = 8,
     block_n: int = 1024,
+    prune_margin: float = 0.0,
+    candidates: Optional[int] = None,
+    mesh=None,
+    axis_name: Optional[str] = None,
 ) -> Tuple[Array, Array]:
     """Top-k retrieval via the method table in the module docstring.
 
     ``k`` is clamped to the corpus size so every path returns the same
     ``(B, min(k, N))`` shape. ``interpret`` only affects the streaming
-    kernel (None = auto: Pallas interpreter off-TPU).
+    kernel (None = auto: Pallas interpreter off-TPU);
+    ``prune_margin``/``candidates`` only the pruned path
+    (``engine.pruning``); ``mesh``/``axis_name`` only the sharded path
+    (None = single-device vmap over shards).
     """
     method = _resolve_method(method, corpus)
 
-    if method == "impact":
-        if not isinstance(corpus, InvertedIndex):
-            raise ValueError(
-                "method='impact' needs an InvertedIndex corpus — build "
-                "one with retrieval.index.build_inverted_index")
+    if method in _INDEX_METHODS:
+        from repro.retrieval.engine.quantize import (QuantizedIndex,
+                                                     quantized_retrieve)
+        from repro.retrieval.engine.sharded_index import (ShardedIndex,
+                                                          sharded_retrieve)
+
         if not isinstance(queries, SparseRep):
             raise ValueError(
-                "method='impact' needs SparseRep queries — sparsify "
+                f"method={method!r} needs SparseRep queries — sparsify "
                 "with retrieval.sparse_rep.sparsify_topk/threshold "
                 "(an explicit budget, not a silent one)")
+        if method == "quantized":
+            if not isinstance(corpus, QuantizedIndex):
+                raise ValueError(
+                    "method='quantized' needs a QuantizedIndex corpus "
+                    "— compress one with engine.quantize.quantize_index")
+            return quantized_retrieve(queries, corpus, k)
+        if method == "sharded":
+            if not isinstance(corpus, ShardedIndex):
+                raise ValueError(
+                    "method='sharded' needs a ShardedIndex corpus — "
+                    "build one with engine.sharded_index.shard_index")
+            return sharded_retrieve(queries, corpus, k, mesh=mesh,
+                                    axis_name=axis_name)
+        if not isinstance(corpus, InvertedIndex):
+            raise ValueError(
+                f"method={method!r} needs an InvertedIndex corpus — "
+                "build one with retrieval.index.build_inverted_index")
+        if method == "pruned":
+            from repro.retrieval.engine.pruning import pruned_retrieve
+
+            return pruned_retrieve(queries, corpus, k,
+                                   prune_margin=prune_margin,
+                                   candidates=candidates)
         return _impact_retrieve(queries, corpus, min(k, corpus.n_docs))
 
-    if isinstance(corpus, InvertedIndex):
+    if isinstance(corpus, InvertedIndex) or not hasattr(corpus, "shape"):
         raise ValueError(
             f"method={method!r} needs a dense (N, V) corpus matrix; "
-            "got an InvertedIndex (use method='impact' or 'auto')")
+            f"got {type(corpus).__name__} (use an index method or "
+            "'auto')")
     n_docs, vocab = corpus.shape
     q = _dense_queries(queries, vocab)
     k = min(k, n_docs)

@@ -23,6 +23,12 @@ tick); a thread wrapper is provided for the example server. Completed
 results are handed out by ``take(uid)``, which *pops* — the loop holds
 no reference after the caller reads a result, so memory is bounded by
 in-flight work, not by total traffic.
+
+``CorpusEngine`` is the online-corpus half: it feeds document batches
+through the same batched encoder into an incremental
+``engine.IndexBuilder`` (add/remove/flush with tombstones and
+compaction — DESIGN.md §8.4), so the served corpus grows online
+instead of being rebuilt from scratch.
 """
 
 from __future__ import annotations
@@ -167,6 +173,80 @@ class ServingLoop:
     def drain(self) -> None:
         while self.pending:
             self.tick(force=True)
+
+
+class CorpusEngine:
+    """Online corpus for the serving loop: encode + index + search.
+
+    Couples a ``BatchedEncoder`` (documents go through the same
+    batched encode path as queries) with an ``engine.IndexBuilder``,
+    so the corpus grows and shrinks *while serving* instead of being
+    frozen at build time:
+
+        eng = CorpusEngine(encoder, vocab_size, quantize=True)
+        ids = eng.add_docs(token_arrays)       # encode + buffer
+        eng.remove_docs(ids[:3])               # tombstone
+        vals, ext_ids = eng.search(q_rep, k)   # flushes, then scores
+
+    ``search`` returns stable *external* doc ids (the ids ``add_docs``
+    handed out), surviving compactions. ``keep_forward=True`` enables
+    the pruned path (``search(..., method="pruned")``); with
+    ``quantize=True`` the base segment is served compressed.
+    """
+
+    def __init__(self, encoder: "BatchedEncoder", vocab_size: int, *,
+                 quantize: bool = False, keep_forward: bool = False,
+                 merge_frac: float = 0.25,
+                 compact_dead_frac: float = 0.25):
+        from repro.retrieval.engine import IndexBuilder
+
+        self.encoder = encoder
+        self.builder = IndexBuilder(
+            vocab_size, quantize=quantize, keep_forward=keep_forward,
+            merge_frac=merge_frac, compact_dead_frac=compact_dead_frac)
+        self._next_uid = 0
+
+    def add_docs(self, docs: Sequence[np.ndarray],
+                 ids: Optional[Sequence[int]] = None) -> np.ndarray:
+        """Encode token arrays through the batched encoder and buffer
+        them into the index; returns their external doc ids.
+
+        Documents are chunked by the encoder's ``policy.max_batch``
+        (the policy governs document encoding exactly as it governs
+        query micro-batching — one giant batch would blow the jit
+        cache and device memory)."""
+        from repro.retrieval.sparse_rep import SparseRep, stack_rows
+
+        rows = []
+        chunk = max(1, self.encoder.policy.max_batch)
+        docs = list(docs)
+        for lo in range(0, len(docs), chunk):
+            reqs = []
+            for tokens in docs[lo:lo + chunk]:
+                reqs.append(Request(uid=self._next_uid,
+                                    tokens=np.asarray(tokens, np.int32)))
+                self._next_uid += 1
+            by_uid = self.encoder.encode_batch(reqs)
+            rows.extend(by_uid[r.uid] for r in reqs)
+        if not all(isinstance(r, SparseRep) for r in rows):
+            raise ValueError(
+                "CorpusEngine needs a sparse encoder — set the "
+                "config's rep_topk/rep_threshold knobs so encode "
+                "emits SparseReps")
+        return self.builder.add(stack_rows(rows), ids=ids)
+
+    def remove_docs(self, ids: Sequence[int]) -> int:
+        return self.builder.remove(ids)
+
+    def flush(self, **kw) -> None:
+        self.builder.flush(**kw)
+
+    def search(self, queries, k: int = 10, *, method: str = "auto",
+               **kw) -> Tuple[np.ndarray, np.ndarray]:
+        return self.builder.search(queries, k, method=method, **kw)
+
+    def stats(self) -> Dict[str, float]:
+        return self.builder.stats()
 
 
 def retrieve_topk(

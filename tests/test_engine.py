@@ -1,0 +1,523 @@
+"""Index-engine tests (DESIGN.md §8): two-tier pruning, quantized
+compression, doc sharding, and the incremental builder.
+
+The acceptance anchors:
+
+* ``method="pruned"`` returns ids identical to ``method="impact"`` at
+  the default (safe) margin on the graded benchmark corpus;
+* ``QuantizedIndex`` is >= 4x smaller than the raw ``InvertedIndex``
+  on that corpus with identical top-k ids;
+* sharded retrieval (vmap fallback and the shard_map multi-device
+  path, run in a subprocess like ``test_head_api``) matches the
+  single-device scorer;
+* ``IndexBuilder`` add/remove/flush/compact keep external ids stable
+  and search-consistent with a frozen one-shot build.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.synthetic import lsr_impact_corpus
+from repro.retrieval import (IndexBuilder, SparseRep,
+                             build_inverted_index, pruned_retrieve,
+                             quantize_index, retrieve, shard_index,
+                             sparsify_topk, sparsify_threshold)
+from repro.retrieval.engine.pruning import (default_candidates,
+                                            upper_bound_scores)
+from repro.retrieval.engine.quantize import quantized_scores
+from repro.retrieval.score import impact_scores
+
+K = 10
+BENCH = dict(n_docs=1536, vocab=1536, doc_nnz=32, n_queries=8,
+             q_nnz=28)
+
+
+@pytest.fixture(scope="module")
+def graded():
+    """Bench-shaped graded corpus: reps, raw/engine/quantized indexes,
+    and the exact impact baseline."""
+    data = lsr_impact_corpus(**BENCH)
+    q = sparsify_topk(jnp.asarray(data["queries"]), BENCH["q_nnz"])
+    d = sparsify_topk(jnp.asarray(data["docs"]), BENCH["doc_nnz"])
+    raw = build_inverted_index(d, BENCH["vocab"])
+    eng = build_inverted_index(d, BENCH["vocab"], keep_forward=True)
+    vals, idx = retrieve(q, raw, K, method="impact")
+    return {"q": q, "d": d, "raw": raw, "eng": eng,
+            "vals": np.asarray(vals), "idx": np.asarray(idx)}
+
+
+def _small(rng, n, nnz, vocab):
+    m = np.zeros((n, vocab), np.float32)
+    for r in range(n):
+        cols = rng.choice(vocab, size=nnz, replace=False)
+        m[r, cols] = rng.uniform(0.1, 2.0, size=nnz)
+    return m
+
+
+# ---------------------------------------------------------------------------
+# index extensions: upper bounds, forward rows, percentiles, warning
+# ---------------------------------------------------------------------------
+
+def test_index_carries_upper_bounds_and_percentiles(graded):
+    raw = graded["raw"]
+    assert raw.has_upper_bounds and not raw.has_forward
+    ubs = np.asarray(raw.term_ubs)
+    lens = np.asarray(raw.term_lens)
+    starts = np.asarray(raw.term_starts)
+    pv = np.asarray(raw.postings_val)
+    for t in np.flatnonzero(lens > 0)[:50]:
+        assert ubs[t] == pv[starts[t]:starts[t] + lens[t]].max()
+    assert (ubs[lens == 0] == 0).all()
+    p50, p90, p99, mx = raw.posting_percentiles
+    assert 0 < p50 <= p90 <= p99 <= mx == raw.max_postings
+    st = raw.stats()
+    assert st["postings_p50"] == p50 and st["postings_max"] == mx
+
+
+def test_engine_index_has_forward_rows(graded):
+    eng, d = graded["eng"], graded["d"]
+    assert eng.has_forward
+    np.testing.assert_array_equal(np.asarray(eng.doc_values),
+                                  np.asarray(d.values))
+    # forward rows are counted in the footprint
+    assert eng.memory_bytes() > graded["raw"].memory_bytes()
+
+
+def test_stopword_term_warns_with_percentiles():
+    """A term active in most docs pads every query gather to ~N — the
+    build must say so, with posting-length stats."""
+    rng = np.random.default_rng(0)
+    m = _small(rng, 50, 4, 64)
+    m[:45, 7] = 1.0                      # stopword-ish term
+    rep = sparsify_threshold(jnp.asarray(m), 0.0, max_nnz=8)
+    with pytest.warns(UserWarning, match=r"p50=.*p99=.*max=45"):
+        idx = build_inverted_index(rep, 64)
+    assert idx.max_postings == 45
+    # quiet under a permissive threshold
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        build_inverted_index(rep, 64, stopword_warn_frac=0.95)
+
+
+# ---------------------------------------------------------------------------
+# pruning
+# ---------------------------------------------------------------------------
+
+def test_upper_bound_scores_dominate_exact(graded):
+    ub = np.asarray(upper_bound_scores(graded["q"], graded["raw"]))
+    exact = np.asarray(impact_scores(graded["q"], graded["raw"]))
+    assert (ub >= exact - 1e-4).all()
+
+
+def test_pruned_ids_identical_to_impact_at_safe_margin(graded):
+    """Acceptance: safe-margin pruning is id-identical to the exact
+    scorer, and the run is provably exact (frontier diagnostic)."""
+    vals, idx, frontier = pruned_retrieve(
+        graded["q"], graded["eng"], K, with_diagnostics=True)
+    np.testing.assert_array_equal(np.asarray(idx), graded["idx"])
+    np.testing.assert_allclose(np.asarray(vals), graded["vals"],
+                               atol=1e-4)
+    assert np.asarray(frontier).all()
+
+
+def test_pruned_full_candidates_is_exhaustive(graded):
+    """candidates == N rescores everything: exact by construction."""
+    vals, idx = pruned_retrieve(graded["q"], graded["eng"], K,
+                                candidates=BENCH["n_docs"])
+    np.testing.assert_array_equal(np.asarray(idx), graded["idx"])
+
+
+def test_pruned_aggressive_margin_prunes_but_keeps_top1(graded):
+    """margin=1 keeps only docs whose ceiling reaches the k-th best
+    ceiling — lossy by design, but the clear winner survives."""
+    vals, idx = pruned_retrieve(graded["q"], graded["eng"], K,
+                                prune_margin=1.0)
+    assert np.array_equal(np.asarray(idx)[:, 0], graded["idx"][:, 0])
+
+
+def test_pruned_input_validation(graded):
+    with pytest.raises(ValueError, match="forward"):
+        pruned_retrieve(graded["q"], graded["raw"], K)
+    with pytest.raises(ValueError, match="prune_margin"):
+        pruned_retrieve(graded["q"], graded["eng"], K, prune_margin=2.0)
+    import dataclasses
+    no_ubs = dataclasses.replace(graded["eng"], term_ubs=None)
+    with pytest.raises(ValueError, match="upper bounds"):
+        pruned_retrieve(graded["q"], no_ubs, K)
+
+
+def test_default_candidates_planner_reads_percentiles(graded):
+    base = default_candidates(graded["raw"], K)
+    assert K <= base <= BENCH["n_docs"]
+    # stopword-skewed percentiles double the budget
+    import dataclasses
+    skewed = dataclasses.replace(
+        graded["raw"], posting_percentiles=(4.0, 30.0, 40.0, 900.0))
+    assert default_candidates(skewed, K) == min(2 * base,
+                                                BENCH["n_docs"])
+
+
+def test_auto_prefers_pruned_on_engine_index(graded):
+    """The dispatch heuristic: an index carrying upper bounds AND
+    forward rows routes 'auto' to the pruned path (id-identical), a
+    bare index to exact impact."""
+    from repro.retrieval.score import _resolve_method
+
+    assert _resolve_method("auto", graded["eng"]) == "pruned"
+    assert _resolve_method("auto", graded["raw"]) == "impact"
+    v_auto, i_auto = retrieve(graded["q"], graded["eng"], K)
+    np.testing.assert_array_equal(np.asarray(i_auto), graded["idx"])
+
+
+# ---------------------------------------------------------------------------
+# quantization
+# ---------------------------------------------------------------------------
+
+def test_quantized_roundtrip_parity_and_4x(graded):
+    """Acceptance: >= 4x smaller than the raw index, identical top-k
+    ids, scores within the per-term quantization tolerance."""
+    raw = graded["raw"]
+    quant = quantize_index(raw)
+    ratio = raw.memory_bytes() / quant.memory_bytes()
+    assert ratio >= 4.0, f"compression ratio {ratio:.2f} < 4x"
+
+    vals, idx = retrieve(graded["q"], quant, K, method="quantized")
+    np.testing.assert_array_equal(np.asarray(idx), graded["idx"])
+    # worst-case dequant error: sum_t q_t * step_t / 2 per doc
+    step = (np.asarray(quant.term_hi, np.float32)
+            - np.asarray(quant.term_lo, np.float32)) / 14
+    qv = np.asarray(graded["q"].values)
+    qi = np.asarray(graded["q"].indices)
+    tol = (qv * step[qi] / 2).sum(axis=1, keepdims=True) + 1e-4
+    assert (np.abs(np.asarray(vals) - graded["vals"]) <= tol).all()
+
+
+def test_quantized_scores_match_dense_within_tolerance():
+    """Full (B, N) score matrix vs the exact one on a small corpus."""
+    data = lsr_impact_corpus(n_docs=96, vocab=256, doc_nnz=16,
+                             n_queries=4, q_nnz=14, graded=6)
+    q = sparsify_topk(jnp.asarray(data["queries"]), 14)
+    d = sparsify_topk(jnp.asarray(data["docs"]), 16)
+    raw = build_inverted_index(d, 256)
+    quant = quantize_index(raw)
+    exact = np.asarray(impact_scores(q, raw))
+    approx = np.asarray(quantized_scores(q, quant))
+    step = (np.asarray(quant.term_hi, np.float32)
+            - np.asarray(quant.term_lo, np.float32)) / 14
+    tol = (np.asarray(q.values) * step[np.asarray(q.indices)]
+           / 2).sum(axis=1, keepdims=True) + 1e-4
+    assert (np.abs(approx - exact) <= tol).all()
+
+
+def test_quantized_delta_escape_handles_large_gaps():
+    """A mostly-dense list with a few gaps > 255 stays u8 and
+    round-trips the large gaps through escape phantoms."""
+    n = 2000
+    v = np.zeros((n, 2), np.float32)
+    i = np.zeros((n, 2), np.int32)
+    # term 3: a dense run (gap 1) plus two long jumps (gap > 2*255)
+    docs = np.concatenate([np.arange(100), [800, 1900]])
+    v[docs, 0] = 1.5
+    i[docs, 0] = 3
+    rep = SparseRep(v, i, (v > 0).sum(1).astype(np.int32))
+    raw = build_inverted_index(rep, 8)
+    quant = quantize_index(raw)
+    assert np.asarray(quant.deltas).dtype == np.uint8
+    assert quant.stats()["phantom_frac"] > 0
+    q = SparseRep(np.ones((1, 1), np.float32),
+                  np.full((1, 1), 3, np.int32),
+                  np.ones(1, np.int32))
+    scores = np.asarray(quantized_scores(q, quant))[0]
+    expected = np.zeros(n, np.float32)
+    expected[docs] = 1.5
+    np.testing.assert_allclose(scores, expected, atol=1e-3)
+
+
+def test_quantized_sparse_gaps_pick_wide_deltas():
+    """Uniformly sparse posting lists (avg gap >> 255) must switch to
+    u16 deltas instead of drowning the index in u8 escape phantoms
+    (which used to make the 'compressed' index *larger* than raw and
+    blow up the per-query gather window)."""
+    rng = np.random.default_rng(7)
+    n, vocab, nnz = 20000, 4096, 4      # avg gap ~ n/postings >> 255
+    v = rng.uniform(0.5, 1.5, size=(n, nnz)).astype(np.float32)
+    i = np.stack([rng.choice(vocab, size=nnz, replace=False)
+                  for _ in range(n)]).astype(np.int32)
+    rep = SparseRep(v, i, np.full(n, nnz, np.int32))
+    raw = build_inverted_index(rep, vocab)
+    quant = quantize_index(raw)
+    assert np.asarray(quant.deltas).dtype == np.uint16
+    assert quant.stats()["phantom_frac"] < 0.01
+    assert quant.max_postings <= raw.max_postings + 1
+    assert quant.memory_bytes() < raw.memory_bytes()
+    q = sparsify_topk(jnp.asarray(_small(rng, 2, 8, vocab)), 8)
+    exact = np.asarray(impact_scores(q, raw))
+    approx = np.asarray(quantized_scores(q, quant))
+    assert np.abs(exact - approx).max() < 0.1
+
+
+def test_quantized_empty_corpus_is_valid():
+    rep = sparsify_topk(jnp.zeros((3, 32)), 4)
+    quant = quantize_index(build_inverted_index(rep, 32))
+    q = sparsify_topk(jnp.asarray(_small(
+        np.random.default_rng(0), 2, 4, 32)), 4)
+    scores = np.asarray(quantized_scores(q, quant))
+    assert scores.shape == (2, 3) and (scores == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# sharding (vmap path here; shard_map path in the subprocess test)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_shards", [1, 2, 3, 4])
+def test_sharded_vmap_matches_single_device(graded, n_shards):
+    sidx = shard_index(graded["d"], BENCH["vocab"], n_shards)
+    vals, idx = retrieve(graded["q"], sidx, K, method="sharded")
+    np.testing.assert_array_equal(np.asarray(idx), graded["idx"])
+    np.testing.assert_allclose(np.asarray(vals), graded["vals"],
+                               atol=1e-4)
+
+
+def test_sharded_uneven_split_and_small_k():
+    rng = np.random.default_rng(3)
+    D = _small(rng, 41, 6, 64)           # 41 docs over 3 shards: 14/14/13
+    Q = _small(rng, 3, 5, 64)
+    d = sparsify_threshold(jnp.asarray(D), 0.0, max_nnz=8)
+    q = sparsify_threshold(jnp.asarray(Q), 0.0, max_nnz=8)
+    sidx = shard_index(d, 64, 3)
+    assert sidx.docs_per_shard == 14 and sidx.n_docs == 41
+    v1, i1 = retrieve(q, build_inverted_index(d, 64), 5,
+                      method="impact")
+    v2, i2 = retrieve(q, sidx, 5)        # auto -> sharded
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_shard_index_input_validation(graded):
+    with pytest.raises(ValueError, match="n_shards"):
+        shard_index(graded["d"], BENCH["vocab"], 0)
+    with pytest.raises(ValueError, match="exceeds corpus"):
+        shard_index(SparseRep(np.ones((2, 1), np.float32),
+                              np.zeros((2, 1), np.int32),
+                              np.ones(2, np.int32)), 4, 3)
+
+
+_SHARDED_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.data.synthetic import lsr_impact_corpus
+    from repro.retrieval import (build_inverted_index, retrieve,
+                                 shard_index, sparsify_topk)
+    from repro.retrieval.engine.sharded_index import sharded_retrieve
+
+    assert jax.device_count() >= 2, jax.devices()
+    data = lsr_impact_corpus(n_docs=192, vocab=256, doc_nnz=16,
+                             n_queries=4, q_nnz=14, graded=6)
+    q = sparsify_topk(jnp.asarray(data["queries"]), 14)
+    d = sparsify_topk(jnp.asarray(data["docs"]), 16)
+    k = 4
+    v_ref, i_ref = retrieve(q, build_inverted_index(d, 256), k,
+                            method="impact")
+
+    sidx = shard_index(d, 256, 2)
+    mesh = jax.make_mesh((2,), ("data",))
+    v_sm, i_sm = sharded_retrieve(q, sidx, k, mesh=mesh)
+    np.testing.assert_array_equal(np.asarray(i_sm), np.asarray(i_ref))
+    np.testing.assert_allclose(np.asarray(v_sm), np.asarray(v_ref),
+                               atol=1e-4)
+    # the retrieve() dispatcher threads the mesh through
+    v_d, i_d = retrieve(q, sidx, k, mesh=mesh)
+    np.testing.assert_array_equal(np.asarray(i_d), np.asarray(i_ref))
+    # shard-count / mesh-size mismatch is a loud error
+    try:
+        sharded_retrieve(q, shard_index(d, 256, 3), k, mesh=mesh)
+        raise SystemExit("mismatch not rejected")
+    except ValueError as e:
+        assert "must equal mesh axis" in str(e), e
+    print("ALL_SHARDED_ENGINE_PASSED")
+""")
+
+
+def test_sharded_retrieve_multi_device_subprocess():
+    """shard_map path on a forced 2-host-device mesh matches the
+    single-device scorer (mirrors test_head_api's subprocess
+    pattern so the device-count flag never leaks into this
+    process)."""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                     "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", _SHARDED_SCRIPT], env=env,
+        capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, (
+        f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr[-4000:]}")
+    assert "ALL_SHARDED_ENGINE_PASSED" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# incremental builder
+# ---------------------------------------------------------------------------
+
+def _rep_rows(m):
+    return sparsify_threshold(jnp.asarray(m), 0.0, max_nnz=12)
+
+
+def test_builder_add_flush_matches_frozen_build():
+    rng = np.random.default_rng(0)
+    D = _small(rng, 60, 8, 128)
+    Q = _small(rng, 4, 6, 128)
+    q = _rep_rows(Q)
+    frozen = build_inverted_index(_rep_rows(D), 128)
+    v_ref, i_ref = retrieve(q, frozen, 7, method="impact")
+
+    b = IndexBuilder(128)
+    ids = b.add(_rep_rows(D[:40]))
+    b.flush()
+    assert b.stats()["base_docs"] == 40
+    ids2 = b.add(_rep_rows(D[40:]))
+    np.testing.assert_array_equal(
+        np.concatenate([ids, ids2]), np.arange(60))
+    vals, ext = b.search(q, 7)           # auto-flush -> base + delta
+    assert b.stats()["delta_docs"] in (0, 20)   # merged or delta'd
+    np.testing.assert_array_equal(ext, np.asarray(i_ref))
+    np.testing.assert_allclose(vals, np.asarray(v_ref), atol=1e-4)
+
+
+def test_builder_delta_segment_is_incremental():
+    """A small add onto a large base must pack only the delta — the
+    base arrays are reused by reference, not rebuilt."""
+    rng = np.random.default_rng(1)
+    D = _small(rng, 80, 8, 128)
+    b = IndexBuilder(128, merge_frac=0.5)
+    b.add(_rep_rows(D[:64]))
+    b.flush()
+    base_before = b._base
+    b.add(_rep_rows(D[64:]))
+    b.flush()
+    assert b._base is base_before, "base was rebuilt for a delta add"
+    assert b._delta is not None and b._delta.n_docs == 16
+    st = b.stats()
+    assert st["base_docs"] == 64 and st["delta_docs"] == 16
+
+
+def test_builder_remove_tombstones_then_compacts():
+    rng = np.random.default_rng(2)
+    D = _small(rng, 50, 8, 128)
+    Q = _small(rng, 3, 6, 128)
+    q = _rep_rows(Q)
+    b = IndexBuilder(128, compact_dead_frac=0.5)
+    b.add(_rep_rows(D))
+    b.flush()
+    _, ext0 = b.search(q, 5)
+    victim = int(ext0[0, 0])
+    assert b.remove([victim, victim, 9999]) == 1   # idempotent+unknown
+    _, ext1 = b.search(q, 5)
+    assert victim not in ext1, "tombstoned doc still retrieved"
+    assert b.stats()["n_dead"] == 1                # tombstoned, kept
+    # others' results are unaffected by the tombstone
+    assert set(ext1[ext1 >= 0]) <= set(ext0.ravel()) | set(ext1.ravel())
+
+    b.flush(force_compact=True)
+    assert b.stats()["n_dead"] == 0 and b.stats()["n_slots"] == 49
+    _, ext2 = b.search(q, 5)
+    np.testing.assert_array_equal(ext1, ext2)      # ext ids stable
+
+
+def test_builder_auto_compaction_thresholds():
+    rng = np.random.default_rng(4)
+    D = _small(rng, 40, 6, 64)
+    b = IndexBuilder(64, compact_dead_frac=0.25)
+    b.add(_rep_rows(D))
+    b.flush()
+    b.remove(range(15))                  # 15/40 > 25% dead
+    b.flush()
+    st = b.stats()
+    assert st["n_dead"] == 0 and st["n_slots"] == 25, \
+        "dead fraction over threshold must trigger compaction"
+
+
+def test_builder_quantized_base_serves_search():
+    data = lsr_impact_corpus(n_docs=96, vocab=256, doc_nnz=16,
+                             n_queries=3, q_nnz=14, graded=6)
+    q = sparsify_topk(jnp.asarray(data["queries"]), 14)
+    d = sparsify_topk(jnp.asarray(data["docs"]), 16)
+    frozen = build_inverted_index(d, 256)
+    _, i_ref = retrieve(q, frozen, 4, method="impact")
+    b = IndexBuilder(256, quantize=True)
+    b.add(d)
+    vals, ext = b.search(q, 4)
+    assert b.stats()["quantized_base"]
+    np.testing.assert_array_equal(ext, np.asarray(i_ref))
+
+
+def test_builder_external_ids_and_empty():
+    b = IndexBuilder(64)
+    vals, ext = b.search(_rep_rows(np.zeros((2, 64), np.float32)), 3)
+    assert (ext == -1).all()
+    rng = np.random.default_rng(5)
+    ids = b.add(_rep_rows(_small(rng, 4, 6, 64)), ids=[10, 20, 30, 40])
+    np.testing.assert_array_equal(ids, [10, 20, 30, 40])
+    with pytest.raises(ValueError, match="duplicate"):
+        b.add(_rep_rows(_small(rng, 1, 6, 64)), ids=[20])
+    assert b.add(_rep_rows(_small(rng, 1, 6, 64)))[0] == 41
+
+
+def test_builder_removed_id_is_reusable_before_compaction():
+    """delete + reinsert of an external id must work deterministically
+    — the tombstoned slot may still exist physically, but the id is
+    released at remove() time, not at compaction time."""
+    rng = np.random.default_rng(6)
+    b = IndexBuilder(64, compact_dead_frac=0.9)   # never auto-compact
+    b.add(_rep_rows(_small(rng, 8, 6, 64)))
+    b.flush()
+    assert b.remove([3]) == 1
+    assert b.stats()["n_dead"] == 1               # slot not compacted
+    m = _small(rng, 1, 6, 64)
+    np.testing.assert_array_equal(b.add(_rep_rows(m), ids=[3]), [3])
+    q = _rep_rows(m)
+    _, ext = b.search(q, 1)
+    assert ext[0, 0] == 3                          # the NEW doc 3
+    assert b.remove([3]) == 1                      # and it's removable
+
+
+# ---------------------------------------------------------------------------
+# serving integration: CorpusEngine
+# ---------------------------------------------------------------------------
+
+def test_corpus_engine_grows_and_searches():
+    from repro.retrieval import sparsify_topk as topk
+    from repro.runtime.serving import BatchedEncoder, BatchPolicy, \
+        CorpusEngine
+
+    def encode(tokens, mask):
+        B = tokens.shape[0]
+        out = np.zeros((B, 32), np.float32)
+        for i in range(B):
+            for t, m in zip(np.asarray(tokens[i]), np.asarray(mask[i])):
+                if m:
+                    out[i, int(t) % 32] += 1
+        return topk(jnp.asarray(out), 4)
+
+    eng = CorpusEngine(
+        BatchedEncoder(encode, policy=BatchPolicy(max_batch=8)), 32)
+    ids = eng.add_docs([np.array([d, d, d], np.int32)
+                        for d in range(6)])
+    np.testing.assert_array_equal(ids, np.arange(6))
+    ids2 = eng.add_docs([np.array([7, 7, 7], np.int32)])
+    # query for token 3 -> doc 3 wins
+    q = topk(jnp.asarray(np.eye(32, dtype=np.float32)[[3]] * 5), 4)
+    vals, ext = eng.search(q, 2)
+    assert ext[0, 0] == 3
+    eng.remove_docs([3])
+    vals, ext = eng.search(q, 2)
+    assert 3 not in ext
+    assert eng.stats()["n_alive"] == 6
