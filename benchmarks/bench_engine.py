@@ -13,9 +13,11 @@ Four comparisons behind ``BENCH_engine.json``:
 * ``pruned`` — id parity vs impact at the safe margin plus the
   fraction of queries whose pruning was provably exact, and the same
   at an aggressive ``prune_margin`` for the recall/speed trade;
-* ``sharded`` — median ms at 1/2/4 shards (single-device vmap path on
-  CI — a work partition, not a memory win; the shard_map path needs a
-  real mesh) with id parity vs the unsharded scorer.
+* ``sharded`` / ``term_sharded`` — median ms at 1/2/4 shards for BOTH
+  sharding axes (doc ranges + top-k merge vs vocab ranges +
+  partial-sum merge; single-device vmap paths on CI — a work
+  partition, not a memory win; the shard_map paths need a real mesh)
+  with id parity vs the unsharded scorer.
 
 ``--smoke`` (or ``BENCH_SMOKE=1``) shrinks the workload for CI; the
 interpret-mode/CPU caveat from DESIGN.md §5 applies to all timings.
@@ -35,7 +37,7 @@ from benchmarks._common import time_fn
 from repro.data.synthetic import lsr_impact_corpus
 from repro.retrieval import (build_inverted_index, pruned_retrieve,
                              quantize_index, retrieve, shard_index,
-                             sparsify_topk)
+                             sparsify_topk, term_shard_index)
 
 FULL = dict(n_docs=8192, vocab=4096, doc_nnz=64, n_queries=16,
             q_nnz=32, k=10, block_n=2048)
@@ -122,9 +124,12 @@ def run(smoke: bool = False, json_path: str = None):
         "aggr_topk_overlap": round(float(overlap), 4),
     }
 
-    # sharded scaling (vmap fallback — shard counts partition the work;
-    # real scaling needs a device mesh, see DESIGN.md §8.3)
+    # sharded scaling, both axes (vmap fallback — shard counts
+    # partition the work; real scaling needs a device mesh, DESIGN.md
+    # §8.3/§9): doc ranges with the top-k merge vs vocab ranges with
+    # the partial-sum merge, at identical ids either way
     record["sharded"] = {}
+    record["term_sharded"] = {}
     for s in (1, 2, 4):
         sidx = shard_index(d_rep, p["vocab"], s)
         fn = lambda: retrieve(q_rep, sidx, k, method="sharded")
@@ -135,12 +140,23 @@ def run(smoke: bool = False, json_path: str = None):
             "topk_ids_equal": bool(np.array_equal(ids["impact"],
                                                   np.asarray(sid))),
         }
+        tidx = term_shard_index(d_rep, p["vocab"], s)
+        fn = lambda: retrieve(q_rep, tidx, k, method="term_sharded")
+        t = time_fn(fn, iters=iters)
+        _, tid = fn()
+        record["term_sharded"][str(s)] = {
+            "median_ms": round(t, 3),
+            "topk_ids_equal": bool(np.array_equal(ids["impact"],
+                                                  np.asarray(tid))),
+        }
 
     record["parity"] = {"topk_ids_equal": bool(
         record["quantization"]["topk_ids_equal"]
         and record["pruned"]["topk_ids_equal"]
         and all(v["topk_ids_equal"]
-                for v in record["sharded"].values()))}
+                for v in record["sharded"].values())
+        and all(v["topk_ids_equal"]
+                for v in record["term_sharded"].values()))}
 
     print("method,median_ms,corpus_bytes")
     for name, rec in record["methods"].items():
@@ -153,8 +169,10 @@ def run(smoke: bool = False, json_path: str = None):
           f"margin={PRUNE_MARGIN_AGGR} overlap: "
           f"{record['pruned']['aggr_topk_overlap']:.2f})")
     for s, rec in record["sharded"].items():
-        print(f"sharded x{s}: {rec['median_ms']} ms "
-              f"(ids equal: {rec['topk_ids_equal']})")
+        trec = record["term_sharded"][s]
+        print(f"sharded x{s}: doc {rec['median_ms']} ms / "
+              f"term {trec['median_ms']} ms (ids equal: "
+              f"{rec['topk_ids_equal']}/{trec['topk_ids_equal']})")
     print(f"top-k ids identical across engine paths: "
           f"{record['parity']['topk_ids_equal']}")
     if json_path:

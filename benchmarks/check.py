@@ -1,0 +1,158 @@
+"""CI gate checks over the ``BENCH_*.json`` records.
+
+One place for the acceptance bars that used to live as four
+copy-pasted ``python -c "import json; assert ..."`` blobs inside
+``ci.yml`` — inline blobs are neither testable nor reviewable as
+diffs. Each bench family has a named check:
+
+* ``kernels``   — the head-implementation set is complete (a missing
+                  row means a backend silently fell out of the bench);
+* ``retrieval`` — the three scoring paths ran and their top-k ids
+                  agree (the PR-3 parity acceptance);
+* ``engine``    — the four engine methods ran, pruned/quantized ids
+                  match impact, the quantized index clears the >= 4x
+                  compression bar, and BOTH sharding axes (doc top-k
+                  merge and term partial-sum merge) are id-identical
+                  to the unsharded scorer at 1/2/4 shards.
+
+Checks return a list of human-readable failures (empty = pass) so
+they are unit-testable (``tests/test_bench_check.py``); the CLI exits
+non-zero and prints every failure, plus the record itself so the CI
+log keeps the numbers in view:
+
+    python -m benchmarks.check BENCH_engine.json
+    python -m benchmarks.check --bench kernels some/path.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Callable, Dict, List
+
+EXPECTED_HEADS = {"naive", "tiled", "sparton-jax", "sparton-kernel"}
+EXPECTED_RETRIEVAL = {"dense", "streaming", "impact"}
+EXPECTED_ENGINE = {"impact", "pruned", "quantized", "streaming"}
+EXPECTED_SHARD_COUNTS = {"1", "2", "4"}
+MIN_COMPRESSION_RATIO = 4.0
+
+
+def check_kernels(d: dict) -> List[str]:
+    heads = set(d.get("heads", {}))
+    if heads != EXPECTED_HEADS:
+        return [f"kernel bench heads {sorted(heads)} != expected "
+                f"{sorted(EXPECTED_HEADS)}"]
+    return []
+
+
+def check_retrieval(d: dict) -> List[str]:
+    errs = []
+    methods = set(d.get("methods", {}))
+    if methods != EXPECTED_RETRIEVAL:
+        errs.append(f"retrieval methods {sorted(methods)} != expected "
+                    f"{sorted(EXPECTED_RETRIEVAL)}")
+    if not d.get("parity", {}).get("topk_ids_equal"):
+        errs.append(f"retrieval top-k id parity failed: "
+                    f"{d.get('parity')}")
+    return errs
+
+
+def _check_shard_rows(d: dict, key: str) -> List[str]:
+    rows = d.get(key, {})
+    missing = EXPECTED_SHARD_COUNTS - set(rows)
+    errs = []
+    if missing:
+        errs.append(f"{key} scaling rows missing shard counts "
+                    f"{sorted(missing)} (have {sorted(rows)})")
+    for s, rec in sorted(rows.items()):
+        if not rec.get("topk_ids_equal"):
+            errs.append(f"{key} x{s} top-k ids differ from the "
+                        f"unsharded scorer: {rec}")
+    return errs
+
+
+def check_engine(d: dict) -> List[str]:
+    errs = []
+    methods = set(d.get("methods", {}))
+    if methods != EXPECTED_ENGINE:
+        errs.append(f"engine methods {sorted(methods)} != expected "
+                    f"{sorted(EXPECTED_ENGINE)}")
+    quant = d.get("quantization", {})
+    if not quant.get("topk_ids_equal"):
+        errs.append(f"quantized top-k ids differ from impact: {quant}")
+    ratio = quant.get("ratio", 0.0)
+    if not ratio >= MIN_COMPRESSION_RATIO:
+        errs.append(f"compression ratio {ratio} below the "
+                    f"{MIN_COMPRESSION_RATIO}x bar")
+    if not d.get("pruned", {}).get("topk_ids_equal"):
+        errs.append(f"pruned top-k ids differ from impact: "
+                    f"{d.get('pruned')}")
+    errs += _check_shard_rows(d, "sharded")
+    errs += _check_shard_rows(d, "term_sharded")
+    if not d.get("parity", {}).get("topk_ids_equal"):
+        errs.append(f"engine cross-path parity flag is false: "
+                    f"{d.get('parity')}")
+    return errs
+
+
+CHECKS: Dict[str, Callable[[dict], List[str]]] = {
+    "kernels": check_kernels,
+    "retrieval": check_retrieval,
+    "engine": check_engine,
+}
+
+
+def infer_bench(path: str) -> str:
+    """``BENCH_engine*.json`` -> ``engine`` etc.; raises on unknown."""
+    base = os.path.basename(path)
+    for name in CHECKS:
+        if base.startswith(f"BENCH_{name}"):
+            return name
+    raise ValueError(
+        f"cannot infer bench family from {base!r}; pass --bench "
+        f"{{{','.join(CHECKS)}}}")
+
+
+def check_file(path: str, bench: str = None) -> List[str]:
+    """Run the (inferred or given) check; returns failure strings."""
+    if bench is None:
+        bench = infer_bench(path)
+    if bench not in CHECKS:
+        raise ValueError(f"unknown bench {bench!r}; one of "
+                         f"{sorted(CHECKS)}")
+    with open(path) as f:
+        record = json.load(f)
+    return [f"{path}: {e}" for e in CHECKS[bench](record)]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="assert the BENCH_*.json acceptance bars (the CI "
+                    "gate; see module docstring)")
+    ap.add_argument("paths", nargs="+", metavar="BENCH.json")
+    ap.add_argument("--bench", default=None, choices=sorted(CHECKS),
+                    help="bench family (default: inferred from each "
+                         "file name)")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress echoing the records")
+    args = ap.parse_args(argv)
+
+    failures = []
+    for path in args.paths:
+        if not args.quiet:
+            with open(path) as f:
+                print(f"== {path} ==")
+                print(json.dumps(json.load(f), indent=2,
+                                 sort_keys=True))
+        failures += check_file(path, bench=args.bench)
+    for f in failures:
+        print(f"GATE FAILED: {f}", file=sys.stderr)
+    if not failures:
+        print(f"all gates passed for {len(args.paths)} record(s)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

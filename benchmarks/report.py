@@ -95,7 +95,44 @@ def _bench_metrics(path: str) -> dict:
         out["quant/ratio"] = d["quantization"].get("ratio")
     for s, rec in d.get("sharded", {}).items():
         out[f"sharded/x{s}"] = rec.get("median_ms")
+    for s, rec in d.get("term_sharded", {}).items():
+        out[f"term_sharded/x{s}"] = rec.get("median_ms")
     return out
+
+
+_SNAP_RE = re.compile(
+    r"^(?P<name>BENCH_[A-Za-z]+)(?:-(?P<date>\d{8})-(?P<sha>[0-9a-f]+)"
+    r"(?:-(?P<run>\d+))?)?\.json$")
+
+
+def _snapshot_key(path: str):
+    """Chronological sort key for ``bench_history/`` snapshot names.
+
+    Tolerates every key generation CI has emitted: ``<name>.json``
+    (the current record — sorts last), ``<name>-<date>-<sha>.json``
+    (PR-4 era) and ``<name>-<date>-<sha>-<run_id>.json`` (run-id
+    suffix so same-commit-same-day runs stop overwriting each other;
+    the run id is monotonic, giving an order within the day).
+    """
+    m = _SNAP_RE.match(os.path.basename(path))
+    if not m or m.group("date") is None:
+        return ("99999999", 1 << 62, os.path.basename(path))
+    run = int(m.group("run")) if m.group("run") else 0
+    return (m.group("date"), run, os.path.basename(path))
+
+
+def _snapshot_label(path: str) -> str:
+    """Column header: drop the shared ``BENCH_<family>-`` prefix and
+    ``.json`` suffix; the bare current record renders as "current"."""
+    m = _SNAP_RE.match(os.path.basename(path))
+    if not m:
+        return os.path.basename(path)
+    if m.group("date") is None:
+        return "current"
+    label = f"{m.group('date')}-{m.group('sha')}"
+    if m.group("run"):
+        label += f"-{m.group('run')}"
+    return label
 
 
 def trend_table(paths: list) -> str:
@@ -106,7 +143,7 @@ def trend_table(paths: list) -> str:
     exist (ROADMAP "start trending" item). Metrics missing from a
     snapshot render as "-" (bench coverage grows over PRs).
     """
-    snaps = [(os.path.basename(p), _bench_metrics(p)) for p in paths]
+    snaps = [(_snapshot_label(p), _bench_metrics(p)) for p in paths]
     metrics = []
     for _, m in snaps:
         for key in m:
@@ -136,7 +173,8 @@ def bench_trends(history_dir: str = "bench_history") -> int:
     printed = 0
     for name in ("BENCH_kernels", "BENCH_retrieval", "BENCH_engine"):
         hist = sorted(glob.glob(os.path.join(history_dir,
-                                             f"{name}*.json")))
+                                             f"{name}*.json")),
+                      key=_snapshot_key)
         cur = f"{name}.json"
         paths = hist + ([cur] if os.path.exists(cur) else [])
         if len(paths) < 2:

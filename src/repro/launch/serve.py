@@ -16,6 +16,10 @@ Runs the sparse-native LSR serving pipeline end-to-end:
             achieved batch sizes;
 3. retrieve — top-k via the unified dispatcher (``--method`` selects
             the path; see repro.retrieval.retrieve's dispatch table).
+            ``--shard-axis doc|term|auto`` picks the sharding axis for
+            ``--method sharded`` builds and ``--engine`` bases: doc
+            ranges with a top-k merge, or vocab ranges with the
+            partial-sum (psum) merge (DESIGN.md §9).
 """
 
 import argparse
@@ -37,8 +41,21 @@ def main(argv=None) -> int:
     ap.add_argument("--method", default="auto", choices=list(METHODS),
                     help="retrieval path (see repro.retrieval.retrieve)")
     ap.add_argument("--shards", type=int, default=2,
-                    help="--method sharded: shard count (single-device "
-                         "vmap path unless a mesh is wired in)")
+                    help="--method sharded/term_sharded: shard count "
+                         "(single-device vmap path unless a mesh is "
+                         "wired in)")
+    ap.add_argument("--shard-axis", default="doc",
+                    choices=("auto", "doc", "term"),
+                    help="sharding axis for --method sharded or an "
+                         "--engine base: doc = contiguous doc ranges "
+                         "(all_gather+re-top-k merge), term = vocab "
+                         "ranges with full posting lists (partial-sum "
+                         "psum merge; the huge-|V| regime), auto = "
+                         "pick by posting bytes vs the term-directory "
+                         "overhead (engine.term_sharded."
+                         "choose_shard_axis; frozen builds only — "
+                         "--engine has no corpus to size before the "
+                         "build and resolves auto to doc)")
     ap.add_argument("--index-batch", type=int, default=64,
                     help="corpus encoding batch size")
     ap.add_argument("--head-impl", default=None,
@@ -67,10 +84,14 @@ def main(argv=None) -> int:
         ap.error(f"--method {args.method} needs the dense corpus "
                  f"matrix; pass --rep-topk 0 to keep it (or use "
                  f"--method impact/auto with the sparse index)")
-    if args.method in ("impact", "pruned", "quantized", "sharded") \
-            and args.rep_topk <= 0:
+    if args.method in ("impact", "pruned", "quantized", "sharded",
+                       "term_sharded") and args.rep_topk <= 0:
         ap.error(f"--method {args.method} needs SparseRep queries and "
                  f"an index; pass a positive --rep-topk")
+    if args.shard_axis == "term" and args.quantize:
+        ap.error("--shard-axis term and --quantize are exclusive (the "
+                 "base segment is either vocab-partitioned or "
+                 "compressed)")
     if (args.quantize or args.prune_margin is not None
             or args.remove_frac) and not args.engine:
         ap.error("--quantize/--prune-margin/--remove-frac need "
@@ -123,11 +144,16 @@ def main(argv=None) -> int:
     t0 = time.monotonic()
     engine = None
     if args.engine:
+        if args.shard_axis == "auto":
+            print("auto shard axis with --engine: no corpus to size "
+                  "before the build -> doc (single-index base)")
         engine = CorpusEngine(
             BatchedEncoder(encode,
                            policy=BatchPolicy(max_batch=bs)),
             cfg.vocab_size, quantize=args.quantize,
-            keep_forward=args.prune_margin is not None)
+            keep_forward=args.prune_margin is not None,
+            shard_axis="term" if args.shard_axis == "term" else "doc",
+            n_shards=args.shards)
         for lo in range(0, args.corpus, bs):
             n = min(bs, args.corpus - lo)
             toks = [rng.integers(1, cfg.vocab_size, size=16)
@@ -144,7 +170,8 @@ def main(argv=None) -> int:
         print(f"engine-indexed {st['n_alive']} live docs "
               f"({st['n_dead']} tombstoned, "
               f"{st['n_compactions']} compactions, "
-              f"quantized base: {st['quantized_base']}) in "
+              f"quantized base: {st['quantized_base']}, "
+              f"term shards: {st['term_shards']}) in "
               f"{(time.monotonic() - t0) * 1e3:.1f} ms")
     else:
         doc_parts, dense_parts = [], []
@@ -179,13 +206,34 @@ def main(argv=None) -> int:
                       f"{corpus.memory_bytes() / 2**20:.2f} MiB "
                       f"(1/{index.memory_bytes() / corpus.memory_bytes():.2f} "
                       f"of raw)")
-            elif args.method == "sharded":
-                from repro.retrieval import shard_index
+            elif args.method in ("sharded", "term_sharded"):
+                axis = ("term" if args.method == "term_sharded"
+                        else args.shard_axis)
+                if axis == "auto":
+                    from repro.retrieval import choose_shard_axis
 
-                corpus = shard_index(corpus_rep, cfg.vocab_size,
-                                     args.shards)
-                print(f"sharded index: {args.shards} shards x "
-                      f"{corpus.docs_per_shard} docs")
+                    axis = choose_shard_axis(
+                        8 * index.n_postings, cfg.vocab_size,
+                        args.shards)
+                    print(f"auto shard axis -> {axis}")
+                if axis == "term":
+                    from repro.retrieval import term_shard_index
+
+                    corpus = term_shard_index(corpus_rep,
+                                              cfg.vocab_size,
+                                              args.shards)
+                    args.method = "term_sharded"
+                    print(f"term-sharded index: {args.shards} shards "
+                          f"x {corpus.local_vocab} vocab terms "
+                          f"(partial-sum merge)")
+                else:
+                    from repro.retrieval import shard_index
+
+                    corpus = shard_index(corpus_rep, cfg.vocab_size,
+                                         args.shards)
+                    args.method = "sharded"
+                    print(f"sharded index: {args.shards} shards x "
+                          f"{corpus.docs_per_shard} docs")
         else:
             corpus = jnp.asarray(np.concatenate(dense_parts))
             print(f"indexed {corpus.shape[0]} docs dense in "

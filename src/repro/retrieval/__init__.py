@@ -4,9 +4,11 @@ pruned / quantized / sharded scoring plus the incremental builder
 (DESIGN.md §7–§8)."""
 
 from repro.retrieval.engine import (IndexBuilder, QuantizedIndex,
-                                    ShardedIndex, pruned_retrieve,
+                                    ShardedIndex, TermShardedIndex,
+                                    choose_shard_axis, pruned_retrieve,
                                     quantize_index, shard_index,
-                                    sharded_retrieve)
+                                    sharded_retrieve, term_shard_index,
+                                    term_sharded_retrieve)
 from repro.retrieval.index import InvertedIndex, build_inverted_index
 from repro.retrieval.score import METHODS, impact_scores, retrieve
 from repro.retrieval.sparse_rep import (SparseRep, sparsify_threshold,
@@ -20,7 +22,9 @@ __all__ = [
     "QuantizedIndex",
     "ShardedIndex",
     "SparseRep",
+    "TermShardedIndex",
     "build_inverted_index",
+    "choose_shard_axis",
     "impact_scores",
     "pruned_retrieve",
     "quantize_index",
@@ -31,4 +35,6 @@ __all__ = [
     "sparsify_topk",
     "split_rows",
     "stack_rows",
+    "term_shard_index",
+    "term_sharded_retrieve",
 ]

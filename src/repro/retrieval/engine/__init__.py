@@ -13,36 +13,56 @@ Four pieces over the PR-3 ``InvertedIndex``:
 * ``sharded_index`` — doc-sharded index over a mesh via ``shard_map``
                       (or a single-device vmap fallback), merged with
                       the same running top-k the kernels use.
+* ``term_sharded``  — term-partitioned (vocab-sharded) index: each
+                      device owns the full posting lists of a vocab
+                      range; per-shard PARTIAL sums are all-reduced
+                      (``psum``) before one global top-k — the merge
+                      algebra for corpora whose posting arrays
+                      outgrow one HBM (DESIGN.md §9).
 * ``builder``       — incremental ``IndexBuilder``: add/remove/flush
                       of document batches with tombstones, a base +
                       delta segment pair, and periodic compaction.
 
 Everything threads through ``repro.retrieval.retrieve`` (methods
-``pruned`` / ``quantized`` / ``sharded``).
+``pruned`` / ``quantized`` / ``sharded`` / ``term_sharded``).
 """
 
 from repro.retrieval.engine.builder import IndexBuilder
 from repro.retrieval.engine.pruning import (default_candidates,
                                             pruned_retrieve,
+                                            select_and_rescore,
                                             upper_bound_scores)
 from repro.retrieval.engine.quantize import (QuantizedIndex,
                                              quantize_index,
                                              quantized_retrieve,
                                              quantized_scores)
 from repro.retrieval.engine.sharded_index import (ShardedIndex,
+                                                  resolve_shard_axis,
                                                   shard_index,
+                                                  shard_mapped,
                                                   sharded_retrieve)
+from repro.retrieval.engine.term_sharded import (TermShardedIndex,
+                                                 choose_shard_axis,
+                                                 term_shard_index,
+                                                 term_sharded_retrieve)
 
 __all__ = [
     "IndexBuilder",
     "QuantizedIndex",
     "ShardedIndex",
+    "TermShardedIndex",
+    "choose_shard_axis",
     "default_candidates",
     "pruned_retrieve",
     "quantize_index",
     "quantized_retrieve",
     "quantized_scores",
+    "resolve_shard_axis",
+    "select_and_rescore",
     "shard_index",
+    "shard_mapped",
     "sharded_retrieve",
+    "term_shard_index",
+    "term_sharded_retrieve",
     "upper_bound_scores",
 ]

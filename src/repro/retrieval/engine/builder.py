@@ -62,12 +62,21 @@ class IndexBuilder:
 
     def __init__(self, vocab_size: int, *, quantize: bool = False,
                  keep_forward: bool = False, merge_frac: float = 0.25,
-                 compact_dead_frac: float = 0.25):
+                 compact_dead_frac: float = 0.25, term_shards: int = 0):
+        if term_shards and quantize:
+            raise ValueError(
+                "term_shards and quantize are exclusive — the base "
+                "segment is either vocab-partitioned or compressed")
         self.vocab_size = vocab_size
         self.quantize = quantize
         self.keep_forward = keep_forward
         self.merge_frac = merge_frac
         self.compact_dead_frac = compact_dead_frac
+        # > 0: the base segment is served as a TermShardedIndex over
+        # this many vocab ranges (the hot delta stays a raw single
+        # index — same read-optimized/write-optimized split as
+        # quantize). Search dispatches per segment via "auto".
+        self.term_shards = term_shards
 
         self._values: Optional[np.ndarray] = None    # (N, K) live rows
         self._indices: Optional[np.ndarray] = None   # (N, K)
@@ -76,8 +85,10 @@ class IndexBuilder:
         self._slot: Dict[int, int] = {}              # external -> slot
         self._next_ext = 0
 
-        self._base: Union[InvertedIndex, "QuantizedIndex", None] = None
-        self._base_raw: Optional[InvertedIndex] = None
+        self._base: Union[InvertedIndex, "QuantizedIndex",
+                          "TermShardedIndex", None] = None
+        self._base_raw: Union[InvertedIndex, "TermShardedIndex",
+                              None] = None
         self._base_n = 0          # slots [0, _base_n) live in the base
         self._delta: Optional[InvertedIndex] = None
         self._delta_dirty = False      # adds/removes touching the tail
@@ -113,6 +124,7 @@ class IndexBuilder:
             "n_compactions": self.n_compactions,
             "quantized_base": bool(self.quantize and self._base
                                    is not None),
+            "term_shards": self.term_shards,
         }
 
     # -- mutation --------------------------------------------------------
@@ -191,6 +203,16 @@ class IndexBuilder:
                    ) -> None:
         rep = SparseRep(values, indices,
                         (values > 0).sum(axis=1).astype(np.int32))
+        if self.term_shards:
+            from repro.retrieval.engine.term_sharded import \
+                term_shard_index
+            # postings_doc carries global slot ids on every shard, so
+            # the tombstone-zeroing flush path applies unchanged
+            self._base_raw = term_shard_index(
+                rep, self.vocab_size, self.term_shards,
+                keep_forward=self.keep_forward)
+            self._base = self._base_raw
+            return
         raw = build_inverted_index(rep, self.vocab_size,
                                    keep_forward=self.keep_forward)
         self._base_raw = raw
@@ -301,12 +323,22 @@ class IndexBuilder:
 
         parts = []   # (vals (B, k'), global slots (B, k'))
         if self._base is not None:
+            bm = method
+            if bm == "pruned" and self.term_shards:
+                # a term-sharded base serves pruning through its own
+                # two-tier composition (per-shard ceilings + rescore);
+                # margin 0 routes to the exact psum path — same ids
+                bm = "term_sharded"
             bv, bi = retrieve(queries, self._base,
                               min(k, self._base.n_docs),
-                              method=method, **kw)
+                              method=bm, **kw)
             parts.append((bv, bi))
         if self._delta is not None:
-            dm = "impact" if method in ("pruned", "quantized") else method
+            # the hot delta is always a raw single InvertedIndex —
+            # base-only methods fall back to exact impact scoring
+            dm = ("impact" if method in ("pruned", "quantized",
+                                         "sharded", "term_sharded")
+                  else method)
             dv, di = retrieve(queries, self._delta,
                               min(k, self._delta.n_docs), method=dm)
             parts.append((dv, di + self._base_n))

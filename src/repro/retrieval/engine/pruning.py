@@ -100,12 +100,21 @@ def upper_bound_scores(queries: SparseRep, index: InvertedIndex) -> Array:
     return jax.vmap(one)(qv, qi)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "candidates"))
-def _pruned_retrieve(queries: SparseRep, index: InvertedIndex, k: int,
-                     candidates: int, prune_margin: Array
-                     ) -> Tuple[Array, Array, Array]:
-    ub = upper_bound_scores(queries, index)            # (B, N)
-    n = index.n_docs
+def select_and_rescore(ub: Array, queries: SparseRep,
+                       doc_values: Array, doc_indices: Array,
+                       vocab_size: int, k: int, candidates: int,
+                       prune_margin: Array
+                       ) -> Tuple[Array, Array, Array]:
+    """Tier 2 given tier-1 ceilings: candidate selection + exact
+    rescoring from forward rows.
+
+    Shared by the single-index pruned path (ceilings from
+    ``upper_bound_scores``) and the term-sharded engine (ceilings are
+    the sum of per-shard partials — the merge algebra differs, the
+    rescoring does not). Returns ``(vals, idx, exact_frontier)``;
+    traceable, so it runs inside jit/shard_map bodies.
+    """
+    n = ub.shape[1]
     c_plus = min(candidates + 1, n)
 
     # tier 1: top-(C+1) ceilings; the (C+1)-th is the best excluded doc
@@ -137,11 +146,11 @@ def _pruned_retrieve(queries: SparseRep, index: InvertedIndex, k: int,
     qi = queries.indices.reshape(-1, qk)
 
     def rescore(qv_row, qi_row, cand_row, keep_row):
-        q_dense = jnp.zeros(index.vocab_size, jnp.float32)
+        q_dense = jnp.zeros(vocab_size, jnp.float32)
         q_dense = q_dense.at[qi_row].add(
             jnp.where(qv_row > 0, qv_row, 0.0))
-        dv = index.doc_values[cand_row]                # (C, K)
-        di = index.doc_indices[cand_row]               # (C, K)
+        dv = doc_values[cand_row]                      # (C, K)
+        di = doc_indices[cand_row]                     # (C, K)
         exact = jnp.sum(q_dense[di] * dv, axis=1)      # (C,)
         return jnp.where(keep_row, exact, NEG_INF)
 
@@ -156,6 +165,16 @@ def _pruned_retrieve(queries: SparseRep, index: InvertedIndex, k: int,
     # k-th best candidate score
     exact_frontier = excluded_ub <= vals[:, min(k, vals.shape[1]) - 1]
     return vals, idx, exact_frontier
+
+
+@functools.partial(jax.jit, static_argnames=("k", "candidates"))
+def _pruned_retrieve(queries: SparseRep, index: InvertedIndex, k: int,
+                     candidates: int, prune_margin: Array
+                     ) -> Tuple[Array, Array, Array]:
+    ub = upper_bound_scores(queries, index)            # (B, N)
+    return select_and_rescore(ub, queries, index.doc_values,
+                              index.doc_indices, index.vocab_size,
+                              k, candidates, prune_margin)
 
 
 def pruned_retrieve(

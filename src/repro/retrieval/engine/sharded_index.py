@@ -48,6 +48,43 @@ Array = jax.Array
 NEG_INF = -1e30
 
 
+# ---------------------------------------------------------------------------
+# shared mesh plumbing (doc- and term-sharded paths)
+# ---------------------------------------------------------------------------
+
+def resolve_shard_axis(mesh, axis_name: Optional[str], n_shards: int,
+                       what: str = "sharded_retrieve") -> str:
+    """Default + validate the mesh axis the shard dimension maps onto:
+    one shard per device, so the axis size must equal ``n_shards``."""
+    if axis_name is None:
+        axis_name = mesh.axis_names[0]
+    n_dev = mesh.shape[axis_name]
+    if n_dev != n_shards:
+        raise ValueError(
+            f"{what}: n_shards={n_shards} must equal "
+            f"mesh axis {axis_name!r} size {n_dev}")
+    return axis_name
+
+
+def shard_mapped(body, mesh, axis_name: str, n_in: int, n_out: int = 2):
+    """``compat.shard_map`` wrapper shared by the sharded indexes:
+    the first ``n_in`` args are split on ``axis_name`` (one shard per
+    device), outputs are replicated. ``check_vma`` is off — the
+    post-merge results (all_gather+top_k or psum) ARE replicated but
+    the vma/rep tracer cannot prove it, same situation as
+    ``build_retrieval_step``."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=tuple(P(axis_name) for _ in range(n_in)),
+        out_specs=tuple(P() for _ in range(n_out)),
+        check_vma=False,
+    )
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class ShardedIndex:
@@ -204,13 +241,7 @@ def sharded_retrieve(
     if mesh is None:
         return _vmap_retrieve(qv, qi, index, k)
 
-    if axis_name is None:
-        axis_name = mesh.axis_names[0]
-    n_dev = mesh.shape[axis_name]
-    if n_dev != index.n_shards:
-        raise ValueError(
-            f"sharded_retrieve: n_shards={index.n_shards} must equal "
-            f"mesh axis {axis_name!r} size {n_dev}")
+    axis_name = resolve_shard_axis(mesh, axis_name, index.n_shards)
     kk = min(k, dps)
 
     def body(st, ln, pd, pv, ct):
@@ -223,19 +254,7 @@ def sharded_retrieve(
         mv, pos = jax.lax.top_k(all_v, k)
         return mv, jnp.take_along_axis(all_i, pos, axis=1)
 
-    from jax.sharding import PartitionSpec as P
-
-    from repro.compat import shard_map
-
-    merged = shard_map(
-        body, mesh=mesh,
-        in_specs=(P(axis_name), P(axis_name), P(axis_name),
-                  P(axis_name), P(axis_name)),
-        out_specs=(P(), P()),
-        # the post-all_gather top_k IS replicated, but the vma system
-        # cannot prove it — same situation as build_retrieval_step
-        check_vma=False,
-    )
+    merged = shard_mapped(body, mesh, axis_name, n_in=5)
     vals, idx = merged(index.term_starts, index.term_lens,
                        index.postings_doc, index.postings_val,
                        index.shard_counts)

@@ -1,0 +1,403 @@
+"""Term-partitioned (vocab-sharded) inverted index (DESIGN.md §9).
+
+The doc-sharded index (``sharded_index.py``) splits *documents*;
+every shard still holds the full ``O(V)`` term directory and the
+posting lists of every term that its doc range activates. In the
+paper's multilingual regime (|V| ~ 250k) the scaling pressure is the
+other way around: a handful of high-DF terms own posting arrays that
+outgrow one device's HBM no matter how few docs a shard holds, and
+the replicated term directory stops being a rounding error. The
+standard answer (GPUSparse-style parallel inverted files) is to
+partition by **vocabulary range**: shard ``s`` owns the *complete*
+posting lists of terms ``[lo_s, hi_s)`` and nothing else.
+
+That flips the merge algebra. Under doc sharding a document's whole
+score lives on one shard, so the merge is ``all_gather`` of per-shard
+top-k + re-top-k. Under term sharding one document's score is spread
+across every shard its terms land on, so per-shard results are
+**partial sums** over the full doc space that must be added — a
+``psum``/all-reduce of the ``(B, N)`` partials inside the
+``shard_map`` body — before a single global top-k. Per-shard top-k
+would be meaningless here.
+
+Layout (stacked on a leading shard axis, padded to the widest shard):
+
+    term_starts (S, Vloc) i32     postings_doc (S, Pmax) i32 (GLOBAL)
+    term_lens   (S, Vloc) i32     postings_val (S, Pmax) f32
+    term_ubs    (S, Vloc) f32     shard_lo/shard_hi (S,) i32
+
+``Vloc = max(hi_s - lo_s)`` and term ids are remapped per shard
+(``local = global - lo_s``, built via ``build_inverted_index(...,
+vocab_range=)``). Queries are *routed*: each shard masks the query's
+active terms to its range (value 0 elsewhere), so padded slots and
+out-of-range terms contribute exactly 0 to the partial sums.
+
+Pruning composes per shard: tier 1 sums each shard's *ceiling*
+partials (from that shard's local upper bounds) into a global
+MaxScore bound, tier 2 rescores the surviving candidates exactly
+from forward rows stored ONCE on the index (forward rows carry
+global term ids, so they are replicated — the memory win of term
+sharding is the posting arrays, which dominate).
+
+Two execution paths with identical semantics, mirroring the
+doc-sharded index: ``mesh`` given — ``shard_map`` + ``psum``;
+``mesh=None`` — a jitted ``vmap`` + sum on one device.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.retrieval.engine.sharded_index import (resolve_shard_axis,
+                                                  shard_mapped)
+from repro.retrieval.index import InvertedIndex, build_inverted_index
+from repro.retrieval.sparse_rep import SparseRep
+
+Array = jax.Array
+
+# term_starts + term_lens (+ term_ubs) per vocab entry — the term
+# directory doc sharding replicates on every shard
+DIR_BYTES_PER_TERM = 12
+
+
+def choose_shard_axis(posting_bytes: int, vocab_size: int,
+                      n_shards: int,
+                      per_device_bytes: Optional[int] = None) -> str:
+    """Pick ``"doc"`` or ``"term"`` for an inverted index of this size.
+
+    Doc sharding splits the posting arrays but replicates the O(V)
+    term directory on every shard; term sharding splits both. Doc
+    sharding wins when it fits (its k-sized all_gather merge is far
+    cheaper than the (B, N) psum), so:
+
+    * with a ``per_device_bytes`` HBM budget: ``"doc"`` iff a doc
+      shard (``posting_bytes / n + dir``) fits, else ``"term"`` (the
+      strictly smaller footprint — large-|V| corpora whose per-shard
+      posting+directory load outgrows one HBM);
+    * without a budget: ``"term"`` only when the replicated directory
+      would dominate the per-shard postings (the huge-vocab sparse
+      regime the multilingual backbone hits).
+    """
+    directory = DIR_BYTES_PER_TERM * vocab_size
+    doc_per_dev = posting_bytes / n_shards + directory
+    if per_device_bytes is not None:
+        return "doc" if doc_per_dev <= per_device_bytes else "term"
+    return "doc" if directory <= posting_bytes / n_shards else "term"
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class TermShardedIndex:
+    term_starts: Array      # (S, Vloc) i32 — local term offsets
+    term_lens: Array        # (S, Vloc) i32
+    postings_doc: Array     # (S, Pmax) i32 — GLOBAL doc ids
+    postings_val: Array     # (S, Pmax) f32
+    term_ubs: Array         # (S, Vloc) f32 — per-shard upper bounds
+    shard_lo: Array         # (S,) i32 — vocab range starts
+    shard_hi: Array         # (S,) i32 — vocab range ends (exclusive)
+    n_shards: int           # static
+    n_docs: int             # static — every shard scores all docs
+    vocab_size: int         # static — global V
+    local_vocab: int        # static — padded per-shard vocab width
+    max_postings: int       # static — longest list over all shards
+    boundaries: Tuple[int, ...] = ()      # static — the vocab cuts
+    doc_values: Optional[Array] = None    # (N, K) f32 — forward rows,
+    doc_indices: Optional[Array] = None   # (N, K) i32 — stored once
+
+    def tree_flatten(self):
+        children = (self.term_starts, self.term_lens,
+                    self.postings_doc, self.postings_val,
+                    self.term_ubs, self.shard_lo, self.shard_hi,
+                    self.doc_values, self.doc_indices)
+        aux = (self.n_shards, self.n_docs, self.vocab_size,
+               self.local_vocab, self.max_postings, self.boundaries)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children[:7], *aux, doc_values=children[7],
+                   doc_indices=children[8])
+
+    @property
+    def has_forward(self) -> bool:
+        return self.doc_values is not None and self.doc_indices is not None
+
+    def memory_bytes(self) -> int:
+        arrays = [self.term_starts, self.term_lens, self.postings_doc,
+                  self.postings_val, self.term_ubs, self.shard_lo,
+                  self.shard_hi]
+        for opt in (self.doc_values, self.doc_indices):
+            if opt is not None:
+                arrays.append(opt)
+        return int(sum(np.asarray(a).nbytes for a in arrays))
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "n_shards": self.n_shards,
+            "n_docs": self.n_docs,
+            "vocab_size": self.vocab_size,
+            "local_vocab": self.local_vocab,
+            "max_postings": self.max_postings,
+            "memory_bytes": self.memory_bytes(),
+        }
+
+
+def term_shard_index(reps: SparseRep, vocab_size: int, n_shards: int,
+                     *, boundaries: Optional[Sequence[int]] = None,
+                     keep_forward: bool = False) -> TermShardedIndex:
+    """Build per-shard indexes over contiguous vocab ranges (host-side).
+
+    The vocabulary is cut at ``boundaries`` (default: ``n_shards``
+    even ranges of ``ceil(V / n_shards)``); each range is indexed
+    independently via ``build_inverted_index(vocab_range=...)`` —
+    remapped local term ids, *global* doc ids — and the CSC arrays are
+    padded to the widest shard. A shard whose range holds no active
+    terms packs the usual length-1 zero postings and contributes 0.
+
+    ``keep_forward=True`` stores the (N, K) forward rows once on the
+    index (not per shard — they carry global term ids), enabling the
+    two-tier pruned path.
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    if n_shards > vocab_size:
+        raise ValueError(
+            f"n_shards={n_shards} exceeds vocab size {vocab_size}")
+    if boundaries is None:
+        # balanced cuts, strictly increasing for any V >= n_shards
+        boundaries = [s * vocab_size // n_shards
+                      for s in range(n_shards + 1)]
+    boundaries = [int(b) for b in boundaries]
+    if (len(boundaries) != n_shards + 1 or boundaries[0] != 0
+            or boundaries[-1] != vocab_size
+            or any(a >= b for a, b in zip(boundaries, boundaries[1:]))):
+        raise ValueError(
+            f"boundaries must be {n_shards + 1} strictly increasing "
+            f"cuts from 0 to {vocab_size}, got {boundaries}")
+
+    from repro.retrieval.sparse_rep import device_get
+
+    host = device_get(reps) if isinstance(reps.values, jax.Array) else reps
+    k = host.width
+    v = np.asarray(host.values, np.float32).reshape(-1, k)
+    i = np.asarray(host.indices, np.int32).reshape(-1, k)
+    n = np.asarray(host.nnz, np.int32).reshape(-1)
+    rep = SparseRep(v, i, n)
+
+    parts = []
+    for s in range(n_shards):
+        lo, hi = boundaries[s], boundaries[s + 1]
+        parts.append(build_inverted_index(
+            rep, vocab_size, vocab_range=(lo, hi),
+            stopword_warn_frac=1.1))
+
+    v_loc = max(p.vocab_size for p in parts)
+    p_max = max(p.n_postings for p in parts)
+    starts = np.zeros((n_shards, v_loc), np.int32)
+    lens = np.zeros((n_shards, v_loc), np.int32)
+    ubs = np.zeros((n_shards, v_loc), np.float32)
+    pdoc = np.zeros((n_shards, p_max), np.int32)
+    pval = np.zeros((n_shards, p_max), np.float32)
+    for s, p in enumerate(parts):
+        starts[s, :p.vocab_size] = np.asarray(p.term_starts)
+        lens[s, :p.vocab_size] = np.asarray(p.term_lens)
+        ubs[s, :p.vocab_size] = np.asarray(p.term_ubs)
+        pdoc[s, :p.n_postings] = np.asarray(p.postings_doc)
+        pval[s, :p.n_postings] = np.asarray(p.postings_val)
+
+    return TermShardedIndex(
+        term_starts=jnp.asarray(starts),
+        term_lens=jnp.asarray(lens),
+        postings_doc=jnp.asarray(pdoc),
+        postings_val=jnp.asarray(pval),
+        term_ubs=jnp.asarray(ubs),
+        shard_lo=jnp.asarray(boundaries[:-1], dtype=jnp.int32),
+        shard_hi=jnp.asarray(boundaries[1:], dtype=jnp.int32),
+        n_shards=n_shards,
+        n_docs=v.shape[0],
+        vocab_size=vocab_size,
+        local_vocab=v_loc,
+        max_postings=max(p.max_postings for p in parts),
+        boundaries=tuple(boundaries),
+        doc_values=jnp.asarray(v) if keep_forward else None,
+        doc_indices=jnp.asarray(i) if keep_forward else None,
+    )
+
+
+def _route(qv: Array, qi: Array, lo: Array, hi: Array, local_vocab: int
+           ) -> Tuple[Array, Array]:
+    """Mask the query's active terms to one shard's vocab range and
+    remap them to local ids; everything else carries value 0 (and so
+    contributes exactly 0 to the partial sums)."""
+    in_shard = (qi >= lo) & (qi < hi)
+    lqv = jnp.where(in_shard, qv, 0.0)
+    lqi = jnp.clip(qi - lo, 0, local_vocab - 1)
+    return lqv, lqi
+
+
+def _local_index(st: Array, ln: Array, pd: Array, pv: Array,
+                 index: TermShardedIndex, ubs: Optional[Array] = None
+                 ) -> InvertedIndex:
+    return InvertedIndex(
+        term_starts=st, term_lens=ln, postings_doc=pd, postings_val=pv,
+        n_docs=index.n_docs, vocab_size=index.local_vocab,
+        max_postings=index.max_postings, term_ubs=ubs)
+
+
+def _partial_scores(qv: Array, qi: Array, st: Array, ln: Array,
+                    pd: Array, pv: Array, lo: Array, hi: Array,
+                    index: TermShardedIndex) -> Array:
+    """(B, n_docs) PARTIAL scores of one shard — the contribution of
+    this shard's vocab range to every document's total."""
+    from repro.retrieval.score import impact_scores
+
+    lqv, lqi = _route(qv, qi, lo, hi, index.local_vocab)
+    rep = SparseRep(lqv, lqi,
+                    jnp.sum((lqv > 0).astype(jnp.int32), axis=-1))
+    return impact_scores(rep, _local_index(st, ln, pd, pv, index))
+
+
+def _partial_ub_scores(qv: Array, qi: Array, st: Array, ln: Array,
+                       pd: Array, pv: Array, ubs: Array, lo: Array,
+                       hi: Array, index: TermShardedIndex) -> Array:
+    """(B, n_docs) partial MaxScore ceilings from this shard's local
+    upper bounds (gathers only postings_doc, like tier 1 unsharded)."""
+    from repro.retrieval.engine.pruning import upper_bound_scores
+
+    lqv, lqi = _route(qv, qi, lo, hi, index.local_vocab)
+    rep = SparseRep(lqv, lqi,
+                    jnp.sum((lqv > 0).astype(jnp.int32), axis=-1))
+    return upper_bound_scores(rep,
+                              _local_index(st, ln, pd, pv, index, ubs))
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _vmap_retrieve(qv: Array, qi: Array, index: TermShardedIndex,
+                   k: int) -> Tuple[Array, Array]:
+    """Single-device path: per-shard partials under one jitted vmap,
+    summed (the term-sharded merge algebra), then one global top-k."""
+    partials = jax.vmap(
+        lambda st, ln, pd, pv, lo, hi: _partial_scores(
+            qv, qi, st, ln, pd, pv, lo, hi, index)
+    )(index.term_starts, index.term_lens, index.postings_doc,
+      index.postings_val, index.shard_lo, index.shard_hi)  # (S, B, N)
+    vals, idx = jax.lax.top_k(jnp.sum(partials, axis=0), k)
+    return vals, idx.astype(jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "candidates"))
+def _vmap_pruned_retrieve(queries: SparseRep, index: TermShardedIndex,
+                          k: int, candidates: int, prune_margin: Array
+                          ) -> Tuple[Array, Array, Array]:
+    from repro.retrieval.engine.pruning import select_and_rescore
+
+    qv = queries.values.reshape(-1, queries.width).astype(jnp.float32)
+    qi = queries.indices.reshape(-1, queries.width)
+    ub_partials = jax.vmap(
+        lambda st, ln, pd, pv, ubs, lo, hi: _partial_ub_scores(
+            qv, qi, st, ln, pd, pv, ubs, lo, hi, index)
+    )(index.term_starts, index.term_lens, index.postings_doc,
+      index.postings_val, index.term_ubs, index.shard_lo,
+      index.shard_hi)                                      # (S, B, N)
+    ub = jnp.sum(ub_partials, axis=0)
+    return select_and_rescore(ub, queries, index.doc_values,
+                              index.doc_indices, index.vocab_size,
+                              k, candidates, prune_margin)
+
+
+def term_sharded_retrieve(
+    queries: SparseRep,
+    index: TermShardedIndex,
+    k: int = 10,
+    *,
+    mesh=None,
+    axis_name: Optional[str] = None,
+    prune_margin: Optional[float] = None,
+    candidates: Optional[int] = None,
+) -> Tuple[Array, Array]:
+    """Top-k over the term-sharded index; ids are global doc ids.
+
+    Exact by default: per-shard partial impact sums are all-reduced
+    (``psum`` under a mesh, a plain sum under the single-device vmap
+    fallback) and a single global top-k follows — id parity with the
+    unsharded impact scorer is pinned by tests. With ``prune_margin``
+    set, the two-tier MaxScore composition runs instead: per-shard
+    *ceiling* partials (each from its own shard's upper bounds) are
+    all-reduced into the global bound, and the surviving candidates
+    are rescored exactly from the index's forward rows
+    (``keep_forward=True`` at build time).
+    """
+    k = min(k, index.n_docs)
+    qv = queries.values.reshape(-1, queries.width).astype(jnp.float32)
+    qi = queries.indices.reshape(-1, queries.width)
+
+    prune = prune_margin is not None
+    if prune:
+        if not index.has_forward:
+            raise ValueError(
+                "term_sharded_retrieve: pruning needs forward rows — "
+                "build with term_shard_index(..., keep_forward=True)")
+        if not 0.0 <= prune_margin <= 1.0:
+            raise ValueError(f"prune_margin must be in [0, 1], got "
+                             f"{prune_margin}")
+        if candidates is None:
+            # the baseline planner budget; the skew-aware doubling of
+            # engine.pruning.default_candidates needs posting-length
+            # percentiles, which the stacked shards don't carry
+            candidates = max(4 * k, 64)
+        candidates = min(max(candidates, k), index.n_docs)
+        margin = jnp.float32(prune_margin)
+
+    if mesh is None:
+        if prune:
+            vals, idx, _ = _vmap_pruned_retrieve(
+                queries, index, k, candidates, margin)
+            return vals, idx
+        return _vmap_retrieve(qv, qi, index, k)
+
+    axis_name = resolve_shard_axis(mesh, axis_name, index.n_shards,
+                                   what="term_sharded_retrieve")
+
+    if prune:
+        doc_values, doc_indices = index.doc_values, index.doc_indices
+
+        def body(st, ln, pd, pv, ubs, lo, hi):
+            from repro.retrieval.engine.pruning import select_and_rescore
+
+            partial = _partial_ub_scores(qv, qi, st[0], ln[0], pd[0],
+                                         pv[0], ubs[0], lo[0], hi[0],
+                                         index)
+            ub = jax.lax.psum(partial, axis_name)      # global ceilings
+            rep = SparseRep(qv, qi, jnp.sum((qv > 0).astype(jnp.int32),
+                                            axis=-1))
+            vals, idx, _ = select_and_rescore(
+                ub, rep, doc_values, doc_indices, index.vocab_size,
+                k, candidates, margin)
+            return vals, idx
+
+        merged = shard_mapped(body, mesh, axis_name, n_in=7)
+        vals, idx = merged(index.term_starts, index.term_lens,
+                           index.postings_doc, index.postings_val,
+                           index.term_ubs, index.shard_lo,
+                           index.shard_hi)
+        return vals, idx.astype(jnp.int32)
+
+    def body(st, ln, pd, pv, lo, hi):
+        partial = _partial_scores(qv, qi, st[0], ln[0], pd[0], pv[0],
+                                  lo[0], hi[0], index)  # (B, N)
+        total = jax.lax.psum(partial, axis_name)        # sum-merge
+        vals, idx = jax.lax.top_k(total, k)
+        return vals, idx
+
+    merged = shard_mapped(body, mesh, axis_name, n_in=6)
+    vals, idx = merged(index.term_starts, index.term_lens,
+                       index.postings_doc, index.postings_val,
+                       index.shard_lo, index.shard_hi)
+    return vals, idx.astype(jnp.int32)

@@ -146,6 +146,7 @@ def build_inverted_index(reps: SparseRep, vocab_size: int, *,
                          keep_forward: bool = False,
                          with_upper_bounds: bool = True,
                          stopword_warn_frac: float = STOPWORD_WARN_FRAC,
+                         vocab_range: Optional[Tuple[int, int]] = None,
                          ) -> InvertedIndex:
     """Build the index from a batched ``(N, K)`` corpus rep (host-side).
 
@@ -162,6 +163,13 @@ def build_inverted_index(reps: SparseRep, vocab_size: int, *,
     percentile stats fires when the longest posting list covers more
     than ``stopword_warn_frac`` of the corpus, since that term pads
     every query gather to ~N.
+
+    ``vocab_range=(lo, hi)`` builds a *term shard*: only terms in
+    ``[lo, hi)`` are indexed, remapped to local ids ``t - lo``, and
+    the resulting index's ``vocab_size`` is ``hi - lo``. Doc ids stay
+    global — every term shard scores the full corpus (partial sums).
+    Incompatible with ``keep_forward`` (forward rows carry global term
+    ids; the term-sharded engine stores them once, not per shard).
     """
     host = device_get(reps) if isinstance(reps.values, jax.Array) else reps
     k = host.width
@@ -177,6 +185,21 @@ def build_inverted_index(reps: SparseRep, vocab_size: int, *,
     vals = v[active]
     docs = np.broadcast_to(np.arange(n_docs, dtype=np.int32)[:, None],
                            i.shape)[active]
+
+    if vocab_range is not None:
+        lo, hi = vocab_range
+        if not 0 <= lo < hi <= vocab_size:
+            raise ValueError(
+                f"vocab_range {vocab_range} outside [0, {vocab_size})")
+        if keep_forward:
+            raise ValueError(
+                "vocab_range is incompatible with keep_forward — "
+                "forward rows carry global term ids (store them once "
+                "on the term-sharded index instead)")
+        sel = (terms >= lo) & (terms < hi)
+        terms = terms[sel] - lo              # remap to local ids
+        vals, docs = vals[sel], docs[sel]
+        vocab_size = hi - lo
 
     order = np.argsort(terms, kind="stable")
     terms, vals, docs = terms[order], vals[order], docs[order]

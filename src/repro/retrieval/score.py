@@ -22,6 +22,13 @@ Dispatch table (``method=``):
                                                        top-k merge
                                                        (engine/
                                                        sharded_index)
+    "term_        SparseRep         TermShardedIndex   per-shard PARTIAL
+     sharded"                                          sums over vocab
+                                                       ranges, psum/
+                                                       all-reduce, one
+                                                       global top-k
+                                                       (engine/
+                                                       term_sharded)
     "streaming"  dense or rep       dense (N, V)       fused Pallas
                                                        running top-k
     "dense"      dense or rep       dense (N, V)       (B, N) einsum
@@ -29,11 +36,20 @@ Dispatch table (``method=``):
     "auto"       resolved from the corpus type:
                  * QuantizedIndex              -> "quantized"
                  * ShardedIndex                -> "sharded"
+                 * TermShardedIndex            -> "term_sharded"
                  * InvertedIndex with upper bounds AND forward rows
                    (an engine build)           -> "pruned"
                  * any other InvertedIndex     -> "impact"
                  * dense matrix: "streaming" for corpora >=
                    AUTO_STREAMING_N rows, "dense" below that
+
+Which *sharding axis* to build in the first place is the upstream
+choice: ``engine.term_sharded.choose_shard_axis`` keys it on the
+posting-array bytes vs the per-device HBM budget — doc sharding
+replicates the O(V) term directory per shard and merges cheap
+(all_gather of k winners), term sharding splits the posting arrays
+exactly (the |V|~250k multilingual regime) at the cost of an
+all-reduce over (B, N) partials.
 
 All paths return ``(vals (B, k) f32, idx (B, k) i32)`` with identical
 ids (scores within fp/quantization tolerance) for equivalent inputs —
@@ -70,9 +86,10 @@ Queries = Union[Array, SparseRep]
 Corpus = Union[Array, InvertedIndex]
 
 METHODS = ("auto", "impact", "pruned", "quantized", "sharded",
-           "streaming", "dense")
+           "term_sharded", "streaming", "dense")
 # methods that need an index-shaped corpus (not a dense matrix)
-_INDEX_METHODS = ("impact", "pruned", "quantized", "sharded")
+_INDEX_METHODS = ("impact", "pruned", "quantized", "sharded",
+                  "term_sharded")
 # corpora at or above this many rows route "auto" to the streaming
 # kernel (the (B, N) score matrix stops being a rounding error)
 AUTO_STREAMING_N = 16384
@@ -121,6 +138,7 @@ def _dense_queries(queries: Queries, vocab_size: int) -> Array:
 def _resolve_method(method: str, corpus: Corpus) -> str:
     from repro.retrieval.engine.quantize import QuantizedIndex
     from repro.retrieval.engine.sharded_index import ShardedIndex
+    from repro.retrieval.engine.term_sharded import TermShardedIndex
 
     if method not in METHODS:
         raise ValueError(f"unknown retrieval method {method!r}; "
@@ -131,6 +149,8 @@ def _resolve_method(method: str, corpus: Corpus) -> str:
         return "quantized"
     if isinstance(corpus, ShardedIndex):
         return "sharded"
+    if isinstance(corpus, TermShardedIndex):
+        return "term_sharded"
     if isinstance(corpus, InvertedIndex):
         # an engine build (upper bounds + forward rows) can serve the
         # two-tier pruned path; a bare PR-3 index only the exact one
@@ -177,8 +197,9 @@ def retrieve(
     ``(B, min(k, N))`` shape. ``interpret`` only affects the streaming
     kernel (None = auto: Pallas interpreter off-TPU);
     ``prune_margin``/``candidates`` only the pruned path
-    (``engine.pruning``); ``mesh``/``axis_name`` only the sharded path
-    (None = single-device vmap over shards).
+    (``engine.pruning``) and, for margins > 0, the term-sharded
+    two-tier composition; ``mesh``/``axis_name`` only the sharded
+    paths (None = single-device vmap over shards).
     """
     method = _resolve_method(method, corpus)
 
@@ -206,6 +227,22 @@ def retrieve(
                     "build one with engine.sharded_index.shard_index")
             return sharded_retrieve(queries, corpus, k, mesh=mesh,
                                     axis_name=axis_name)
+        if method == "term_sharded":
+            from repro.retrieval.engine.term_sharded import (
+                TermShardedIndex, term_sharded_retrieve)
+
+            if not isinstance(corpus, TermShardedIndex):
+                raise ValueError(
+                    "method='term_sharded' needs a TermShardedIndex "
+                    "corpus — build one with "
+                    "engine.term_sharded.term_shard_index")
+            # margin 0 routes to the exact psum path (identical ids,
+            # no candidate budget to size); > 0 opts into the
+            # two-tier composition and requires forward rows
+            return term_sharded_retrieve(
+                queries, corpus, k, mesh=mesh, axis_name=axis_name,
+                prune_margin=prune_margin if prune_margin > 0 else None,
+                candidates=candidates)
         if not isinstance(corpus, InvertedIndex):
             raise ValueError(
                 f"method={method!r} needs an InvertedIndex corpus — "

@@ -192,18 +192,30 @@ class CorpusEngine:
     handed out), surviving compactions. ``keep_forward=True`` enables
     the pruned path (``search(..., method="pruned")``); with
     ``quantize=True`` the base segment is served compressed.
+
+    ``shard_axis``/``n_shards`` pick the base segment's partitioning:
+    ``"doc"`` leaves the base a single index (doc sharding is a
+    serving-topology choice, not a builder one), ``"term"`` serves it
+    as a ``TermShardedIndex`` over ``n_shards`` vocab ranges — the
+    large-|V| regime where per-term posting arrays outgrow one HBM
+    (DESIGN.md §9).
     """
 
     def __init__(self, encoder: "BatchedEncoder", vocab_size: int, *,
                  quantize: bool = False, keep_forward: bool = False,
                  merge_frac: float = 0.25,
-                 compact_dead_frac: float = 0.25):
+                 compact_dead_frac: float = 0.25,
+                 shard_axis: str = "doc", n_shards: int = 1):
         from repro.retrieval.engine import IndexBuilder
 
+        if shard_axis not in ("doc", "term"):
+            raise ValueError(f"shard_axis must be 'doc' or 'term', "
+                             f"got {shard_axis!r}")
         self.encoder = encoder
         self.builder = IndexBuilder(
             vocab_size, quantize=quantize, keep_forward=keep_forward,
-            merge_frac=merge_frac, compact_dead_frac=compact_dead_frac)
+            merge_frac=merge_frac, compact_dead_frac=compact_dead_frac,
+            term_shards=n_shards if shard_axis == "term" else 0)
         self._next_uid = 0
 
     def add_docs(self, docs: Sequence[np.ndarray],

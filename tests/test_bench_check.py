@@ -1,0 +1,146 @@
+"""Tests for the CI gate script (``benchmarks/check.py``) and the
+bench-history handling in ``benchmarks/report.py``.
+
+The gates used to be four inline ``python -c "assert ..."`` blobs in
+ci.yml — untestable by definition. Now they are functions returning
+failure lists, pinned here; and the history snapshot keys grew a
+``run_id`` component (two runs on the same commit+day used to
+silently overwrite each other), which ``report.py`` must order and
+label correctly alongside the older key shapes.
+"""
+
+import copy
+import json
+
+import pytest
+
+from benchmarks import report
+from benchmarks.check import (check_engine, check_file, check_kernels,
+                              check_retrieval, infer_bench, main)
+
+GOOD_KERNELS = {"heads": {"naive": {}, "tiled": {}, "sparton-jax": {},
+                          "sparton-kernel": {}}}
+GOOD_RETRIEVAL = {"methods": {"dense": {}, "streaming": {},
+                              "impact": {}},
+                  "parity": {"topk_ids_equal": True}}
+GOOD_ENGINE = {
+    "methods": {"impact": {}, "pruned": {}, "quantized": {},
+                "streaming": {}},
+    "quantization": {"ratio": 4.82, "topk_ids_equal": True},
+    "pruned": {"topk_ids_equal": True},
+    "sharded": {s: {"topk_ids_equal": True, "median_ms": 1.0}
+                for s in ("1", "2", "4")},
+    "term_sharded": {s: {"topk_ids_equal": True, "median_ms": 1.0}
+                     for s in ("1", "2", "4")},
+    "parity": {"topk_ids_equal": True},
+}
+
+
+def test_good_records_pass():
+    assert check_kernels(GOOD_KERNELS) == []
+    assert check_retrieval(GOOD_RETRIEVAL) == []
+    assert check_engine(GOOD_ENGINE) == []
+
+
+def test_kernels_missing_head_fails():
+    bad = {"heads": {"naive": {}, "tiled": {}}}
+    assert any("sparton-kernel" in e for e in check_kernels(bad))
+
+
+def test_retrieval_parity_and_method_gates():
+    bad = copy.deepcopy(GOOD_RETRIEVAL)
+    bad["parity"]["topk_ids_equal"] = False
+    assert any("parity" in e for e in check_retrieval(bad))
+    del bad["methods"]["impact"]
+    assert len(check_retrieval(bad)) == 2
+
+
+@pytest.mark.parametrize("mutate,needle", [
+    (lambda d: d["quantization"].update(ratio=3.2), "4.0x bar"),
+    (lambda d: d["quantization"].update(topk_ids_equal=False),
+     "quantized top-k"),
+    (lambda d: d["pruned"].update(topk_ids_equal=False),
+     "pruned top-k"),
+    (lambda d: d["sharded"].pop("4"), "sharded scaling rows missing"),
+    (lambda d: d["term_sharded"]["2"].update(topk_ids_equal=False),
+     "term_sharded x2"),
+    (lambda d: d.pop("term_sharded"), "term_sharded scaling rows"),
+    (lambda d: d["parity"].update(topk_ids_equal=False),
+     "parity flag"),
+])
+def test_engine_gate_failures(mutate, needle):
+    bad = copy.deepcopy(GOOD_ENGINE)
+    mutate(bad)
+    errs = check_engine(bad)
+    assert any(needle in e for e in errs), (needle, errs)
+
+
+def test_infer_bench_and_check_file(tmp_path):
+    assert infer_bench("BENCH_kernels.json") == "kernels"
+    assert infer_bench("a/b/BENCH_engine-20260801-abc-77.json") == \
+        "engine"
+    with pytest.raises(ValueError, match="cannot infer"):
+        infer_bench("results.json")
+    p = tmp_path / "BENCH_retrieval.json"
+    p.write_text(json.dumps(GOOD_RETRIEVAL))
+    assert check_file(str(p)) == []
+    bad = copy.deepcopy(GOOD_RETRIEVAL)
+    bad["parity"]["topk_ids_equal"] = False
+    p.write_text(json.dumps(bad))
+    fails = check_file(str(p))
+    assert len(fails) == 1 and str(p) in fails[0]
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    good = tmp_path / "BENCH_kernels.json"
+    good.write_text(json.dumps(GOOD_KERNELS))
+    assert main([str(good), "--quiet"]) == 0
+    bad = tmp_path / "BENCH_engine.json"
+    bad.write_text(json.dumps({}))
+    assert main([str(bad), "--quiet"]) == 1
+    assert "GATE FAILED" in capsys.readouterr().err
+
+
+# ---------------------------------------------------------------------------
+# report.py: snapshot-key tolerance + term-sharded trend metrics
+# ---------------------------------------------------------------------------
+
+def test_snapshot_key_orders_all_generations():
+    names = [
+        "bench_history/BENCH_engine-20260801-aaa111-900.json",
+        "bench_history/BENCH_engine-20260731-bbb222.json",     # PR-4 era
+        "bench_history/BENCH_engine-20260801-ccc333-100.json",
+        "BENCH_engine.json",                                   # current
+    ]
+    ordered = sorted(names, key=report._snapshot_key)
+    assert ordered == [
+        "bench_history/BENCH_engine-20260731-bbb222.json",
+        "bench_history/BENCH_engine-20260801-ccc333-100.json",
+        "bench_history/BENCH_engine-20260801-aaa111-900.json",
+        "BENCH_engine.json",
+    ]
+
+
+def test_snapshot_labels():
+    assert report._snapshot_label("BENCH_engine.json") == "current"
+    assert report._snapshot_label(
+        "h/BENCH_engine-20260801-abc123-77.json") == \
+        "20260801-abc123-77"
+    assert report._snapshot_label(
+        "h/BENCH_kernels-20260801-abc123.json") == "20260801-abc123"
+
+
+def test_trend_table_with_run_id_keys(tmp_path):
+    old = {"methods": {"impact": {"median_ms": 2.0}},
+           "term_sharded": {"2": {"median_ms": 4.0}}}
+    new = {"methods": {"impact": {"median_ms": 1.0}},
+           "term_sharded": {"2": {"median_ms": 2.0}}}
+    p1 = tmp_path / "BENCH_engine-20260801-abc123-100.json"
+    p2 = tmp_path / "BENCH_engine-20260801-abc123-200.json"
+    p1.write_text(json.dumps(old))
+    p2.write_text(json.dumps(new))
+    paths = sorted([str(p2), str(p1)], key=report._snapshot_key)
+    table = report.trend_table(paths)
+    assert "term_sharded/x2" in table
+    assert "-50.0%" in table            # 4.0 -> 2.0 against the
+    assert "20260801-abc123-200" in table   # run-id-ordered previous

@@ -311,14 +311,16 @@ def test_shard_index_input_validation(graded):
 
 _SHARDED_SCRIPT = textwrap.dedent("""
     import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    n = int(os.environ.get("REPRO_SHARD_TEST_DEVICES", "2"))
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={n}")
     import jax, jax.numpy as jnp, numpy as np
     from repro.data.synthetic import lsr_impact_corpus
     from repro.retrieval import (build_inverted_index, retrieve,
                                  shard_index, sparsify_topk)
     from repro.retrieval.engine.sharded_index import sharded_retrieve
 
-    assert jax.device_count() >= 2, jax.devices()
+    assert jax.device_count() >= n, jax.devices()
     data = lsr_impact_corpus(n_docs=192, vocab=256, doc_nnz=16,
                              n_queries=4, q_nnz=14, graded=6)
     q = sparsify_topk(jnp.asarray(data["queries"]), 14)
@@ -327,8 +329,8 @@ _SHARDED_SCRIPT = textwrap.dedent("""
     v_ref, i_ref = retrieve(q, build_inverted_index(d, 256), k,
                             method="impact")
 
-    sidx = shard_index(d, 256, 2)
-    mesh = jax.make_mesh((2,), ("data",))
+    sidx = shard_index(d, 256, n)
+    mesh = jax.make_mesh((n,), ("data",))
     v_sm, i_sm = sharded_retrieve(q, sidx, k, mesh=mesh)
     np.testing.assert_array_equal(np.asarray(i_sm), np.asarray(i_ref))
     np.testing.assert_allclose(np.asarray(v_sm), np.asarray(v_ref),
@@ -338,7 +340,7 @@ _SHARDED_SCRIPT = textwrap.dedent("""
     np.testing.assert_array_equal(np.asarray(i_d), np.asarray(i_ref))
     # shard-count / mesh-size mismatch is a loud error
     try:
-        sharded_retrieve(q, shard_index(d, 256, 3), k, mesh=mesh)
+        sharded_retrieve(q, shard_index(d, 256, n + 1), k, mesh=mesh)
         raise SystemExit("mismatch not rejected")
     except ValueError as e:
         assert "must equal mesh axis" in str(e), e
@@ -347,10 +349,11 @@ _SHARDED_SCRIPT = textwrap.dedent("""
 
 
 def test_sharded_retrieve_multi_device_subprocess():
-    """shard_map path on a forced 2-host-device mesh matches the
+    """shard_map path on a forced multi-host-device mesh matches the
     single-device scorer (mirrors test_head_api's subprocess
     pattern so the device-count flag never leaks into this
-    process)."""
+    process). Device count: REPRO_SHARD_TEST_DEVICES (default 2;
+    CI's multidevice job sets 4)."""
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",

@@ -1,0 +1,372 @@
+"""Term-partitioned (vocab-sharded) index tests (DESIGN.md §9).
+
+The acceptance anchors:
+
+* ``method="term_sharded"`` returns top-k ids identical to
+  ``method="impact"`` on the graded bench corpus at 1/2/4 shards —
+  the partial-sum merge algebra must be invisible in the results;
+* parity holds for the awkward routings: uneven vocab splits, shards
+  whose range holds no active terms, and queries whose active terms
+  all land on one shard (every other shard contributes an all-zero
+  partial);
+* the two-tier MaxScore composition (per-shard ceilings summed, exact
+  rescore from forward rows) is id-identical at ``prune_margin=0``;
+* the ``shard_map``+``psum`` path on a forced multi-host-device mesh
+  matches the single-device scorer (subprocess, like
+  ``test_engine``'s doc-sharded twin; device count from
+  ``REPRO_SHARD_TEST_DEVICES`` — CI's multidevice job runs it 4-wide).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.synthetic import lsr_impact_corpus
+from repro.retrieval import (IndexBuilder, build_inverted_index,
+                             choose_shard_axis, retrieve,
+                             sparsify_threshold, sparsify_topk,
+                             term_shard_index, term_sharded_retrieve)
+
+K = 10
+BENCH = dict(n_docs=1024, vocab=1024, doc_nnz=32, n_queries=8,
+             q_nnz=28)
+
+
+@pytest.fixture(scope="module")
+def graded():
+    data = lsr_impact_corpus(**BENCH)
+    q = sparsify_topk(jnp.asarray(data["queries"]), BENCH["q_nnz"])
+    d = sparsify_topk(jnp.asarray(data["docs"]), BENCH["doc_nnz"])
+    vals, idx = retrieve(q, build_inverted_index(d, BENCH["vocab"]), K,
+                         method="impact")
+    return {"q": q, "d": d, "vals": np.asarray(vals),
+            "idx": np.asarray(idx)}
+
+
+def _small(rng, n, nnz, vocab, lo=0, hi=None):
+    """Random sparse rows whose active terms lie in [lo, hi)."""
+    hi = vocab if hi is None else hi
+    m = np.zeros((n, vocab), np.float32)
+    for r in range(n):
+        cols = lo + rng.choice(hi - lo, size=nnz, replace=False)
+        m[r, cols] = rng.uniform(0.1, 2.0, size=nnz)
+    return m
+
+
+def _rep(m, nnz=8):
+    return sparsify_threshold(jnp.asarray(m), 0.0, max_nnz=nnz)
+
+
+# ---------------------------------------------------------------------------
+# build: vocab_range remapping, boundaries, validation
+# ---------------------------------------------------------------------------
+
+def test_build_vocab_range_remaps_term_ids():
+    rng = np.random.default_rng(0)
+    m = _small(rng, 20, 6, 64)
+    rep = _rep(m)
+    full = build_inverted_index(rep, 64)
+    part = build_inverted_index(rep, 64, vocab_range=(16, 40))
+    assert part.vocab_size == 24 and part.n_docs == 20
+    # local posting lists are the global lists of terms [16, 40)
+    fl = np.asarray(full.term_lens)
+    pl = np.asarray(part.term_lens)
+    np.testing.assert_array_equal(pl, fl[16:40])
+    for t in np.flatnonzero(pl > 0):
+        fs = np.asarray(full.term_starts)[16 + t]
+        ps = np.asarray(part.term_starts)[t]
+        np.testing.assert_array_equal(
+            np.asarray(part.postings_doc)[ps:ps + pl[t]],
+            np.asarray(full.postings_doc)[fs:fs + pl[t]])
+
+
+def test_build_vocab_range_validation():
+    rng = np.random.default_rng(1)
+    rep = _rep(_small(rng, 4, 4, 32))
+    with pytest.raises(ValueError, match="vocab_range"):
+        build_inverted_index(rep, 32, vocab_range=(8, 40))
+    with pytest.raises(ValueError, match="keep_forward"):
+        build_inverted_index(rep, 32, vocab_range=(0, 16),
+                             keep_forward=True)
+
+
+def test_term_shard_index_boundaries_validation(graded):
+    with pytest.raises(ValueError, match="n_shards"):
+        term_shard_index(graded["d"], BENCH["vocab"], 0)
+    with pytest.raises(ValueError, match="exceeds vocab"):
+        term_shard_index(graded["d"], 4, 5)
+    with pytest.raises(ValueError, match="strictly increasing"):
+        term_shard_index(graded["d"], BENCH["vocab"], 2,
+                         boundaries=[0, 512, 512, BENCH["vocab"]])
+    with pytest.raises(ValueError, match="strictly increasing"):
+        term_shard_index(graded["d"], BENCH["vocab"], 2,
+                         boundaries=[0, BENCH["vocab"]])
+
+
+# ---------------------------------------------------------------------------
+# exact retrieval parity (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_shards", [1, 2, 3, 4])
+def test_term_sharded_matches_impact(graded, n_shards):
+    tidx = term_shard_index(graded["d"], BENCH["vocab"], n_shards)
+    vals, idx = retrieve(graded["q"], tidx, K, method="term_sharded")
+    np.testing.assert_array_equal(np.asarray(idx), graded["idx"])
+    np.testing.assert_allclose(np.asarray(vals), graded["vals"],
+                               atol=1e-4)
+
+
+def test_term_sharded_auto_dispatch_and_type_errors(graded):
+    tidx = term_shard_index(graded["d"], BENCH["vocab"], 2)
+    _, idx = retrieve(graded["q"], tidx, K)      # auto -> term_sharded
+    np.testing.assert_array_equal(np.asarray(idx), graded["idx"])
+    with pytest.raises(ValueError, match="TermShardedIndex"):
+        retrieve(graded["q"], build_inverted_index(
+            graded["d"], BENCH["vocab"]), K, method="term_sharded")
+
+
+def test_term_sharded_uneven_vocab_split(graded):
+    """Wildly uneven cuts (one shard owns most of the vocab) must not
+    change results — padding to the widest shard is score-neutral."""
+    v = BENCH["vocab"]
+    tidx = term_shard_index(graded["d"], v, 3,
+                            boundaries=[0, 17, v - 64, v])
+    assert tidx.local_vocab == v - 64 - 17
+    vals, idx = retrieve(graded["q"], tidx, K)
+    np.testing.assert_array_equal(np.asarray(idx), graded["idx"])
+    np.testing.assert_allclose(np.asarray(vals), graded["vals"],
+                               atol=1e-4)
+
+
+def test_term_sharded_empty_shards():
+    """Shards whose vocab range holds no active terms contribute an
+    all-zero partial — ids must match the unsharded scorer."""
+    rng = np.random.default_rng(2)
+    # all activity in terms [32, 64): shards over [0,32) are empty
+    D = _small(rng, 40, 6, 128, lo=32, hi=64)
+    Q = _small(rng, 3, 5, 128, lo=32, hi=64)
+    d, q = _rep(D), _rep(Q)
+    v_ref, i_ref = retrieve(q, build_inverted_index(d, 128), 5,
+                            method="impact")
+    tidx = term_shard_index(d, 128, 4)      # ranges of 32 terms
+    assert int((np.asarray(tidx.term_lens).sum(axis=1) == 0).sum()) == 3
+    vals, idx = retrieve(q, tidx, 5)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(i_ref))
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(v_ref),
+                               atol=1e-4)
+
+
+def test_term_sharded_query_on_single_shard():
+    """Queries whose active terms all land on one shard: every other
+    shard's routed query is fully masked (nnz 0)."""
+    rng = np.random.default_rng(3)
+    D = _small(rng, 50, 8, 96)              # docs span the vocab
+    Q = _small(rng, 4, 6, 96, lo=0, hi=32)  # queries only in shard 0
+    d, q = _rep(D), _rep(Q)
+    v_ref, i_ref = retrieve(q, build_inverted_index(d, 96), 6,
+                            method="impact")
+    tidx = term_shard_index(d, 96, 3)
+    vals, idx = retrieve(q, tidx, 6)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(i_ref))
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(v_ref),
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# pruning composition (per-shard ceilings -> summed -> exact rescore)
+# ---------------------------------------------------------------------------
+
+def test_term_sharded_pruned_parity_at_safe_margin(graded):
+    tidx = term_shard_index(graded["d"], BENCH["vocab"], 3,
+                            keep_forward=True)
+    vals, idx = term_sharded_retrieve(graded["q"], tidx, K,
+                                      prune_margin=0.0)
+    np.testing.assert_array_equal(np.asarray(idx), graded["idx"])
+    np.testing.assert_allclose(np.asarray(vals), graded["vals"],
+                               atol=1e-4)
+    # the dispatcher routes margins > 0 into the pruned composition
+    # and keeps the clear graded winner
+    _, idx_aggr = retrieve(graded["q"], tidx, K,
+                           method="term_sharded", prune_margin=0.5)
+    np.testing.assert_array_equal(np.asarray(idx_aggr)[:, 0],
+                                  graded["idx"][:, 0])
+
+
+def test_term_sharded_pruned_requires_forward(graded):
+    tidx = term_shard_index(graded["d"], BENCH["vocab"], 2)
+    with pytest.raises(ValueError, match="forward"):
+        term_sharded_retrieve(graded["q"], tidx, K, prune_margin=0.0)
+    with pytest.raises(ValueError, match="prune_margin"):
+        term_sharded_retrieve(
+            graded["q"],
+            term_shard_index(graded["d"], BENCH["vocab"], 2,
+                             keep_forward=True),
+            K, prune_margin=1.5)
+
+
+# ---------------------------------------------------------------------------
+# axis planner
+# ---------------------------------------------------------------------------
+
+def test_choose_shard_axis_heuristic():
+    # big postings, small vocab: the replicated directory is cheap
+    assert choose_shard_axis(10**9, 4096, 4) == "doc"
+    # huge vocab, sparse postings: the directory dominates a shard
+    assert choose_shard_axis(10**6, 250_000, 4) == "term"
+    # with an HBM budget: doc iff a doc shard fits
+    assert choose_shard_axis(10**8, 4096, 4,
+                             per_device_bytes=10**8) == "doc"
+    assert choose_shard_axis(10**9, 4096, 4,
+                             per_device_bytes=10**8) == "term"
+
+
+# ---------------------------------------------------------------------------
+# incremental builder + serving integration
+# ---------------------------------------------------------------------------
+
+def test_builder_term_sharded_base(graded):
+    b = IndexBuilder(BENCH["vocab"], term_shards=3)
+    b.add(graded["d"])
+    vals, ext = b.search(graded["q"], K)
+    np.testing.assert_array_equal(ext, graded["idx"])
+    np.testing.assert_allclose(vals, graded["vals"], atol=1e-4)
+    assert b.stats()["term_shards"] == 3
+    # tombstoning zeroes postings in place across all shards
+    victim = int(ext[0, 0])
+    b.remove([victim])
+    _, ext2 = b.search(graded["q"], K)
+    assert victim not in ext2
+    with pytest.raises(ValueError, match="exclusive"):
+        IndexBuilder(BENCH["vocab"], term_shards=2, quantize=True)
+
+
+def test_builder_term_sharded_base_serves_pruned_search(graded):
+    """search(method='pruned') on a term-sharded base must route to
+    the term-sharded two-tier composition instead of crashing on the
+    InvertedIndex-only pruned path (safe margin: ids == impact)."""
+    b = IndexBuilder(BENCH["vocab"], term_shards=2, keep_forward=True)
+    b.add(graded["d"])
+    vals, ext = b.search(graded["q"], K, method="pruned",
+                         prune_margin=0.0)
+    np.testing.assert_array_equal(ext, graded["idx"])
+    np.testing.assert_allclose(vals, graded["vals"], atol=1e-4)
+    # aggressive margin flows into the composition and keeps the
+    # clear graded winner
+    _, ext_aggr = b.search(graded["q"], K, method="pruned",
+                           prune_margin=0.5)
+    np.testing.assert_array_equal(ext_aggr[:, 0], graded["idx"][:, 0])
+
+
+def test_builder_term_sharded_base_with_raw_delta():
+    """Base term-sharded, delta raw: the merged search must equal a
+    frozen unsharded build over all rows."""
+    rng = np.random.default_rng(4)
+    D = _small(rng, 60, 8, 128)
+    Q = _small(rng, 4, 6, 128)
+    q = _rep(Q)
+    v_ref, i_ref = retrieve(q, build_inverted_index(_rep(D), 128), 7,
+                            method="impact")
+    b = IndexBuilder(128, term_shards=2, merge_frac=0.5)
+    b.add(_rep(D[:48]))
+    b.flush()
+    b.add(_rep(D[48:]))
+    vals, ext = b.search(q, 7)
+    assert b.stats()["delta_docs"] == 12    # delta kept, not merged
+    np.testing.assert_array_equal(ext, np.asarray(i_ref))
+    np.testing.assert_allclose(vals, np.asarray(v_ref), atol=1e-4)
+
+
+def test_corpus_engine_term_axis():
+    from repro.retrieval import sparsify_topk as topk
+    from repro.runtime.serving import (BatchedEncoder, BatchPolicy,
+                                       CorpusEngine)
+
+    def encode(tokens, mask):
+        B = tokens.shape[0]
+        out = np.zeros((B, 32), np.float32)
+        for i in range(B):
+            for t, m in zip(np.asarray(tokens[i]), np.asarray(mask[i])):
+                if m:
+                    out[i, int(t) % 32] += 1
+        return topk(jnp.asarray(out), 4)
+
+    eng = CorpusEngine(
+        BatchedEncoder(encode, policy=BatchPolicy(max_batch=8)), 32,
+        shard_axis="term", n_shards=2)
+    eng.add_docs([np.array([d, d, d], np.int32) for d in range(6)])
+    q = topk(jnp.asarray(np.eye(32, dtype=np.float32)[[3]] * 5), 4)
+    _, ext = eng.search(q, 2)
+    assert ext[0, 0] == 3
+    assert eng.stats()["term_shards"] == 2
+    with pytest.raises(ValueError, match="shard_axis"):
+        CorpusEngine(BatchedEncoder(encode), 32, shard_axis="vocab")
+
+
+# ---------------------------------------------------------------------------
+# shard_map + psum path (subprocess, forced host devices)
+# ---------------------------------------------------------------------------
+
+_TERM_SHARDED_SCRIPT = textwrap.dedent("""
+    import os
+    n = int(os.environ.get("REPRO_SHARD_TEST_DEVICES", "2"))
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={n}")
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.data.synthetic import lsr_impact_corpus
+    from repro.retrieval import (build_inverted_index, retrieve,
+                                 sparsify_topk, term_shard_index,
+                                 term_sharded_retrieve)
+
+    assert jax.device_count() >= n, jax.devices()
+    data = lsr_impact_corpus(n_docs=192, vocab=256, doc_nnz=16,
+                             n_queries=4, q_nnz=14, graded=6)
+    q = sparsify_topk(jnp.asarray(data["queries"]), 14)
+    d = sparsify_topk(jnp.asarray(data["docs"]), 16)
+    k = 4
+    v_ref, i_ref = retrieve(q, build_inverted_index(d, 256), k,
+                            method="impact")
+
+    tidx = term_shard_index(d, 256, n, keep_forward=True)
+    mesh = jax.make_mesh((n,), ("model",))
+    # exact: per-shard partial sums all-reduced via psum
+    v_sm, i_sm = term_sharded_retrieve(q, tidx, k, mesh=mesh)
+    np.testing.assert_array_equal(np.asarray(i_sm), np.asarray(i_ref))
+    np.testing.assert_allclose(np.asarray(v_sm), np.asarray(v_ref),
+                               atol=1e-4)
+    # pruned composition: per-shard ceilings psum'd, exact rescore
+    v_pr, i_pr = term_sharded_retrieve(q, tidx, k, mesh=mesh,
+                                       prune_margin=0.0)
+    np.testing.assert_array_equal(np.asarray(i_pr), np.asarray(i_ref))
+    # the retrieve() dispatcher threads the mesh through
+    v_d, i_d = retrieve(q, tidx, k, mesh=mesh)
+    np.testing.assert_array_equal(np.asarray(i_d), np.asarray(i_ref))
+    # shard-count / mesh-size mismatch is a loud error
+    try:
+        term_sharded_retrieve(
+            q, term_shard_index(d, 256, n + 1), k, mesh=mesh)
+        raise SystemExit("mismatch not rejected")
+    except ValueError as e:
+        assert "must equal mesh axis" in str(e), e
+    print("ALL_TERM_SHARDED_PASSED")
+""")
+
+
+def test_term_sharded_multi_device_subprocess():
+    """psum merge on a forced multi-host-device mesh == the unsharded
+    impact scorer, for both the exact and pruned tiers (device count
+    from REPRO_SHARD_TEST_DEVICES; CI's multidevice job sets 4)."""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                     "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", _TERM_SHARDED_SCRIPT], env=env,
+        capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, (
+        f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr[-4000:]}")
+    assert "ALL_TERM_SHARDED_PASSED" in proc.stdout
