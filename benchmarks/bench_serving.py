@@ -1,0 +1,344 @@
+"""Serving-runtime traffic simulation: offered vs sustained QPS,
+latency percentiles, shedding, degradation, and fault survival.
+
+Drives the hardened ``ServingLoop`` (DESIGN.md §10) with an open-loop
+Poisson arrival process on a **simulated clock** — encode and search
+costs are deterministic time advances, so the record is bit-stable
+across machines and CI runs (no wall-clock noise), while the loop
+under test is the real production code path (admission control,
+expiry shedding, bisect fault isolation, the degrade ladder).
+
+Three experiments behind ``BENCH_serving.json``:
+
+* ``phases`` — a warm → overload → recovery QPS ramp. Offered load in
+  the overload phase exceeds exact-mode capacity ~2.3x: the loop must
+  shed (admission + expiry) and walk the degrade ladder to survive,
+  then climb back to ``exact`` when load drops. Each phase reports
+  offered/sustained QPS, p50/p99 encode-completion latency, shed
+  rate, and degrade transitions.
+* ``degrade_quality`` — what each ladder rung costs in retrieval
+  quality: top-k overlap vs the exact method on a probe query set
+  through ``CorpusEngine.search`` with the rung's
+  ``prune_margin``/``q_width`` knobs.
+* ``faults`` — the same loop under an injected fault plan
+  (``runtime/faults.py``): a persistent poison request, a transient
+  OOM (exercises the adaptive batch cap), and a latency spike. The
+  bar: zero lost requests — every submitted uid is exactly one of
+  served/shed/failed, only poisoned uids fail.
+
+``--smoke`` (or ``BENCH_SMOKE=1``) shortens the phases for CI;
+``benchmarks/check.py`` gates the record, ``report.py`` trends it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from repro.retrieval.sparse_rep import SparseRep, stack_rows
+from repro.runtime.faults import inject_faults
+from repro.runtime.serving import (AdmissionPolicy, BatchedEncoder,
+                                   BatchPolicy, CorpusEngine,
+                                   DegradeController, DegradePolicy,
+                                   FailedResult, Request, ServingLoop,
+                                   ShedResult)
+
+VOCAB = 512
+REP_WIDTH = 16
+DOC_LEN = 24
+SLO_S = 0.05
+MAX_BATCH = 16
+MAX_WAIT_S = 0.005
+MAX_QUEUE = 256
+ENCODE_BASE_S = 0.002       # per-dispatch fixed cost
+ENCODE_ITEM_S = 0.0005      # per-request marginal cost
+# simulated per-query search cost by ladder rung (exact -> minimal):
+# the quality/latency trade the degrade ladder exploits
+SEARCH_COST_S = (0.004, 0.0025, 0.0012, 0.0006)
+# exact-mode capacity ≈ 1 / (ENCODE_ITEM_S + ENCODE_BASE_S/MAX_BATCH
+# + SEARCH_COST_S[0]) ≈ 215 qps — the ramp brackets it
+PHASES = (("warm", 80.0), ("overload", 500.0), ("recovery", 80.0))
+FULL = dict(n_docs=1024, durations=(5.0, 8.0, 8.0), fault_s=4.0,
+            fault_qps=150.0, n_probes=16)
+SMOKE = dict(n_docs=256, durations=(1.5, 2.0, 2.5), fault_s=1.5,
+             fault_qps=150.0, n_probes=8)
+POISON_TOKEN = VOCAB + 7
+POISON_EVERY = 40
+
+
+class SimClock:
+    """Monotonic simulated time (the loop's ``clock`` callable)."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def make_sim_encoder(clock: SimClock,
+                     item_cost: Callable[[], float] = lambda: 0.0):
+    """Deterministic sparse encoder: bag-of-token-counts reps, cost
+    modeled as a simulated time advance (base + per-item).
+
+    ``item_cost`` adds the per-request downstream (search) cost to the
+    advance — the serving pipeline is encode→search per batch, so
+    folding it in here lets the loop's own EWMA see the true service
+    time (that estimate drives admission and the pressure signal)."""
+
+    def encode(tokens, mask):
+        toks = np.asarray(tokens)
+        msk = np.asarray(mask)
+        B = toks.shape[0]
+        clock.advance(ENCODE_BASE_S
+                      + (ENCODE_ITEM_S + item_cost()) * B)
+        vals = np.zeros((B, REP_WIDTH), np.float32)
+        idxs = np.zeros((B, REP_WIDTH), np.int32)
+        for i in range(B):
+            ids, counts = np.unique(toks[i][msk[i] > 0] % VOCAB,
+                                    return_counts=True)
+            order = np.argsort(-counts, kind="stable")[:REP_WIDTH]
+            k = order.size
+            vals[i, :k] = counts[order]
+            idxs[i, :k] = ids[order]
+        return SparseRep(vals, idxs,
+                         (vals > 0).sum(axis=1).astype(np.int32))
+
+    return encode
+
+
+def pump(loop: ServingLoop, clock: SimClock, until_t: float) -> None:
+    """Run the (synchronous) server forward to wall-time ``until_t``:
+    tick until the queue is drained or time runs out (service time
+    advances the clock inside the encode fn)."""
+    pol = loop.encoder.policy
+    while clock.t < until_t:
+        if not loop.pending:
+            clock.t = until_t
+            return
+        if not loop.tick() and loop.pending:
+            trig = loop.pending[0].arrival_t + pol.max_wait_s
+            clock.t = min(max(trig, clock.t + 1e-4), until_t)
+
+
+def _pct(lat_s: np.ndarray, q: float) -> float:
+    return float(np.percentile(lat_s, q)) * 1e3 if lat_s.size else 0.0
+
+
+def run_traffic(durations) -> List[Dict]:
+    clock = SimClock()
+    ctl = DegradeController(DegradePolicy(slo_s=SLO_S))
+    loop = ServingLoop(
+        BatchedEncoder(
+            make_sim_encoder(clock,
+                             item_cost=lambda: SEARCH_COST_S[ctl.level]),
+            policy=BatchPolicy(max_batch=MAX_BATCH,
+                               max_wait_s=MAX_WAIT_S)),
+        clock=clock,
+        admission=AdmissionPolicy(max_queue_depth=MAX_QUEUE),
+        degrade=ctl, window=1 << 16)
+    rng = np.random.default_rng(1)
+    uid = 0
+    phases = []
+    for (name, qps), dur in zip(PHASES, durations):
+        t0, c0 = clock.t, dict(loop.counters)
+        lat0, tr0 = loop.latencies().size, len(ctl.transitions)
+        t_end = t0 + dur
+        t_arr = t0 + rng.exponential(1.0 / qps)
+        n_offered = 0
+        while t_arr < t_end:
+            pump(loop, clock, t_arr)
+            toks = rng.integers(1, VOCAB, size=12).astype(np.int32)
+            loop.submit(Request(uid=uid, tokens=toks,
+                                deadline_s=SLO_S))
+            uid += 1
+            n_offered += 1
+            t_arr += rng.exponential(1.0 / qps)
+        pump(loop, clock, t_end)
+        if name == PHASES[-1][0]:
+            while loop.pending:            # settle the tail
+                loop.tick(force=True)
+        c1 = loop.counters
+        lat = loop.latencies()[lat0:]
+        span = max(clock.t - t0, 1e-9)
+        served = c1["served"] - c0.get("served", 0)
+        shed = (c1["shed_admission"] + c1["shed_expired"]
+                - c0.get("shed_admission", 0)
+                - c0.get("shed_expired", 0))
+        phases.append({
+            "name": name,
+            "offered_qps": round(n_offered / span, 2),
+            "sustained_qps": round(served / span, 2),
+            "served": served,
+            "shed": shed,
+            "failed": c1["failed"] - c0.get("failed", 0),
+            "shed_rate": round(shed / max(1, n_offered), 4),
+            "p50_ms": round(_pct(lat, 50), 3),
+            "p99_ms": round(_pct(lat, 99), 3),
+            "degrade_transitions": len(ctl.transitions) - tr0,
+            "degrade_state_end": ctl.level,
+            "degrade_name_end": ctl.step.name,
+        })
+    # every uid accounted for (served results pile up in completed)
+    assert len(loop.completed) == uid, "lost/duplicated uids in sim"
+    return phases
+
+
+def run_degrade_quality(n_docs: int, n_probes: int, k: int = 10
+                        ) -> Dict[str, float]:
+    clock = SimClock()
+    enc = BatchedEncoder(make_sim_encoder(clock),
+                         policy=BatchPolicy(max_batch=64))
+    engine = CorpusEngine(enc, VOCAB, keep_forward=True)
+    rng = np.random.default_rng(0)
+    doc_tokens = rng.integers(1, VOCAB, size=(n_docs, DOC_LEN))
+    doc_tokens = doc_tokens.astype(np.int32)
+    engine.add_docs(list(doc_tokens))
+    engine.flush()
+    probes = stack_rows([
+        enc.encode_batch([Request(uid=i, tokens=doc_tokens[i])])[i]
+        for i in range(n_probes)])
+    ladder = DegradePolicy().ladder
+    exact_ids = None
+    out = {}
+    for step in ladder:
+        kw = dict(step.search_kwargs)
+        if step.q_width_frac < 1.0:
+            kw["q_width"] = max(1, int(probes.width
+                                       * step.q_width_frac))
+        _, ids = engine.search(probes, k, **kw)
+        if exact_ids is None:
+            exact_ids = ids
+            out[step.name] = 1.0
+        else:
+            overlap = np.mean([np.intersect1d(a, b).size / k
+                               for a, b in zip(exact_ids, ids)])
+            out[step.name] = round(float(overlap), 4)
+    return out
+
+
+def run_faults(duration: float, qps: float) -> Dict:
+    clock = SimClock()
+    plan = [
+        # one poison request shape: any batch containing the token
+        # fails, forever — bisect isolation must carve it out
+        {"on": {"token": POISON_TOKEN}, "exc": "fault"},
+        # a transient OOM: the adaptive cap halves, the batch is
+        # served on retry, the cap grows back
+        {"on": {"call": 10}, "exc": "oom", "times": 1},
+        # a latency spike (not a failure)
+        {"on": {"call": 25}, "do": "delay", "delay_s": 0.08,
+         "times": 1},
+    ]
+    faulty = inject_faults(
+        make_sim_encoder(clock,
+                         item_cost=lambda: SEARCH_COST_S[0]),
+        plan, seed=0, sleep=clock.advance)
+    loop = ServingLoop(
+        BatchedEncoder(faulty,
+                       policy=BatchPolicy(max_batch=MAX_BATCH,
+                                          max_wait_s=MAX_WAIT_S)),
+        clock=clock,
+        admission=AdmissionPolicy(max_queue_depth=MAX_QUEUE),
+        window=1 << 16)
+    rng = np.random.default_rng(2)
+    uid, poisoned = 0, []
+    t_arr = rng.exponential(1.0 / qps)
+    min_cap = MAX_BATCH
+    while t_arr < duration:
+        pump(loop, clock, t_arr)
+        min_cap = min(min_cap, loop.stats()["batch_cap"])
+        toks = rng.integers(1, VOCAB, size=12).astype(np.int32)
+        if uid % POISON_EVERY == 7:
+            toks[0] = POISON_TOKEN
+            poisoned.append(uid)
+        loop.submit(Request(uid=uid, tokens=toks, deadline_s=SLO_S))
+        uid += 1
+        t_arr += rng.exponential(1.0 / qps)
+    while loop.pending:
+        loop.tick(force=True)
+    served = shed = 0
+    failed_uids = []
+    for u in range(uid):
+        res = loop.take(u)      # KeyError here == a lost uid
+        if isinstance(res, FailedResult):
+            failed_uids.append(u)
+        elif isinstance(res, ShedResult):
+            shed += 1
+        else:
+            served += 1
+    lost = uid - served - shed - len(failed_uids)
+    return {
+        "submitted": uid,
+        "served": served,
+        "shed": shed,
+        "failed": len(failed_uids),
+        "lost": lost,
+        "poisoned": len(poisoned),
+        "poisoned_failed": sum(1 for u in failed_uids
+                               if u in set(poisoned)),
+        "failed_outside_poison": sum(1 for u in failed_uids
+                                     if u not in set(poisoned)),
+        "encode_faults": int(loop.counters["faults"]),
+        "oom_faults": int(loop.counters["oom_faults"]),
+        "min_batch_cap": int(min_cap),
+        "end_batch_cap": int(loop.stats()["batch_cap"]),
+        "injector_firings": len(faulty.log),
+    }
+
+
+def run(smoke: bool = False, json_path: str = None):
+    smoke = smoke or os.environ.get("BENCH_SMOKE") == "1"
+    p = SMOKE if smoke else FULL
+
+    phases = run_traffic(p["durations"])
+    quality = run_degrade_quality(p["n_docs"], p["n_probes"])
+    faults = run_faults(p["fault_s"], p["fault_qps"])
+
+    record = {
+        "shape": {"vocab": VOCAB, "rep_width": REP_WIDTH,
+                  "n_docs": p["n_docs"], "max_batch": MAX_BATCH,
+                  "max_queue": MAX_QUEUE},
+        "slo_ms": SLO_S * 1e3,
+        "search_cost_ms": [c * 1e3 for c in SEARCH_COST_S],
+        "phases": phases,
+        "degrade_quality": quality,
+        "faults": faults,
+    }
+
+    print("phase,offered_qps,sustained_qps,p50_ms,p99_ms,shed_rate,"
+          "degrade_end")
+    for ph in phases:
+        print(f"{ph['name']},{ph['offered_qps']},"
+              f"{ph['sustained_qps']},{ph['p50_ms']},{ph['p99_ms']},"
+              f"{ph['shed_rate']},{ph['degrade_name_end']}")
+    print("degrade quality (top-k overlap vs exact): "
+          + ", ".join(f"{n}={v}" for n, v in quality.items()))
+    print(f"faults: {faults['submitted']} submitted -> "
+          f"{faults['served']} served / {faults['shed']} shed / "
+          f"{faults['failed']} failed ({faults['lost']} lost, "
+          f"{faults['poisoned_failed']}/{faults['poisoned']} poisoned "
+          f"isolated, cap {MAX_BATCH}->{faults['min_batch_cap']}->"
+          f"{faults['end_batch_cap']})")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(record, f, indent=2, sort_keys=True)
+        print(f"wrote {json_path}")
+    return record
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized workload")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="emit BENCH_serving.json-style record here")
+    a = ap.parse_args()
+    run(smoke=a.smoke, json_path=a.json)

@@ -13,7 +13,14 @@ diffs. Each bench family has a named check:
                   match impact, the quantized index clears the >= 4x
                   compression bar, and BOTH sharding axes (doc top-k
                   merge and term partial-sum merge) are id-identical
-                  to the unsharded scorer at 1/2/4 shards.
+                  to the unsharded scorer at 1/2/4 shards;
+* ``serving``   — the traffic simulation survived: non-zero sustained
+                  QPS every phase, healthy warm/recovery (no shedding,
+                  p99 under the SLO, back to ``exact``), the overload
+                  phase actually degraded with a bounded shed rate,
+                  quality falls monotonically down the ladder, and the
+                  fault run lost zero requests with only poisoned uids
+                  failing (plus an OOM cap halve + regrow).
 
 Checks return a list of human-readable failures (empty = pass) so
 they are unit-testable (``tests/test_bench_check.py``); the CLI exits
@@ -37,6 +44,14 @@ EXPECTED_RETRIEVAL = {"dense", "streaming", "impact"}
 EXPECTED_ENGINE = {"impact", "pruned", "quantized", "streaming"}
 EXPECTED_SHARD_COUNTS = {"1", "2", "4"}
 MIN_COMPRESSION_RATIO = 4.0
+EXPECTED_PHASES = ("warm", "overload", "recovery")
+# steady phases must sit comfortably inside the SLO; the overload p99
+# may transiently blow through it while the ladder engages, but must
+# stay bounded (shedding + degradation keep the tail finite)
+STEADY_P99_X = 1.0
+OVERLOAD_P99_X = 3.0
+MAX_STEADY_SHED = 0.05
+MAX_OVERLOAD_SHED = 0.9
 
 
 def check_kernels(d: dict) -> List[str]:
@@ -97,10 +112,86 @@ def check_engine(d: dict) -> List[str]:
     return errs
 
 
+def check_serving(d: dict) -> List[str]:
+    errs = []
+    phases = {p.get("name"): p for p in d.get("phases", [])}
+    missing = set(EXPECTED_PHASES) - set(phases)
+    if missing:
+        return [f"serving phases missing {sorted(missing)} "
+                f"(have {sorted(phases)})"]
+    slo = d.get("slo_ms", 0.0)
+    for name, p in phases.items():
+        if not p.get("sustained_qps", 0.0) > 0.0:
+            errs.append(f"{name}: sustained_qps "
+                        f"{p.get('sustained_qps')} not > 0")
+        if p.get("failed", 0) != 0:
+            errs.append(f"{name}: {p.get('failed')} failed requests "
+                        f"in a fault-free run")
+    for name in ("warm", "recovery"):
+        p = phases[name]
+        if p["shed_rate"] > MAX_STEADY_SHED:
+            errs.append(f"{name}: shed_rate {p['shed_rate']} > "
+                        f"{MAX_STEADY_SHED} at steady offered load")
+        if p["p99_ms"] > STEADY_P99_X * slo:
+            errs.append(f"{name}: p99 {p['p99_ms']}ms blows the "
+                        f"{slo}ms SLO at steady offered load")
+    over = phases["overload"]
+    if over["degrade_transitions"] < 1:
+        errs.append("overload: degrade ladder never engaged "
+                    "(0 transitions)")
+    if not 0.0 < over["shed_rate"] <= MAX_OVERLOAD_SHED:
+        errs.append(f"overload: shed_rate {over['shed_rate']} outside "
+                    f"(0, {MAX_OVERLOAD_SHED}] — no shedding means the "
+                    f"ramp isn't an overload; above means collapse")
+    if over["p99_ms"] > OVERLOAD_P99_X * slo:
+        errs.append(f"overload: p99 {over['p99_ms']}ms > "
+                    f"{OVERLOAD_P99_X}x the {slo}ms SLO")
+    if over["sustained_qps"] <= phases["warm"]["sustained_qps"]:
+        errs.append(f"overload sustained {over['sustained_qps']} qps "
+                    f"did not exceed warm "
+                    f"{phases['warm']['sustained_qps']} — degradation "
+                    f"bought no capacity")
+    if phases["recovery"]["degrade_name_end"] != "exact":
+        errs.append(f"recovery ended degraded: "
+                    f"{phases['recovery']['degrade_name_end']}")
+    quality = d.get("degrade_quality", {})
+    ladder = [quality.get(r) for r in
+              ("exact", "pruned", "aggressive", "minimal")]
+    if None in ladder:
+        errs.append(f"degrade_quality missing rungs: {quality}")
+    else:
+        if ladder[0] != 1.0:
+            errs.append(f"exact-rung self-overlap {ladder[0]} != 1.0")
+        if any(a < b for a, b in zip(ladder, ladder[1:])):
+            errs.append(f"quality not monotone down the ladder: "
+                        f"{ladder}")
+        if not ladder[-1] > 0.0:
+            errs.append(f"minimal rung overlap {ladder[-1]} not > 0 — "
+                        f"degraded search returns garbage")
+    f = d.get("faults", {})
+    if f.get("lost", -1) != 0:
+        errs.append(f"faults: {f.get('lost')} requests lost (submitted "
+                    f"uid with no served/shed/failed completion)")
+    if f.get("failed_outside_poison", -1) != 0:
+        errs.append(f"faults: {f.get('failed_outside_poison')} "
+                    f"non-poisoned requests failed — isolation leaked")
+    if not f.get("poisoned_failed", 0) >= 1:
+        errs.append("faults: no poisoned request reached a "
+                    "FailedResult (injection never exercised)")
+    if not f.get("oom_faults", 0) >= 1:
+        errs.append("faults: the OOM rule never fired")
+    if not f.get("min_batch_cap", 1 << 30) < f.get("end_batch_cap", 0):
+        errs.append(f"faults: batch cap never halved+regrew "
+                    f"(min {f.get('min_batch_cap')}, "
+                    f"end {f.get('end_batch_cap')})")
+    return errs
+
+
 CHECKS: Dict[str, Callable[[dict], List[str]]] = {
     "kernels": check_kernels,
     "retrieval": check_retrieval,
     "engine": check_engine,
+    "serving": check_serving,
 }
 
 

@@ -79,10 +79,11 @@ def roofline_table(path: str) -> str:
 def _bench_metrics(path: str) -> dict:
     """Flatten one BENCH_*.json record to ``{metric: value}``.
 
-    Understands the three shapes: ``BENCH_kernels.json`` (``heads`` ->
-    fwd/fwd_bwd passes), ``BENCH_retrieval.json`` (``methods``), and
+    Understands the four shapes: ``BENCH_kernels.json`` (``heads`` ->
+    fwd/fwd_bwd passes), ``BENCH_retrieval.json`` (``methods``),
     ``BENCH_engine.json`` (``methods`` + quantization ratio + sharded
-    scaling).
+    scaling), and ``BENCH_serving.json`` (per-phase traffic stats +
+    ladder quality + fault-run outcome).
     """
     d = json.load(open(path))
     out = {}
@@ -97,6 +98,14 @@ def _bench_metrics(path: str) -> dict:
         out[f"sharded/x{s}"] = rec.get("median_ms")
     for s, rec in d.get("term_sharded", {}).items():
         out[f"term_sharded/x{s}"] = rec.get("median_ms")
+    for p in d.get("phases", []):
+        name = p.get("name", "?")
+        for k in ("sustained_qps", "p99_ms", "shed_rate"):
+            out[f"serving/{name}/{k}"] = p.get(k)
+    for rung, overlap in d.get("degrade_quality", {}).items():
+        out[f"serving/quality/{rung}"] = overlap
+    if "faults" in d:
+        out["serving/faults/lost"] = d["faults"].get("lost")
     return out
 
 
@@ -171,7 +180,8 @@ def bench_trends(history_dir: str = "bench_history") -> int:
     the current record next to them as ``<NAME>.json``. Returns the
     number of tables printed."""
     printed = 0
-    for name in ("BENCH_kernels", "BENCH_retrieval", "BENCH_engine"):
+    for name in ("BENCH_kernels", "BENCH_retrieval", "BENCH_engine",
+                 "BENCH_serving"):
         hist = sorted(glob.glob(os.path.join(history_dir,
                                              f"{name}*.json")),
                       key=_snapshot_key)

@@ -107,16 +107,23 @@ loop = ServingLoop(BatchedEncoder(
 t0 = time.monotonic()
 for uid in range(QUERIES):
     # query uid re-encodes doc uid's tokens: exact-duplicate retrieval
-    # sanity (untrained weights carry no prefix semantics)
+    # sanity (untrained weights carry no prefix semantics). The
+    # deadline is deliberately generous — this example pins the happy
+    # path (everything served); the overload/shedding behavior is the
+    # traffic simulation's job (benchmarks/bench_serving.py).
     toks = doc_tokens[uid].copy()
-    loop.submit(Request(uid=uid, tokens=toks))
+    loop.submit(Request(uid=uid, tokens=toks, deadline_s=60.0))
     loop.tick()
 loop.drain()
 q_rep = stack_rows([loop.take(u) for u in range(QUERIES)])
 assert not loop.completed, "take() pops — nothing may accumulate"
+st = loop.stats()
+assert st["served"] == QUERIES and st["shed"] == st["failed"] == 0
 print(f"served {QUERIES} queries in "
       f"{(time.monotonic() - t0) * 1e3:.1f} ms; "
-      f"batch sizes {loop.batch_sizes}")
+      f"batch sizes {list(loop.batch_sizes)}; "
+      f"occupancy {st['batch_occupancy']:.2f}; "
+      f"p99 {st['p99_latency_s'] * 1e3:.1f} ms")
 
 # --- 3a. retrieval: inverted impact index (sparse path) ---------------
 vals, idx = retrieve(q_rep, index, K, method="impact")

@@ -13,7 +13,10 @@ Runs the sparse-native LSR serving pipeline end-to-end:
             the two-tier pruned scorer (``--prune-margin``).
 2. serve  — stream queries through the deadline/size micro-batching
             loop (results popped via ``take``), reporting latency and
-            achieved batch sizes;
+            achieved batch sizes. ``--deadline-ms`` attaches an SLO to
+            every request (the hardened loop may shed; shed/failed
+            uids are reported and excluded from retrieval) and
+            ``--max-queue`` bounds the admission queue;
 3. retrieve — top-k via the unified dispatcher (``--method`` selects
             the path; see repro.retrieval.retrieve's dispatch table).
             ``--shard-axis doc|term|auto`` picks the sharding axis for
@@ -58,6 +61,15 @@ def main(argv=None) -> int:
                          "build and resolves auto to doc)")
     ap.add_argument("--index-batch", type=int, default=64,
                     help="corpus encoding batch size")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    metavar="MS",
+                    help="per-request SLO: the loop sheds requests "
+                         "whose estimated or actual queue delay blows "
+                         "this deadline (default: best-effort, never "
+                         "shed)")
+    ap.add_argument("--max-queue", type=int, default=1024,
+                    help="admission bound on queue depth; submits "
+                         "beyond it are shed with a ShedResult")
     ap.add_argument("--head-impl", default=None,
                     help="override the config's head backend (any "
                          "registered impl; see "
@@ -116,8 +128,9 @@ def main(argv=None) -> int:
     from repro.configs import get_config
     from repro.launch.steps import init_state
     from repro.retrieval import build_inverted_index, retrieve, stack_rows
-    from repro.runtime.serving import (BatchedEncoder, BatchPolicy,
-                                       CorpusEngine, Request, ServingLoop,
+    from repro.runtime.serving import (AdmissionPolicy, BatchedEncoder,
+                                       BatchPolicy, CorpusEngine,
+                                       Request, ServingLoop,
                                        make_config_encoder)
 
     mod = get_config(args.arch)
@@ -241,23 +254,42 @@ def main(argv=None) -> int:
                   f"({corpus.nbytes / 2**20:.2f} MiB)")
 
     # --- 2. serve queries through the batching loop ------------------
-    loop = ServingLoop(BatchedEncoder(
-        encode, policy=BatchPolicy(max_batch=16, max_wait_s=0.002)))
+    loop = ServingLoop(
+        BatchedEncoder(encode, policy=BatchPolicy(max_batch=16,
+                                                  max_wait_s=0.002)),
+        admission=AdmissionPolicy(max_queue_depth=args.max_queue))
+    deadline = (args.deadline_ms / 1e3
+                if args.deadline_ms is not None else None)
     t0 = time.monotonic()
     for uid in range(args.requests):
         n = int(rng.integers(4, 24))
         loop.submit(Request(uid=uid, tokens=rng.integers(
-            1, cfg.vocab_size, size=n).astype(np.int32)))
+            1, cfg.vocab_size, size=n).astype(np.int32),
+            deadline_s=deadline))
         loop.tick()
     loop.drain()
     dt = time.monotonic() - t0
-    results = [loop.take(uid) for uid in range(args.requests)]
+    # the hardened loop completes every uid, but under a deadline some
+    # may carry ShedResult/FailedResult — retrieval gets the served reps
+    from repro.runtime.serving import FailedResult, ShedResult
+
+    outcomes = {uid: loop.take(uid) for uid in range(args.requests)}
     assert not loop.completed, "take() must leave nothing behind"
-    print(f"encoded {len(results)} requests in {dt*1e3:.1f} ms, "
-          f"batches: {loop.batch_sizes}")
+    results = [r for r in outcomes.values()
+               if not isinstance(r, (ShedResult, FailedResult))]
+    st = loop.stats()
+    print(f"encoded {len(results)}/{args.requests} requests in "
+          f"{dt*1e3:.1f} ms ({st['shed']} shed, {st['failed']} "
+          f"failed), batches: {list(loop.batch_sizes)}, "
+          f"occupancy {st['batch_occupancy']:.2f}, "
+          f"p99 {st['p99_latency_s'] * 1e3:.1f} ms")
+    if not results:
+        print("every request shed — deadline too tight for this "
+              "host; nothing to retrieve")
+        return 0
 
     # --- 3. retrieval through the unified dispatcher ------------------
-    n_q = min(8, args.requests)
+    n_q = min(8, len(results))
     if sparse:
         queries = stack_rows(results[:n_q])
     else:

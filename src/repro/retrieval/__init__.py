@@ -13,7 +13,7 @@ from repro.retrieval.index import InvertedIndex, build_inverted_index
 from repro.retrieval.score import METHODS, impact_scores, retrieve
 from repro.retrieval.sparse_rep import (SparseRep, sparsify_threshold,
                                         sparsify_topk, split_rows,
-                                        stack_rows)
+                                        stack_rows, truncate_width)
 
 __all__ = [
     "IndexBuilder",
@@ -37,4 +37,5 @@ __all__ = [
     "stack_rows",
     "term_shard_index",
     "term_sharded_retrieve",
+    "truncate_width",
 ]

@@ -305,13 +305,23 @@ class IndexBuilder:
     # -- search ----------------------------------------------------------
 
     def search(self, queries: SparseRep, k: int = 10, *,
-               method: str = "auto", **kw
-               ) -> Tuple[np.ndarray, np.ndarray]:
+               method: str = "auto", q_width: Optional[int] = None,
+               **kw) -> Tuple[np.ndarray, np.ndarray]:
         """Top-k over base + delta segments; returns ``(vals, ids)``
         with **external** doc ids (-1 marks below-top-k padding or
-        tombstoned slots). Flushes pending mutations first."""
+        tombstoned slots). Flushes pending mutations first.
+
+        ``q_width`` truncates queries to their ``q_width``
+        largest-value terms before scoring (the serving degrade
+        ladder's query-narrowing knob — DESIGN.md §10); remaining
+        ``kw`` (``prune_margin``, ``candidates``, ...) pass through to
+        ``retrieve`` for the base segment."""
         from repro.kernels.topk_score import merge_topk
         from repro.retrieval.score import retrieve
+        from repro.retrieval.sparse_rep import truncate_width
+
+        if q_width is not None:
+            queries = truncate_width(queries, q_width)
 
         if self.dirty:
             self.flush()

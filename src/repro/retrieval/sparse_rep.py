@@ -200,6 +200,31 @@ def split_rows(rep: SparseRep) -> List[SparseRep]:
     return [SparseRep(v[r], i[r], n[r]) for r in range(v.shape[0])]
 
 
+def truncate_width(rep: SparseRep, k: int) -> SparseRep:
+    """Shrink the fixed width to the ``k`` largest-value slots per row.
+
+    The degrade-ladder move on the query side (DESIGN.md §10): a
+    narrower query touches fewer posting lists, trading recall for
+    latency without re-encoding. Host-side (numpy) — serving queries
+    are already on host when search runs. Rows keep the
+    value-descending-prefix convention; no-op when ``k >= width``.
+    """
+    if k >= rep.width:
+        return rep
+    if k < 1:
+        raise ValueError(f"truncate_width needs k >= 1, got {k}")
+    v = np.asarray(rep.values, np.float32).reshape(-1, rep.width)
+    i = np.asarray(rep.indices, np.int32).reshape(-1, rep.width)
+    sel = np.argsort(-v, axis=1, kind="stable")[:, :k]
+    rows = np.arange(v.shape[0])[:, None]
+    nv, ni = v[rows, sel], i[rows, sel]
+    shape = rep.batch_shape
+    return SparseRep(
+        nv.reshape(*shape, k),
+        ni.reshape(*shape, k),
+        (nv > 0).sum(axis=1).astype(np.int32).reshape(shape))
+
+
 def stack_rows(reps: Sequence[SparseRep]) -> SparseRep:
     """Stack single-row (or batched) reps into one ``(N, K)`` rep.
 

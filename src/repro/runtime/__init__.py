@@ -4,4 +4,25 @@ from repro.runtime.fault_tolerance import (
     RunnerConfig,
     StragglerPolicy,
 )
-from repro.runtime.serving import ServingLoop, Request, BatchedEncoder
+from repro.runtime.faults import (
+    FaultError,
+    FaultInjector,
+    ResourceExhausted,
+    TransientFault,
+    inject_faults,
+    is_oom_error,
+)
+from repro.runtime.serving import (
+    Admission,
+    AdmissionPolicy,
+    BatchedEncoder,
+    BatchPolicy,
+    CorpusEngine,
+    DegradeController,
+    DegradePolicy,
+    DegradeStep,
+    FailedResult,
+    Request,
+    ServingLoop,
+    ShedResult,
+)

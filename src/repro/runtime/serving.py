@@ -1,4 +1,4 @@
-"""Serving runtime: batched sparse-encoding + retrieval.
+"""Serving runtime: batched sparse-encoding + retrieval, hardened.
 
 The LSR serving path has two stages, both built on the paper's
 machinery:
@@ -14,15 +14,39 @@ machinery:
 2. **Retrieve** — encoded queries score a candidate corpus through
    ``repro.retrieval.retrieve``: the inverted impact index is the
    sparse-native production path, the fused streaming kernel
-   (``kernels.topk_score``) covers dense 1M-candidate
-   ``retrieval_cand`` workloads, and the dense einsum remains the
-   tested fallback.
+   (``kernels.topk_score``) covers dense 1M-candidate workloads, and
+   the dense einsum remains the tested fallback.
 
-``ServingLoop`` is synchronous-deterministic (tests drive it tick by
-tick); a thread wrapper is provided for the example server. Completed
-results are handed out by ``take(uid)``, which *pops* — the loop holds
-no reference after the caller reads a result, so memory is bounded by
-in-flight work, not by total traffic.
+``ServingLoop`` is synchronous-deterministic (tests and the traffic
+simulation drive it tick by tick). On top of the PR-3 micro-batching
+it now carries the production-hardening layer (DESIGN.md §10):
+
+* **SLO admission + shedding** — a ``Request`` may carry a relative
+  ``deadline_s``. ``submit`` sheds (``Admission.SHED``) when the queue
+  is full or the estimated queue delay (EWMA encode time × batches
+  ahead) already blows the deadline; ``tick`` drops expired requests
+  *before* wasting an encode. Shed requests complete with a
+  ``ShedResult`` so callers never hang on ``take``.
+* **Poison-batch isolation** — when ``encode_fn`` raises, the batch is
+  bisect-retried to isolate the failing request(s): clean halves are
+  served, the poisoned uid(s) fail with a structured ``FailedResult``,
+  and ``tick`` never raises. OOM-shaped errors halve the adaptive
+  batch cap (PowerAdaptativeBatcher's recovery move); the cap grows
+  back after ``BatchPolicy.grow_after_clean`` clean dispatches.
+* **Degradation ladder** — an attached ``DegradeController`` converts
+  sustained queue pressure into retrieval-quality downshifts
+  (exact → pruned → aggressive margins, shrinking query width) with
+  hysteresis; retrieval callers read ``search_kwargs()`` /
+  ``q_width()`` off the controller per request.
+* **Observable health** — ``stats()`` reports queue depth,
+  served/shed/failed counters, batch occupancy and the adaptive cap,
+  p50/p99 latency over a bounded rolling reservoir, and the degrade
+  state.
+
+Completed results are handed out by ``take(uid)``, which *pops* — the
+loop holds no reference after the caller reads a result, so memory is
+bounded by in-flight work plus the fixed stats windows, not by total
+traffic.
 
 ``CorpusEngine`` is the online-corpus half: it feeds document batches
 through the same batched encoder into an incremental
@@ -33,13 +57,17 @@ instead of being rebuilt from scratch.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import enum
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.runtime.faults import is_oom_error
 
 Array = jax.Array
 
@@ -76,6 +104,35 @@ class Request:
     uid: int
     tokens: np.ndarray          # (len,) int32
     arrival_t: float = 0.0
+    deadline_s: Optional[float] = None   # relative SLO; None = best-effort
+
+
+class Admission(enum.Enum):
+    """``submit``'s verdict — SHED means the request was rejected up
+    front and completed immediately with a ``ShedResult``."""
+    ACCEPTED = "accepted"
+    SHED = "shed"
+
+
+@dataclasses.dataclass
+class ShedResult:
+    """Completion record for a request the loop refused to encode.
+
+    ``reason`` is ``"queue_full"`` / ``"est_deadline"`` (admission
+    control) or ``"expired"`` (deadline passed while queued).
+    """
+    uid: int
+    reason: str
+    waited_s: float = 0.0
+
+
+@dataclasses.dataclass
+class FailedResult:
+    """Completion record for a request whose encode raised even in
+    isolation (a poison request). ``oom`` marks OOM-shaped errors."""
+    uid: int
+    error: str
+    oom: bool = False
 
 
 @dataclasses.dataclass
@@ -83,6 +140,145 @@ class BatchPolicy:
     max_batch: int = 32
     max_wait_s: float = 0.005
     pad_to_multiple: int = 16
+    # clean dispatches before a fault-halved batch cap doubles back up
+    grow_after_clean: int = 4
+
+
+@dataclasses.dataclass
+class AdmissionPolicy:
+    """When ``submit`` says no.
+
+    ``max_queue_depth`` is the hard backpressure bound; the deadline
+    estimate sheds earlier: a request whose ``deadline_s`` is already
+    beaten by ``safety ×`` the estimated queue delay (EWMA encode time
+    per batch × batches ahead of it) is rejected at submit time rather
+    than queued to expire.
+    """
+    max_queue_depth: int = 1024
+    safety: float = 1.0
+
+
+# ---------------------------------------------------------------------------
+# degradation ladder
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DegradeStep:
+    """One rung: retrieval kwargs plus a query-width fraction.
+
+    ``search_kwargs`` feed ``CorpusEngine.search`` /
+    ``IndexBuilder.search`` (method + prune_margin); ``q_width_frac``
+    scales the encode-side rep width (``q_width=`` in search truncates
+    the query rep to its largest terms — fewer postings touched).
+    """
+    name: str
+    search_kwargs: Dict[str, Any] = dataclasses.field(
+        default_factory=dict)
+    q_width_frac: float = 1.0
+
+
+DEFAULT_LADDER: Tuple[DegradeStep, ...] = (
+    DegradeStep("exact"),
+    DegradeStep("pruned", {"method": "pruned", "prune_margin": 0.0}),
+    DegradeStep("aggressive",
+                {"method": "pruned", "prune_margin": 0.5}, 0.5),
+    DegradeStep("minimal",
+                {"method": "pruned", "prune_margin": 1.0}, 0.25),
+)
+
+
+@dataclasses.dataclass
+class DegradePolicy:
+    """Hysteresis thresholds for the ladder state machine.
+
+    Pressure is ``max(est_queue_delay / slo, depth / max_queue,
+    recent_shed_fraction)`` — dimensionless, 1.0 = the queue already
+    costs a full SLO (or every recent submit bounced). The shed term
+    matters under hard overload: admission shedding keeps the *queue*
+    healthy, so queue-derived terms alone sit just under threshold
+    while most traffic is refused. The
+    controller steps *down* the ladder (degrades) after ``up_ticks``
+    consecutive ticks above ``high`` and climbs back one rung after
+    ``down_ticks`` consecutive ticks below ``low``; the band between
+    the thresholds and the longer recovery streak are the hysteresis
+    that stops flapping at the boundary.
+    """
+    slo_s: float = 0.1          # pressure reference when requests
+                                # carry no deadline of their own
+    high: float = 0.8
+    low: float = 0.3
+    up_ticks: int = 3
+    down_ticks: int = 10
+    ladder: Tuple[DegradeStep, ...] = DEFAULT_LADDER
+
+
+class DegradeController:
+    """The ladder state machine: feed it pressure, read the rung.
+
+    ``observe(pressure)`` is called once per loop tick;
+    ``search_kwargs()`` / ``q_width(base)`` expose the current rung to
+    retrieval callers. ``transitions`` records ``(tick, from, to)``
+    and ``ticks_at_level`` the dwell time per rung — both surface in
+    ``ServingLoop.stats()`` and the serving bench.
+    """
+
+    def __init__(self, policy: Optional[DegradePolicy] = None):
+        self.policy = policy or DegradePolicy()
+        if not self.policy.ladder:
+            raise ValueError("DegradePolicy.ladder must be non-empty")
+        self.level = 0
+        self.transitions: List[Tuple[int, int, int]] = []
+        self.ticks_at_level = [0] * len(self.policy.ladder)
+        self._tick = 0
+        self._high_streak = 0
+        self._low_streak = 0
+
+    @property
+    def step(self) -> DegradeStep:
+        return self.policy.ladder[self.level]
+
+    def search_kwargs(self) -> Dict[str, Any]:
+        return dict(self.step.search_kwargs)
+
+    def q_width(self, base_width: int) -> int:
+        return max(1, int(base_width * self.step.q_width_frac))
+
+    def observe(self, pressure: float) -> int:
+        """One tick's pressure sample; returns the (possibly new)
+        level. Mid-band samples reset both streaks — only *sustained*
+        pressure moves the ladder."""
+        pol = self.policy
+        self._tick += 1
+        self.ticks_at_level[self.level] += 1
+        if pressure > pol.high:
+            self._high_streak += 1
+            self._low_streak = 0
+        elif pressure < pol.low:
+            self._low_streak += 1
+            self._high_streak = 0
+        else:
+            self._high_streak = 0
+            self._low_streak = 0
+        if (self._high_streak >= pol.up_ticks
+                and self.level < len(pol.ladder) - 1):
+            self._move(self.level + 1)
+            self._high_streak = 0
+        elif self._low_streak >= pol.down_ticks and self.level > 0:
+            self._move(self.level - 1)
+            self._low_streak = 0
+        return self.level
+
+    def _move(self, to: int) -> None:
+        self.transitions.append((self._tick, self.level, to))
+        self.level = to
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "degrade_level": self.level,
+            "degrade_name": self.step.name,
+            "degrade_transitions": len(self.transitions),
+            "degrade_ticks_at_level": list(self.ticks_at_level),
+        }
 
 
 class BatchedEncoder:
@@ -126,53 +322,272 @@ class BatchedEncoder:
 
 
 class ServingLoop:
-    """Deadline/size micro-batching over a request queue.
+    """Deadline/size micro-batching with admission control, fault
+    isolation, and degrade signalling (module docstring).
 
-    ``completed`` holds results only until the caller collects them
-    with ``take(uid)`` — results are popped on read, so a loop serving
-    heavy traffic stays bounded by in-flight work (a long-lived loop
-    whose results were read but never evicted used to grow without
-    bound).
+    Contracts:
+
+    * ``tick`` dispatches **at most one batch** per call (expiry
+      shedding aside) — schedulers interleave ticks with arrivals and
+      tests stay deterministic. ``drain`` loops forced ticks and is
+      guaranteed to terminate: every forced tick either sheds expired
+      requests or dispatches one batch, so ``pending`` strictly
+      shrinks.
+    * ``tick`` never raises on encode failure: faults are bisected
+      down to the poisoned request(s), which complete as
+      ``FailedResult``.
+    * ``completed`` holds results only until the caller collects them
+      with ``take(uid)`` — results are popped on read. The stats
+      windows (``batch_sizes``, the latency reservoir) are bounded
+      deques, so a long-lived loop's memory stays bounded by in-flight
+      work.
     """
 
     def __init__(self, encoder: BatchedEncoder,
-                 *, clock: Callable[[], float] = time.monotonic):
+                 *, clock: Callable[[], float] = time.monotonic,
+                 admission: Optional[AdmissionPolicy] = None,
+                 degrade: Optional[DegradeController] = None,
+                 ewma_alpha: float = 0.2,
+                 window: int = 512,
+                 shed_window: int = 64):
         self.encoder = encoder
         self.clock = clock
+        self.admission = admission or AdmissionPolicy()
+        self.degrade = degrade
         self.pending: List[Request] = []
         self.completed: Dict[int, Any] = {}
-        self.batch_sizes: List[int] = []
+        # bounded rolling windows (stats inputs) — a long-lived loop
+        # must not grow with total traffic
+        self.batch_sizes: collections.deque = collections.deque(
+            maxlen=window)
+        self._latencies: collections.deque = collections.deque(
+            maxlen=window)
+        # recent admission/expiry outcomes (1 = shed, 0 = accepted):
+        # the shed fraction is a pressure signal — admission shedding
+        # keeps the *queue* healthy, so queue depth alone under-reports
+        # overload; what was refused must still push the degrade ladder
+        self._shed_marks: collections.deque = collections.deque(
+            maxlen=max(1, shed_window))
+        self._ewma_alpha = ewma_alpha
+        self._encode_ewma: Optional[float] = None   # s per dispatch
+        self._batch_cap = self.encoder.policy.max_batch
+        self._clean_batches = 0
+        self.counters: collections.Counter = collections.Counter()
 
-    def submit(self, req: Request) -> None:
+    # -- admission -------------------------------------------------------
+
+    def _effective_cap(self) -> int:
+        return max(1, min(self.encoder.policy.max_batch,
+                          self._batch_cap))
+
+    def estimated_queue_delay(self, depth: Optional[int] = None
+                              ) -> float:
+        """EWMA encode time × batches ahead — 0 until the first
+        dispatch establishes a baseline."""
+        if depth is None:
+            depth = len(self.pending)
+        if self._encode_ewma is None or depth <= 0:
+            return 0.0
+        batches = -(-depth // self._effective_cap())
+        return batches * self._encode_ewma
+
+    def submit(self, req: Request) -> Admission:
         req.arrival_t = self.clock()
+        self.counters["submitted"] += 1
+        if len(self.pending) >= self.admission.max_queue_depth:
+            return self._shed(req, "queue_full")
+        # Never starve: an idle server always accepts. The delay
+        # estimate is a lagging EWMA — if it went stale above the
+        # deadline (e.g. after an overload at full batches), shedding
+        # on an empty queue would wedge the loop at 100% shed with no
+        # dispatch left to refresh the estimate.
+        if req.deadline_s is not None and self.pending:
+            est = self.estimated_queue_delay(len(self.pending) + 1)
+            if self.admission.safety * est > req.deadline_s:
+                return self._shed(req, "est_deadline")
         self.pending.append(req)
+        self._shed_marks.append(0)
+        return Admission.ACCEPTED
+
+    def _shed(self, req: Request, reason: str) -> Admission:
+        key = ("shed_expired" if reason == "expired"
+               else "shed_admission")
+        self.counters[key] += 1
+        self._shed_marks.append(1)
+        self.completed[req.uid] = ShedResult(
+            req.uid, reason, waited_s=self.clock() - req.arrival_t)
+        return Admission.SHED
+
+    # -- results ---------------------------------------------------------
 
     def take(self, uid: int) -> Any:
-        """Pop and return the completed result for ``uid``.
-
-        Raises ``KeyError`` when the request hasn't completed (or was
-        already taken) — the loop never hands out a result twice.
-        """
+        """Pop and return the completed record for ``uid`` — the
+        encoded rep when served, else a ``ShedResult`` /
+        ``FailedResult``. Raises ``KeyError`` when the request hasn't
+        completed (or was already taken) — the loop never hands out a
+        result twice."""
         return self.completed.pop(uid)
 
+    def latencies(self) -> np.ndarray:
+        """Served latencies in the bounded rolling reservoir (s)."""
+        return np.asarray(self._latencies, np.float64)
+
+    # -- the loop --------------------------------------------------------
+
+    def _drop_expired(self, now: float) -> int:
+        """Shed queued requests whose deadline already passed — before
+        an encode is wasted on them."""
+        if not any(r.deadline_s is not None for r in self.pending):
+            return 0
+        keep, dropped = [], 0
+        for r in self.pending:
+            if (r.deadline_s is not None
+                    and now - r.arrival_t > r.deadline_s):
+                self._shed(r, "expired")
+                dropped += 1
+            else:
+                keep.append(r)
+        self.pending = keep
+        return dropped
+
+    def _pressure(self) -> float:
+        slos = [r.deadline_s for r in self.pending
+                if r.deadline_s is not None]
+        slo = min(slos) if slos else (
+            self.degrade.policy.slo_s if self.degrade else 0.1)
+        delay_term = (self.estimated_queue_delay() / slo
+                      if slo > 0 else 0.0)
+        depth_term = (len(self.pending)
+                      / max(1, self.admission.max_queue_depth))
+        # fraction of recent submissions shed (admission or expiry):
+        # under hard overload admission holds the queue at ~one batch,
+        # so the queue-derived terms sit just under threshold — the
+        # refused traffic is the honest overload signal
+        shed_term = (sum(self._shed_marks) / len(self._shed_marks)
+                     if self._shed_marks else 0.0)
+        return max(delay_term, depth_term, shed_term)
+
+    def _encode_isolated(self, batch: List[Request]
+                         ) -> Tuple[Dict[int, Any], bool]:
+        """Encode with bisect isolation: a failing batch is split in
+        halves and retried until the poison request(s) stand alone;
+        those fail structurally, everyone else is served. OOM-shaped
+        errors additionally halve the adaptive batch cap."""
+        results: Dict[int, Any] = {}
+        had_fault = False
+
+        def run(reqs: List[Request]) -> None:
+            nonlocal had_fault
+            try:
+                results.update(self.encoder.encode_batch(reqs))
+                return
+            except Exception as e:      # noqa: BLE001 — tick never raises
+                had_fault = True
+                self.counters["faults"] += 1
+                oom = is_oom_error(e)
+                if oom:
+                    self.counters["oom_faults"] += 1
+                    self._batch_cap = max(1, self._effective_cap() // 2)
+                    self._clean_batches = 0
+                if len(reqs) == 1:
+                    r = reqs[0]
+                    results[r.uid] = FailedResult(r.uid, error=repr(e),
+                                                  oom=oom)
+                    self.counters["failed"] += 1
+                    return
+                mid = len(reqs) // 2
+                run(reqs[:mid])
+                run(reqs[mid:])
+
+        run(batch)
+        return results, had_fault
+
     def tick(self, *, force: bool = False) -> int:
-        """Dispatch one batch if policy triggers. Returns batch size."""
+        """Shed expired requests, then dispatch **at most one** batch
+        if the size/deadline policy (or ``force``) triggers. Returns
+        the dispatched batch size. Never raises on encode faults."""
         pol = self.encoder.policy
+        now = self.clock()
+        self._drop_expired(now)
+        if self.degrade is not None:
+            self.degrade.observe(self._pressure())
         if not self.pending:
             return 0
-        oldest_wait = self.clock() - self.pending[0].arrival_t
-        if (len(self.pending) < pol.max_batch
-                and oldest_wait < pol.max_wait_s and not force):
+        cap = self._effective_cap()
+        oldest_wait = now - self.pending[0].arrival_t
+        if (len(self.pending) < cap and oldest_wait < pol.max_wait_s
+                and not force):
             return 0
-        batch = self.pending[:pol.max_batch]
-        self.pending = self.pending[pol.max_batch:]
-        self.completed.update(self.encoder.encode_batch(batch))
+        batch = self.pending[:cap]
+        self.pending = self.pending[cap:]
+        t0 = self.clock()
+        results, had_fault = self._encode_isolated(batch)
+        dt = self.clock() - t0
+        a = self._ewma_alpha
+        self._encode_ewma = (dt if self._encode_ewma is None
+                             else (1 - a) * self._encode_ewma + a * dt)
+        self.completed.update(results)
+        done = self.clock()
+        for r in batch:
+            if not isinstance(results[r.uid], FailedResult):
+                self.counters["served"] += 1
+                self._latencies.append(done - r.arrival_t)
         self.batch_sizes.append(len(batch))
+        if had_fault:
+            self._clean_batches = 0
+        else:
+            self._clean_batches += 1
+            if (self._batch_cap < pol.max_batch
+                    and self._clean_batches >= pol.grow_after_clean):
+                self._batch_cap = min(pol.max_batch,
+                                      self._batch_cap * 2)
+                self._clean_batches = 0
         return len(batch)
 
     def drain(self) -> None:
+        """Force-dispatch until the queue is empty. One batch per
+        forced tick (the tick contract); every iteration strictly
+        shrinks ``pending`` (a dispatch or expiry sheds), so this
+        always terminates."""
         while self.pending:
+            before = len(self.pending)
             self.tick(force=True)
+            if len(self.pending) >= before:   # pragma: no cover
+                raise RuntimeError("tick(force=True) made no progress")
+
+    # -- observability ---------------------------------------------------
+
+    def stats(self) -> Dict[str, Any]:
+        """Health snapshot: queue, outcome counters, batch occupancy,
+        adaptive cap, p50/p99 latency over the bounded reservoir, and
+        the degrade state when a controller is attached."""
+        c = self.counters
+        pol = self.encoder.policy
+        lat = self.latencies()
+        occupancy = (float(np.mean(self.batch_sizes))
+                     / max(1, pol.max_batch)
+                     if self.batch_sizes else 0.0)
+        d: Dict[str, Any] = {
+            "queue_depth": len(self.pending),
+            "submitted": c["submitted"],
+            "served": c["served"],
+            "shed": c["shed_admission"] + c["shed_expired"],
+            "shed_admission": c["shed_admission"],
+            "shed_expired": c["shed_expired"],
+            "failed": c["failed"],
+            "faults": c["faults"],
+            "oom_faults": c["oom_faults"],
+            "batch_cap": self._effective_cap(),
+            "batch_occupancy": round(occupancy, 4),
+            "encode_ewma_s": self._encode_ewma or 0.0,
+            "p50_latency_s": (float(np.percentile(lat, 50))
+                              if lat.size else 0.0),
+            "p99_latency_s": (float(np.percentile(lat, 99))
+                              if lat.size else 0.0),
+        }
+        if self.degrade is not None:
+            d.update(self.degrade.stats())
+        return d
 
 
 class CorpusEngine:
@@ -226,7 +641,10 @@ class CorpusEngine:
         Documents are chunked by the encoder's ``policy.max_batch``
         (the policy governs document encoding exactly as it governs
         query micro-batching — one giant batch would blow the jit
-        cache and device memory)."""
+        cache and device memory). The first chunk's rows are
+        type-checked *before* the remaining chunks are encoded, so a
+        misconfigured (dense) encoder fails fast instead of after
+        burning encode time on the whole corpus."""
         from repro.retrieval.sparse_rep import SparseRep, stack_rows
 
         rows = []
@@ -239,12 +657,15 @@ class CorpusEngine:
                                     tokens=np.asarray(tokens, np.int32)))
                 self._next_uid += 1
             by_uid = self.encoder.encode_batch(reqs)
-            rows.extend(by_uid[r.uid] for r in reqs)
-        if not all(isinstance(r, SparseRep) for r in rows):
-            raise ValueError(
-                "CorpusEngine needs a sparse encoder — set the "
-                "config's rep_topk/rep_threshold knobs so encode "
-                "emits SparseReps")
+            chunk_rows = [by_uid[r.uid] for r in reqs]
+            if not all(isinstance(r, SparseRep) for r in chunk_rows):
+                raise ValueError(
+                    "CorpusEngine needs a sparse encoder — set the "
+                    "config's rep_topk/rep_threshold knobs so encode "
+                    "emits SparseReps")
+            rows.extend(chunk_rows)
+        if not rows:
+            return np.zeros(0, np.int64)
         return self.builder.add(stack_rows(rows), ids=ids)
 
     def remove_docs(self, ids: Sequence[int]) -> int:
@@ -255,6 +676,8 @@ class CorpusEngine:
 
     def search(self, queries, k: int = 10, *, method: str = "auto",
                **kw) -> Tuple[np.ndarray, np.ndarray]:
+        """Top-k with external ids. Accepts the degrade-ladder knobs
+        (``prune_margin``, ``q_width``) via ``IndexBuilder.search``."""
         return self.builder.search(queries, k, method=method, **kw)
 
     def stats(self) -> Dict[str, float]:

@@ -16,7 +16,8 @@ import pytest
 
 from benchmarks import report
 from benchmarks.check import (check_engine, check_file, check_kernels,
-                              check_retrieval, infer_bench, main)
+                              check_retrieval, check_serving,
+                              infer_bench, main)
 
 GOOD_KERNELS = {"heads": {"naive": {}, "tiled": {}, "sparton-jax": {},
                           "sparton-kernel": {}}}
@@ -36,10 +37,38 @@ GOOD_ENGINE = {
 }
 
 
+def _phase(name, **kw):
+    p = {"name": name, "sustained_qps": 80.0, "p50_ms": 15.0,
+         "p99_ms": 27.0, "shed_rate": 0.0, "failed": 0,
+         "degrade_transitions": 0, "degrade_name_end": "exact"}
+    p.update(kw)
+    return p
+
+
+GOOD_SERVING = {
+    "slo_ms": 50.0,
+    "phases": [
+        _phase("warm"),
+        _phase("overload", sustained_qps=390.0, p99_ms=100.0,
+               shed_rate=0.22, degrade_transitions=3,
+               degrade_name_end="aggressive"),
+        _phase("recovery"),
+    ],
+    "degrade_quality": {"exact": 1.0, "pruned": 1.0,
+                        "aggressive": 0.52, "minimal": 0.4},
+    "faults": {"submitted": 234, "served": 205, "shed": 23,
+               "failed": 6, "lost": 0, "poisoned": 6,
+               "poisoned_failed": 6, "failed_outside_poison": 0,
+               "oom_faults": 1, "min_batch_cap": 8,
+               "end_batch_cap": 16},
+}
+
+
 def test_good_records_pass():
     assert check_kernels(GOOD_KERNELS) == []
     assert check_retrieval(GOOD_RETRIEVAL) == []
     assert check_engine(GOOD_ENGINE) == []
+    assert check_serving(GOOD_SERVING) == []
 
 
 def test_kernels_missing_head_fails():
@@ -75,8 +104,54 @@ def test_engine_gate_failures(mutate, needle):
     assert any(needle in e for e in errs), (needle, errs)
 
 
+def _phases(d):
+    return {p["name"]: p for p in d["phases"]}
+
+
+@pytest.mark.parametrize("mutate,needle", [
+    (lambda d: d["phases"].pop(2), "phases missing"),
+    (lambda d: _phases(d)["recovery"].update(sustained_qps=0.0),
+     "not > 0"),
+    (lambda d: _phases(d)["warm"].update(failed=2), "fault-free"),
+    (lambda d: _phases(d)["warm"].update(shed_rate=0.2),
+     "steady offered load"),
+    (lambda d: _phases(d)["recovery"].update(p99_ms=60.0),
+     "blows the 50.0ms SLO"),
+    (lambda d: _phases(d)["overload"].update(degrade_transitions=0),
+     "never engaged"),
+    (lambda d: _phases(d)["overload"].update(shed_rate=0.0),
+     "isn't an overload"),
+    (lambda d: _phases(d)["overload"].update(shed_rate=0.95),
+     "isn't an overload"),
+    (lambda d: _phases(d)["overload"].update(p99_ms=200.0), "3.0x"),
+    (lambda d: _phases(d)["overload"].update(sustained_qps=50.0),
+     "bought no capacity"),
+    (lambda d: _phases(d)["recovery"].update(
+        degrade_name_end="pruned"), "ended degraded"),
+    (lambda d: d["degrade_quality"].pop("minimal"), "missing rungs"),
+    (lambda d: d["degrade_quality"].update(exact=0.9), "!= 1.0"),
+    (lambda d: d["degrade_quality"].update(aggressive=1.1),
+     "not monotone"),
+    (lambda d: d["degrade_quality"].update(minimal=0.0), "garbage"),
+    (lambda d: d["faults"].update(lost=1), "lost"),
+    (lambda d: d["faults"].update(failed_outside_poison=1),
+     "isolation leaked"),
+    (lambda d: d["faults"].update(poisoned_failed=0),
+     "never exercised"),
+    (lambda d: d["faults"].update(oom_faults=0), "OOM rule"),
+    (lambda d: d["faults"].update(min_batch_cap=16),
+     "halved+regrew"),
+])
+def test_serving_gate_failures(mutate, needle):
+    bad = copy.deepcopy(GOOD_SERVING)
+    mutate(bad)
+    errs = check_serving(bad)
+    assert any(needle in e for e in errs), (needle, errs)
+
+
 def test_infer_bench_and_check_file(tmp_path):
     assert infer_bench("BENCH_kernels.json") == "kernels"
+    assert infer_bench("BENCH_serving-20260809-abc.json") == "serving"
     assert infer_bench("a/b/BENCH_engine-20260801-abc-77.json") == \
         "engine"
     with pytest.raises(ValueError, match="cannot infer"):
@@ -128,6 +203,17 @@ def test_snapshot_labels():
         "20260801-abc123-77"
     assert report._snapshot_label(
         "h/BENCH_kernels-20260801-abc123.json") == "20260801-abc123"
+
+
+def test_bench_metrics_flattens_serving(tmp_path):
+    p = tmp_path / "BENCH_serving.json"
+    p.write_text(json.dumps(GOOD_SERVING))
+    m = report._bench_metrics(str(p))
+    assert m["serving/overload/sustained_qps"] == 390.0
+    assert m["serving/overload/shed_rate"] == 0.22
+    assert m["serving/warm/p99_ms"] == 27.0
+    assert m["serving/quality/minimal"] == 0.4
+    assert m["serving/faults/lost"] == 0
 
 
 def test_trend_table_with_run_id_keys(tmp_path):
