@@ -17,9 +17,10 @@ Three experiments behind ``BENCH_serving.json``:
   offered/sustained QPS, p50/p99 encode-completion latency, shed
   rate, and degrade transitions.
 * ``degrade_quality`` — what each ladder rung costs in retrieval
-  quality: top-k overlap vs the exact method on a probe query set
-  through ``CorpusEngine.search`` with the rung's
-  ``prune_margin``/``q_width`` knobs.
+  quality: nDCG@10 (shared ``repro.eval`` metrics) against the graded
+  synthetic corpus's own qrels, searching with each rung's
+  ``prune_margin``/``q_width`` knobs. Exact scores 1.0 by construction,
+  so rung values read directly as absolute quality retained.
 * ``faults`` — the same loop under an injected fault plan
   (``runtime/faults.py``): a persistent poison request, a transient
   OOM (exercises the adaptive batch cap), and a latency spike. The
@@ -39,13 +40,12 @@ from typing import Callable, Dict, List
 
 import numpy as np
 
-from repro.retrieval.sparse_rep import SparseRep, stack_rows
+from repro.retrieval.sparse_rep import SparseRep
 from repro.runtime.faults import inject_faults
 from repro.runtime.serving import (AdmissionPolicy, BatchedEncoder,
-                                   BatchPolicy, CorpusEngine,
-                                   DegradeController, DegradePolicy,
-                                   FailedResult, Request, ServingLoop,
-                                   ShedResult)
+                                   BatchPolicy, DegradeController,
+                                   DegradePolicy, FailedResult, Request,
+                                   ServingLoop, ShedResult)
 
 VOCAB = 512
 REP_WIDTH = 16
@@ -193,34 +193,43 @@ def run_traffic(durations) -> List[Dict]:
 
 def run_degrade_quality(n_docs: int, n_probes: int, k: int = 10
                         ) -> Dict[str, float]:
-    clock = SimClock()
-    enc = BatchedEncoder(make_sim_encoder(clock),
-                         policy=BatchPolicy(max_batch=64))
-    engine = CorpusEngine(enc, VOCAB, keep_forward=True)
-    rng = np.random.default_rng(0)
-    doc_tokens = rng.integers(1, VOCAB, size=(n_docs, DOC_LEN))
-    doc_tokens = doc_tokens.astype(np.int32)
-    engine.add_docs(list(doc_tokens))
-    engine.flush()
-    probes = stack_rows([
-        enc.encode_batch([Request(uid=i, tokens=doc_tokens[i])])[i]
-        for i in range(n_probes)])
-    ladder = DegradePolicy().ladder
-    exact_ids = None
+    """nDCG@10 per ladder rung on the graded synthetic corpus.
+
+    Scored with the shared ``repro.eval`` metrics against the corpus's
+    own qrels (not top-k overlap vs the exact rung, which can't see
+    *ranking* damage among the overlapping ids). The planted geometry
+    makes the exact rung score exactly 1.0 — doc_nnz=32 / q_nnz=24 /
+    graded=7 at this vocab is wide enough that no background doc
+    outscores a planted grade — so every lower rung's number reads
+    directly as "quality paid for that rung's latency".
+    """
+    import jax.numpy as jnp
+
+    from repro.data.synthetic import lsr_impact_corpus
+    from repro.eval import Qrels
+    from repro.eval.metrics import compute_metrics
+    from repro.retrieval import IndexBuilder
+    from repro.retrieval.sparse_rep import sparsify_topk
+
+    corpus = lsr_impact_corpus(n_docs=n_docs, vocab=VOCAB, doc_nnz=32,
+                               n_queries=n_probes, q_nnz=24, graded=7,
+                               seed=0)
+    qrels = Qrels.from_triples(corpus["qrels"])
+    doc_reps = sparsify_topk(jnp.asarray(corpus["docs"]), 32)
+    probes = sparsify_topk(jnp.asarray(corpus["queries"]), 24)
+    builder = IndexBuilder(VOCAB, keep_forward=True)
+    builder.add(doc_reps)
+    builder.flush()
     out = {}
-    for step in ladder:
+    for step in DegradePolicy().ladder:
         kw = dict(step.search_kwargs)
         if step.q_width_frac < 1.0:
             kw["q_width"] = max(1, int(probes.width
                                        * step.q_width_frac))
-        _, ids = engine.search(probes, k, **kw)
-        if exact_ids is None:
-            exact_ids = ids
-            out[step.name] = 1.0
-        else:
-            overlap = np.mean([np.intersect1d(a, b).size / k
-                               for a, b in zip(exact_ids, ids)])
-            out[step.name] = round(float(overlap), 4)
+        _, ids = builder.search(probes, k, **kw)
+        m = compute_metrics(np.asarray(ids), qrels, ks=(k,),
+                            metrics=("ndcg",))
+        out[step.name] = round(m[f"ndcg@{k}"], 4)
     return out
 
 
@@ -309,6 +318,7 @@ def run(smoke: bool = False, json_path: str = None):
         "slo_ms": SLO_S * 1e3,
         "search_cost_ms": [c * 1e3 for c in SEARCH_COST_S],
         "phases": phases,
+        "quality_metric": "ndcg@10",
         "degrade_quality": quality,
         "faults": faults,
     }
@@ -319,7 +329,7 @@ def run(smoke: bool = False, json_path: str = None):
         print(f"{ph['name']},{ph['offered_qps']},"
               f"{ph['sustained_qps']},{ph['p50_ms']},{ph['p99_ms']},"
               f"{ph['shed_rate']},{ph['degrade_name_end']}")
-    print("degrade quality (top-k overlap vs exact): "
+    print("degrade quality (nDCG@10 vs qrels): "
           + ", ".join(f"{n}={v}" for n, v in quality.items()))
     print(f"faults: {faults['submitted']} submitted -> "
           f"{faults['served']} served / {faults['shed']} shed / "

@@ -18,9 +18,18 @@ diffs. Each bench family has a named check:
                   QPS every phase, healthy warm/recovery (no shedding,
                   p99 under the SLO, back to ``exact``), the overload
                   phase actually degraded with a bounded shed rate,
-                  quality falls monotonically down the ladder, and the
-                  fault run lost zero requests with only poisoned uids
-                  failing (plus an OOM cap halve + regrow).
+                  nDCG@10 falls monotonically down the ladder from an
+                  exact rung at 1.0, and the fault run lost zero
+                  requests with only poisoned uids failing (plus an
+                  OOM cap halve + regrow);
+* ``quality``   — the effectiveness loop closed: exact retrieval
+                  scores nDCG@10 = 1.0 on the planted graded corpus,
+                  pruned (default margin) and quantized match exact
+                  within tolerance (the paper's "no effectiveness
+                  loss" claim), the degrade ladder is monotone
+                  non-increasing, the rep_topk sweep recovers exact
+                  quality at full width, and the short training run
+                  beats its untrained init on MRR@10 and nDCG@10.
 
 Checks return a list of human-readable failures (empty = pass) so
 they are unit-testable (``tests/test_bench_check.py``); the CLI exits
@@ -52,6 +61,16 @@ STEADY_P99_X = 1.0
 OVERLOAD_P99_X = 3.0
 MAX_STEADY_SHED = 0.05
 MAX_OVERLOAD_SHED = 0.9
+LADDER_RUNGS = ("exact", "pruned", "aggressive", "minimal")
+# quality gate bars: the paper's "no effectiveness loss" methods must
+# sit within QUALITY_TOL of exact; training must clear a real margin
+# over the untrained init, not round-off
+EXPECTED_QUALITY_METHODS = {"exact", "pruned", "quantized",
+                            "term_sharded", "doc_sharded", "aggressive"}
+LOSSLESS_METHODS = ("pruned", "quantized", "term_sharded",
+                    "doc_sharded")
+QUALITY_TOL = 1e-3
+MIN_TRAIN_DELTA = 0.01
 
 
 def check_kernels(d: dict) -> List[str]:
@@ -154,19 +173,23 @@ def check_serving(d: dict) -> List[str]:
     if phases["recovery"]["degrade_name_end"] != "exact":
         errs.append(f"recovery ended degraded: "
                     f"{phases['recovery']['degrade_name_end']}")
+    if d.get("quality_metric") != "ndcg@10":
+        errs.append(f"quality_metric {d.get('quality_metric')!r} != "
+                    f"'ndcg@10' — degrade_quality must be scored with "
+                    f"the shared eval metrics against qrels")
     quality = d.get("degrade_quality", {})
-    ladder = [quality.get(r) for r in
-              ("exact", "pruned", "aggressive", "minimal")]
+    ladder = [quality.get(r) for r in LADDER_RUNGS]
     if None in ladder:
         errs.append(f"degrade_quality missing rungs: {quality}")
     else:
         if ladder[0] != 1.0:
-            errs.append(f"exact-rung self-overlap {ladder[0]} != 1.0")
+            errs.append(f"exact-rung nDCG@10 {ladder[0]} != 1.0 on the "
+                        f"planted graded corpus")
         if any(a < b for a, b in zip(ladder, ladder[1:])):
-            errs.append(f"quality not monotone down the ladder: "
+            errs.append(f"nDCG@10 not monotone down the ladder: "
                         f"{ladder}")
         if not ladder[-1] > 0.0:
-            errs.append(f"minimal rung overlap {ladder[-1]} not > 0 — "
+            errs.append(f"minimal rung nDCG@10 {ladder[-1]} not > 0 — "
                         f"degraded search returns garbage")
     f = d.get("faults", {})
     if f.get("lost", -1) != 0:
@@ -187,11 +210,76 @@ def check_serving(d: dict) -> List[str]:
     return errs
 
 
+def check_quality(d: dict) -> List[str]:
+    errs = []
+    if d.get("quality_metric") != "ndcg@10":
+        errs.append(f"quality_metric {d.get('quality_metric')!r} != "
+                    f"'ndcg@10'")
+    methods = d.get("method_quality", {})
+    missing = EXPECTED_QUALITY_METHODS - set(methods)
+    if missing:
+        errs.append(f"method_quality missing {sorted(missing)} "
+                    f"(have {sorted(methods)})")
+        return errs
+    exact = methods["exact"]
+    for m in ("mrr@10", "ndcg@10"):
+        if exact.get(m) != 1.0:
+            errs.append(f"exact {m} {exact.get(m)} != 1.0 — the "
+                        f"planted graded corpus must be perfectly "
+                        f"recoverable by exact retrieval")
+    for name in LOSSLESS_METHODS:
+        for m in ("mrr@10", "ndcg@10"):
+            got, ref = methods[name].get(m, 0.0), exact.get(m, 1.0)
+            if abs(got - ref) > QUALITY_TOL:
+                errs.append(f"{name} {m} {got} differs from exact "
+                            f"{ref} by > {QUALITY_TOL} — effectiveness "
+                            f"loss on a nominally lossless method")
+    ladder = [d.get("ladder_quality", {}).get(r) for r in LADDER_RUNGS]
+    if None in ladder:
+        errs.append(f"ladder_quality missing rungs: "
+                    f"{d.get('ladder_quality')}")
+    else:
+        if ladder[0] != 1.0:
+            errs.append(f"ladder exact rung {ladder[0]} != 1.0")
+        if any(a < b for a, b in zip(ladder, ladder[1:])):
+            errs.append(f"ladder nDCG@10 not monotone non-increasing: "
+                        f"{ladder}")
+        if not ladder[-1] > 0.0:
+            errs.append(f"minimal rung {ladder[-1]} not > 0")
+    sweep = d.get("rep_topk_sweep", {})
+    if not sweep:
+        errs.append("rep_topk_sweep missing/empty")
+    else:
+        by_w = sorted(((int(w), v.get("ndcg@10", 0.0))
+                       for w, v in sweep.items()))
+        vals = [v for _, v in by_w]
+        if any(a > b + QUALITY_TOL for a, b in zip(vals, vals[1:])):
+            errs.append(f"rep_topk sweep not non-decreasing in width: "
+                        f"{by_w}")
+        if abs(vals[-1] - exact.get("ndcg@10", 1.0)) > QUALITY_TOL:
+            errs.append(f"widest rep_topk (w={by_w[-1][0]}) nDCG@10 "
+                        f"{vals[-1]} does not recover exact quality")
+    tv = d.get("trained_vs_init", {})
+    delta = tv.get("delta", {})
+    for m in ("mrr@10", "ndcg@10"):
+        if not delta.get(m, -1.0) >= MIN_TRAIN_DELTA:
+            errs.append(f"trained_vs_init {m} delta {delta.get(m)} < "
+                        f"{MIN_TRAIN_DELTA} — training did not beat "
+                        f"the untrained init "
+                        f"(init {tv.get('init', {}).get(m)}, trained "
+                        f"{tv.get('trained', {}).get(m)})")
+    if not tv.get("loss_last", float("inf")) < tv.get("loss_first", 0.0):
+        errs.append(f"training loss did not fall: "
+                    f"{tv.get('loss_first')} -> {tv.get('loss_last')}")
+    return errs
+
+
 CHECKS: Dict[str, Callable[[dict], List[str]]] = {
     "kernels": check_kernels,
     "retrieval": check_retrieval,
     "engine": check_engine,
     "serving": check_serving,
+    "quality": check_quality,
 }
 
 

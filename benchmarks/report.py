@@ -79,11 +79,12 @@ def roofline_table(path: str) -> str:
 def _bench_metrics(path: str) -> dict:
     """Flatten one BENCH_*.json record to ``{metric: value}``.
 
-    Understands the four shapes: ``BENCH_kernels.json`` (``heads`` ->
+    Understands the five shapes: ``BENCH_kernels.json`` (``heads`` ->
     fwd/fwd_bwd passes), ``BENCH_retrieval.json`` (``methods``),
     ``BENCH_engine.json`` (``methods`` + quantization ratio + sharded
-    scaling), and ``BENCH_serving.json`` (per-phase traffic stats +
-    ladder quality + fault-run outcome).
+    scaling), ``BENCH_serving.json`` (per-phase traffic stats +
+    ladder quality + fault-run outcome), and ``BENCH_quality.json``
+    (method/ladder/rep-width nDCG@10 + trained-vs-init deltas).
     """
     d = json.load(open(path))
     out = {}
@@ -106,6 +107,15 @@ def _bench_metrics(path: str) -> dict:
         out[f"serving/quality/{rung}"] = overlap
     if "faults" in d:
         out["serving/faults/lost"] = d["faults"].get("lost")
+    for m, rec in d.get("method_quality", {}).items():
+        out[f"quality/method/{m}"] = rec.get("ndcg@10")
+    for rung, v in d.get("ladder_quality", {}).items():
+        out[f"quality/ladder/{rung}"] = v
+    for w, rec in d.get("rep_topk_sweep", {}).items():
+        out[f"quality/rep_topk/w{w}"] = rec.get("ndcg@10")
+    tv = d.get("trained_vs_init", {})
+    for k, v in tv.get("delta", {}).items():
+        out[f"quality/train_delta/{k}"] = v
     return out
 
 
@@ -181,7 +191,7 @@ def bench_trends(history_dir: str = "bench_history") -> int:
     number of tables printed."""
     printed = 0
     for name in ("BENCH_kernels", "BENCH_retrieval", "BENCH_engine",
-                 "BENCH_serving"):
+                 "BENCH_serving", "BENCH_quality"):
         hist = sorted(glob.glob(os.path.join(history_dir,
                                              f"{name}*.json")),
                       key=_snapshot_key)

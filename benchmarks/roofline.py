@@ -46,8 +46,7 @@ from repro.core.sharded import sharded_flops_reg, sharded_infonce
 from repro.launch import hlo_analysis as hlo
 from repro.launch.mesh import batch_axes, make_production_mesh
 from repro.launch.sharding import batch_axes_for, transformer_param_specs
-from repro.launch.steps import (LAMBDA_D, LAMBDA_Q, _moe_shard,
-                                arch_config_for_cell)
+from repro.launch.steps import _moe_shard, arch_config_for_cell
 from repro.losses.contrastive import flops_regularizer, infonce_loss
 from repro.models import transformer as tfm
 from repro.models.transformer import _layer
@@ -211,7 +210,8 @@ def _probe_head_loss(cfg: TransformerConfig, mesh, pairs_local_total: int,
             loss = infonce(yq, yd)
         else:
             loss = infonce(yq, yd)
-        return loss + LAMBDA_Q * flops_r(yq) + LAMBDA_D * flops_r(yd)
+        return loss + cfg.lambda_q * flops_r(yq) \
+            + cfg.lambda_d * flops_r(yd)
 
     if train:
         fn = jax.value_and_grad(headloss, argnums=(0, 1, 2, 3))

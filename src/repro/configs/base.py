@@ -69,6 +69,13 @@ class TransformerConfig:
     grad_accum_steps: int = 1
     # LSR head (the paper's technique)
     lsr_head: bool = True          # train objective: LSR contrastive
+    # LSR objective weights (Unified-LSR: effectiveness is dominated by
+    # these regularization choices — keep them per-config, not global)
+    lambda_q: float = 5e-4         # FLOPS weight on query reps
+    lambda_d: float = 3e-4         # FLOPS weight on doc reps
+    l1_weight: float = 0.0         # optional L1 on both rep sides
+    aux_weight: float = 1e-2       # MoE load-balance aux weight
+    distill_weight: float = 0.0    # MarginMSE weight (needs distill batch)
     # Head backend, resolved against the head_api registry by
     # ``head_spec()``: "jax" is the legacy alias for "sparton"; any
     # registered name ("naive" | "tiled" | "sparton" | "kernel" | ...)

@@ -173,6 +173,55 @@ def sharded_flops_reg(
     )
 
 
+def sharded_l1_reg(
+    mesh: Mesh,
+    *,
+    axis_name: str = "model",
+    batch_axes: Tuple[str, ...] = ("pod", "data"),
+):
+    """L1 regularizer mean_b sum_v |Y[b,v]| over sharded V — the row
+    sum psums over ``model``, the batch mean pmeans over the batch
+    axes, matching ``losses.l1_regularizer`` on the gathered array."""
+
+    def body(y):
+        local = jnp.mean(jnp.sum(jnp.abs(y.astype(jnp.float32)), axis=-1))
+        total = jax.lax.psum(local, axis_name)
+        if batch_axes:
+            total = jax.lax.pmean(total, batch_axes)
+        return total
+
+    return shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(batch_axes, axis_name),),
+        out_specs=P(),
+    )
+
+
+def sharded_row_dots(
+    mesh: Mesh,
+    *,
+    axis_name: str = "model",
+    batch_axes: Tuple[str, ...] = ("pod", "data"),
+):
+    """Per-row dots ``s[b] = sum_v a[b,v]·c[b,v]`` over sharded V —
+    the score primitive MarginMSE distillation needs (aligned q/doc
+    pairs, no cross-batch matrix): shard-local einsum + one psum, the
+    ``(B, V)`` reps never gather anywhere."""
+
+    def body(a, c):
+        local = jnp.einsum("bv,bv->b", a, c,
+                           preferred_element_type=jnp.float32)
+        return jax.lax.psum(local, axis_name)
+
+    return shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(batch_axes, axis_name), P(batch_axes, axis_name)),
+        out_specs=P(batch_axes),
+    )
+
+
 def head_shardings(mesh: Mesh, *, axis_name: str = "model",
                    batch_axes: Tuple[str, ...] = ("pod", "data")):
     """NamedShardings for (H, E, b, mask, Y) used by jit'd callers."""

@@ -102,7 +102,11 @@ def lsr_impact_corpus(
     Documents activate ``doc_nnz`` uniform-random distinct terms
     (planted docs: the shared prefix + random fillers). Returns
     ``{"docs": (n_docs, vocab) f32[, "queries": (n_queries, vocab)
-    f32]}`` dense matrices (sparsify/index downstream).
+    f32, "qrels": (n_queries * graded, 3) f32]}`` — dense matrices
+    (sparsify/index downstream) plus explicit ``(query, doc, grade)``
+    judgment triples for the planted docs (grade ``graded - i`` for
+    plant i, so higher grade = longer shared prefix = higher exact
+    score; feed to ``repro.eval.Qrels.from_triples``).
     """
     if n_queries and n_docs < n_queries * graded:
         raise ValueError(f"need n_docs >= n_queries*graded = "
@@ -130,20 +134,27 @@ def lsr_impact_corpus(
     out = {"docs": docs}
     if n_queries:
         queries = np.zeros((n_queries, vocab), np.float32)
+        triples = []
         for b in range(n_queries):
             q_terms = rng.choice(vocab, size=q_nnz, replace=False)
             queries[b, q_terms] = impacts(q_terms)
+            # fillers must avoid *every* query term, not just the
+            # doc's own shared prefix — otherwise a low-grade plant
+            # can randomly pick up dropped query terms and outscore a
+            # higher grade, breaking the two-whole-term gap invariant
+            pool = np.setdiff1d(np.arange(vocab), q_terms,
+                                assume_unique=False)
             for i in range(graded):
                 d = b * graded + i
                 shared = q_terms[:q_nnz - 2 * i]
                 docs[d] = 0.0
                 docs[d, shared] = impacts(shared)
-                pool = np.setdiff1d(np.arange(vocab), shared,
-                                    assume_unique=False)
                 cols = rng.choice(pool, size=doc_nnz - shared.shape[0],
                                   replace=False)
                 docs[d, cols] = impacts(cols)
+                triples.append((b, d, graded - i))
         out["queries"] = queries
+        out["qrels"] = np.asarray(triples, np.float32)
     return out
 
 

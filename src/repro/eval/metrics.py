@@ -1,0 +1,192 @@
+"""Ranking-quality metrics over retrieved-id arrays.
+
+Everything upstream of this module speaks *ids*: ``retrieve()`` /
+``IndexBuilder.search`` return ``(vals (B, K), ids (B, K))`` with
+``-1`` marking below-top-k padding. This module turns those arrays
+plus graded relevance judgments into MRR@k / nDCG@k / recall@k /
+success@k — the effectiveness axis that makes ``prune_margin``,
+quantization and ``rep_topk`` measurable quality-vs-speed trades
+instead of parity-only knobs (ROADMAP "close the loop").
+
+Two implementations of every metric:
+
+* a **host/NumPy reference** (``*_ref``): one query at a time, the
+  relevance judgments as a plain ``{doc_id: grade}`` mapping, written
+  as the textbook formula with Python loops — the hand-checkable
+  ground truth the tests pin the batched path against;
+* a **batched JAX path** (``mrr_at_k`` / ``ndcg_at_k`` / ...):
+  jit-able over ``(B, K)`` retrieved-id arrays and padded ``(B, R)``
+  relevance arrays (``qrels.Qrels.to_arrays``), returning per-query
+  ``(B,)`` metric vectors. ``k`` is static; the matching step is one
+  ``(B, K, R)`` broadcast compare, so a full method×k sweep stays a
+  handful of fused device ops.
+
+Conventions shared by both paths:
+
+* retrieved ids ``< 0`` are padding/tombstones — never a match;
+* a judged grade ``<= 0`` means "not relevant" (and pads the arrays);
+* nDCG uses **graded exponential gains** ``(2^g - 1) / log2(rank+1)``
+  (the TREC/trec_eval form), so grade order matters, not just set
+  membership; MRR / recall / success binarize at ``grade > 0``;
+* queries with no relevant documents score 0 on every metric.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Mapping, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+METRIC_NAMES = ("mrr", "ndcg", "recall", "success")
+
+
+# ---------------------------------------------------------------------------
+# host/NumPy reference (one query, judgments as a mapping)
+# ---------------------------------------------------------------------------
+
+def mrr_ref(ranked: Sequence[int], rels: Mapping[int, float],
+            k: int) -> float:
+    """1 / rank of the first relevant doc within the top ``k``."""
+    for pos, doc in enumerate(list(ranked)[:k]):
+        if doc >= 0 and rels.get(int(doc), 0.0) > 0.0:
+            return 1.0 / (pos + 1)
+    return 0.0
+
+
+def ndcg_ref(ranked: Sequence[int], rels: Mapping[int, float],
+             k: int) -> float:
+    """nDCG@k with graded exponential gains (see module docstring)."""
+    def dcg(grades):
+        return sum((2.0 ** g - 1.0) / np.log2(pos + 2.0)
+                   for pos, g in enumerate(grades))
+
+    got = [max(rels.get(int(d), 0.0), 0.0) if d >= 0 else 0.0
+           for d in list(ranked)[:k]]
+    ideal = sorted((g for g in rels.values() if g > 0), reverse=True)[:k]
+    idcg = dcg(ideal)
+    return dcg(got) / idcg if idcg > 0 else 0.0
+
+
+def recall_ref(ranked: Sequence[int], rels: Mapping[int, float],
+               k: int) -> float:
+    """|top-k ∩ relevant| / |relevant| (0 when nothing is judged)."""
+    relevant = {d for d, g in rels.items() if g > 0}
+    if not relevant:
+        return 0.0
+    hits = {int(d) for d in list(ranked)[:k] if d >= 0} & relevant
+    return len(hits) / len(relevant)
+
+
+def success_ref(ranked: Sequence[int], rels: Mapping[int, float],
+                k: int) -> float:
+    """1.0 iff any relevant doc appears in the top ``k``."""
+    return 1.0 if recall_ref(ranked, rels, k) > 0 else 0.0
+
+
+REFERENCE = {"mrr": mrr_ref, "ndcg": ndcg_ref, "recall": recall_ref,
+             "success": success_ref}
+
+
+# ---------------------------------------------------------------------------
+# batched JAX path (retrieved-id arrays + padded relevance arrays)
+# ---------------------------------------------------------------------------
+
+def ranked_grades(ranked_ids: Array, rel_ids: Array,
+                  rel_grades: Array) -> Array:
+    """Grade of every retrieved doc: ``(B, K)`` from ``(B, K)`` ids
+    matched against padded ``(B, R)`` judgments.
+
+    One broadcast compare — retrieved padding (id < 0) and judgment
+    padding (grade <= 0) both fall out as grade 0.
+    """
+    ranked_ids = jnp.asarray(ranked_ids, jnp.int32)
+    rel_ids = jnp.asarray(rel_ids, jnp.int32)
+    rel_grades = jnp.asarray(rel_grades, jnp.float32)
+    match = (ranked_ids[..., :, None] == rel_ids[..., None, :]) \
+        & (ranked_ids[..., :, None] >= 0) \
+        & (rel_grades[..., None, :] > 0.0)
+    return jnp.max(jnp.where(match, rel_grades[..., None, :], 0.0),
+                   axis=-1)
+
+
+def _discounts(k: int) -> Array:
+    return 1.0 / jnp.log2(jnp.arange(k, dtype=jnp.float32) + 2.0)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def mrr_at_k(ranked_ids: Array, rel_ids: Array, rel_grades: Array,
+             *, k: int) -> Array:
+    """Per-query ``(B,)`` reciprocal rank of the first relevant doc."""
+    g = ranked_grades(ranked_ids, rel_ids, rel_grades)[..., :k]
+    hit = g > 0.0
+    first = jnp.argmax(hit, axis=-1)                 # 0 when no hit
+    rr = 1.0 / (first.astype(jnp.float32) + 1.0)
+    return jnp.where(jnp.any(hit, axis=-1), rr, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def ndcg_at_k(ranked_ids: Array, rel_ids: Array, rel_grades: Array,
+              *, k: int) -> Array:
+    """Per-query ``(B,)`` nDCG@k with graded exponential gains."""
+    g = ranked_grades(ranked_ids, rel_ids, rel_grades)[..., :k]
+    dcg = jnp.sum((jnp.exp2(g) - 1.0) * _discounts(g.shape[-1]),
+                  axis=-1)
+    grades = jnp.maximum(jnp.asarray(rel_grades, jnp.float32), 0.0)
+    m = min(k, grades.shape[-1])
+    ideal = jax.lax.top_k(grades, m)[0]
+    idcg = jnp.sum((jnp.exp2(ideal) - 1.0) * _discounts(m), axis=-1)
+    return jnp.where(idcg > 0.0, dcg / jnp.maximum(idcg, 1e-30), 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def recall_at_k(ranked_ids: Array, rel_ids: Array, rel_grades: Array,
+                *, k: int) -> Array:
+    """Per-query ``(B,)`` fraction of relevant docs in the top k."""
+    g = ranked_grades(ranked_ids, rel_ids, rel_grades)[..., :k]
+    hits = jnp.sum(g > 0.0, axis=-1).astype(jnp.float32)
+    n_rel = jnp.sum(jnp.asarray(rel_grades, jnp.float32) > 0.0,
+                    axis=-1).astype(jnp.float32)
+    return jnp.where(n_rel > 0.0, hits / jnp.maximum(n_rel, 1.0), 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def success_at_k(ranked_ids: Array, rel_ids: Array, rel_grades: Array,
+                 *, k: int) -> Array:
+    """Per-query ``(B,)`` indicator: any relevant doc in the top k."""
+    g = ranked_grades(ranked_ids, rel_ids, rel_grades)[..., :k]
+    return jnp.any(g > 0.0, axis=-1).astype(jnp.float32)
+
+
+BATCHED = {"mrr": mrr_at_k, "ndcg": ndcg_at_k, "recall": recall_at_k,
+           "success": success_at_k}
+
+
+def compute_metrics(ranked_ids, qrels, *, ks: Tuple[int, ...] = (10,),
+                    query_ids: Sequence[int] = None,
+                    metrics: Tuple[str, ...] = METRIC_NAMES,
+                    ) -> Dict[str, float]:
+    """Mean metrics over a batch: ``{"mrr@10": 0.83, "ndcg@10": ...}``.
+
+    ``ranked_ids`` is the ``(B, K)`` id array straight out of
+    ``retrieve()`` / ``IndexBuilder.search`` (external ids, -1 pads);
+    ``qrels`` a :class:`repro.eval.qrels.Qrels`. Row b is scored
+    against ``query_ids[b]`` (default: ``qrels.query_ids`` in order —
+    the common "one row per judged query" case).
+    """
+    ranked = np.asarray(ranked_ids)
+    rel_ids, rel_grades = qrels.to_arrays(query_ids)
+    if ranked.shape[0] != rel_ids.shape[0]:
+        raise ValueError(
+            f"{ranked.shape[0]} ranking rows for {rel_ids.shape[0]} "
+            f"queries — pass query_ids= to align them")
+    out: Dict[str, float] = {}
+    for k in ks:
+        for name in metrics:
+            per_q = BATCHED[name](ranked, rel_ids, rel_grades, k=k)
+            out[f"{name}@{k}"] = float(jnp.mean(per_q))
+    return out

@@ -34,12 +34,13 @@ from repro.configs.base import (DimeNetConfig, RecSysConfig,
                                 TransformerConfig)
 from repro.configs.specs import CellSpec
 from repro.core.head_api import make_head
-from repro.core.sharded import sharded_flops_reg, sharded_infonce
+from repro.core.sharded import (sharded_flops_reg, sharded_infonce,
+                                sharded_l1_reg, sharded_row_dots)
 from repro.launch.mesh import batch_axes
 from repro.launch.sharding import (batch_axes_for, batch_spec,
                                    dimenet_param_specs, recsys_param_specs,
                                    state_shardings, transformer_param_specs)
-from repro.losses.contrastive import flops_regularizer, infonce_loss
+from repro.losses.contrastive import margin_mse_loss, splade_loss
 from repro.models import dimenet as dimenet_model
 from repro.models import recsys as recsys_model
 from repro.models import transformer as tfm
@@ -49,9 +50,6 @@ from repro.optim.schedules import linear_warmup_cosine
 
 Array = jax.Array
 PyTree = Any
-
-LAMBDA_Q, LAMBDA_D = 5e-4, 3e-4
-AUX_W = 1e-2
 
 
 # ---------------------------------------------------------------------------
@@ -117,24 +115,44 @@ def build_lsr_train_step(
     encode = _encode_fn(cfg, mesh, micro_pairs, unroll)
 
     if mesh is not None and cfg.vocab_size % mesh.shape["model"] == 0:
+        # vocab-sharded reps never gather, so the objective is
+        # composed from the sharded primitives (same math as
+        # losses.splade_loss / margin_mse_loss on the full arrays)
         baxes = batch_axes_for(mesh, micro_pairs)
         infonce = sharded_infonce(mesh, batch_axes=baxes)
         flops = sharded_flops_reg(mesh, batch_axes=baxes)
+        l1 = sharded_l1_reg(mesh, batch_axes=baxes)
+        row_dots = sharded_row_dots(mesh, batch_axes=baxes)
 
         def mb_loss(params, mb):
             yq, aux_q = encode(params, mb["q_tokens"], mb["q_mask"])
             yd, aux_d = encode(params, mb["d_tokens"], mb["d_mask"])
             loss = infonce(yq, yd)
-            loss = loss + LAMBDA_Q * flops(yq) + LAMBDA_D * flops(yd)
-            return loss + AUX_W * (aux_q + aux_d)
+            loss = loss + cfg.lambda_q * flops(yq) \
+                + cfg.lambda_d * flops(yd)
+            if cfg.l1_weight:
+                loss = loss + cfg.l1_weight * (l1(yq) + l1(yd))
+            if cfg.distill_weight and "neg_tokens" in mb:
+                yn, _ = encode(params, mb["neg_tokens"], mb["neg_mask"])
+                margin = row_dots(yq, yd) - row_dots(yq, yn)
+                mse = jnp.mean((margin - mb["teacher_margin"]) ** 2)
+                loss = loss + cfg.distill_weight * mse
+            return loss + cfg.aux_weight * (aux_q + aux_d)
     else:
         def mb_loss(params, mb):
             yq, aux_q = encode(params, mb["q_tokens"], mb["q_mask"])
             yd, aux_d = encode(params, mb["d_tokens"], mb["d_mask"])
-            loss = infonce_loss(yq, yd)
-            loss = loss + LAMBDA_Q * flops_regularizer(yq)
-            loss = loss + LAMBDA_D * flops_regularizer(yd)
-            return loss + AUX_W * (aux_q + aux_d)
+            loss = splade_loss(yq, yd,
+                               lambda_q=cfg.lambda_q,
+                               lambda_d=cfg.lambda_d,
+                               l1_weight=cfg.l1_weight,
+                               aux_loss=aux_q + aux_d,
+                               aux_weight=cfg.aux_weight)
+            if cfg.distill_weight and "neg_tokens" in mb:
+                yn, _ = encode(params, mb["neg_tokens"], mb["neg_mask"])
+                loss = loss + cfg.distill_weight * margin_mse_loss(
+                    yq, yd, yn, mb["teacher_margin"])
+            return loss
 
     grad_fn = jax.value_and_grad(mb_loss)
 

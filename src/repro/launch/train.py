@@ -43,6 +43,23 @@ def main(argv=None) -> int:
                     help="set XLA latency-hiding scheduler flags")
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--lr", type=float, default=2e-4)
+    ap.add_argument("--lambda-q", type=float, default=None,
+                    help="FLOPS regularizer weight on query reps "
+                         "(default: config's lambda_q)")
+    ap.add_argument("--lambda-d", type=float, default=None,
+                    help="FLOPS regularizer weight on doc reps "
+                         "(default: config's lambda_d)")
+    ap.add_argument("--l1-weight", type=float, default=None,
+                    help="L1 rep regularizer weight "
+                         "(default: config's l1_weight)")
+    ap.add_argument("--eval-every", type=int, default=0,
+                    help="every N steps, run retrieval eval (MRR@10/"
+                         "nDCG@10 on a held-out paired batch) and log "
+                         "it; also evals the untrained init and prints "
+                         "the improvement at the end. 0 = off")
+    ap.add_argument("--eval-queries", type=int, default=32,
+                    help="held-out (query, positive-doc) pairs scored "
+                         "by --eval-every")
     ap.add_argument("--head-impl", default=None,
                     help="LSR head implementation (default: config's; "
                          "any registered backend — validated against "
@@ -76,6 +93,15 @@ def main(argv=None) -> int:
     state, _ = init_state(args.arch, jax.random.PRNGKey(0),
                           smoke=not args.full)
 
+    if isinstance(cfg, TransformerConfig):
+        import dataclasses
+
+        reg = {name: getattr(args, name) for name in
+               ("lambda_q", "lambda_d", "l1_weight")
+               if getattr(args, name) is not None}
+        if reg:
+            cfg = dataclasses.replace(cfg, **reg)
+
     if isinstance(cfg, TransformerConfig) and args.head_impl:
         import dataclasses
 
@@ -108,6 +134,9 @@ def main(argv=None) -> int:
               f"D={cfg.d_model} V={cfg.vocab_size}): " +
               ", ".join(f"{kn}={blk}" for kn, blk in winners.items()))
 
+    eval_hook = None
+    run_eval = None
+    eval_log = []
     if isinstance(cfg, TransformerConfig):
         step = build_lsr_train_step(cfg, None, n_micro=1,
                                     n_pairs=args.batch, lr=args.lr)
@@ -119,6 +148,43 @@ def main(argv=None) -> int:
             for b in it:
                 yield {"q_tokens": b["q_tokens"], "q_mask": b["q_mask"],
                        "d_tokens": b["d_tokens"], "d_mask": b["d_mask"]}
+
+        if args.eval_every:
+            from repro.eval import MethodSpec, Qrels, evaluate_retrieval
+            from repro.launch.steps import _encode_fn
+
+            # held-out pairs: a seed no training shard ever draws, so
+            # eval measures generalization, not batch memorization
+            held_out = next(lsr_pair_batches(
+                batch=args.eval_queries, q_len=args.seq_len,
+                d_len=args.seq_len, vocab=cfg.vocab_size, seed=9173))
+            corpus = {"doc_tokens": held_out["d_tokens"],
+                      "doc_mask": held_out["d_mask"],
+                      "q_tokens": held_out["q_tokens"],
+                      "q_mask": held_out["q_mask"],
+                      "vocab_size": cfg.vocab_size}
+            qrels = Qrels.paired(args.eval_queries)
+            enc_batch = min(32, args.eval_queries)
+            encode = _encode_fn(cfg, None, enc_batch)
+            enc_jit = jax.jit(lambda p, t, m: encode(p, t, m)[0])
+
+            def run_eval(state):
+                params = state["params"]
+                res = evaluate_retrieval(
+                    lambda t, m: enc_jit(params, t, m), corpus, qrels,
+                    methods=(MethodSpec("exact"),), ks=(10,),
+                    metrics=("mrr", "ndcg"), batch=enc_batch)
+                return res["exact"]
+
+            def eval_hook(step_idx, state):
+                done = step_idx + 1
+                if done % args.eval_every and done != args.steps:
+                    return None
+                m = run_eval(state)
+                eval_log.append((done, m))
+                print(f"eval @ step {done}: " + " ".join(
+                    f"{k} {v:.4f}" for k, v in m.items()))
+                return {f"eval_{k}": v for k, v in m.items()}
     elif isinstance(cfg, RecSysConfig):
         step = build_recsys_train_step(cfg)
 
@@ -143,15 +209,25 @@ def main(argv=None) -> int:
                             ckpt_every=args.ckpt_every,
                             max_steps=args.steps),
         place_batch=place,
+        on_step=eval_hook,
     )
     if args.resume and runner.try_resume():
         print(f"resumed from step {runner.start_step}")
+    init_metrics = run_eval(state) if run_eval is not None else None
+    if init_metrics:
+        print("eval @ init: " + " ".join(
+            f"{k} {v:.4f}" for k, v in init_metrics.items()))
     runner.run()
-    losses = [m["loss"] for m in runner.metrics_log]
-    if losses:
-        print(f"step {runner.metrics_log[-1]['step']}: "
-              f"loss {float(losses[-1]):.4f} "
-              f"(first {float(losses[0]):.4f})")
+    loss_entries = [m for m in runner.metrics_log if "loss" in m]
+    if loss_entries:
+        print(f"step {loss_entries[-1]['step']}: "
+              f"loss {float(loss_entries[-1]['loss']):.4f} "
+              f"(first {float(loss_entries[0]['loss']):.4f})")
+    if init_metrics and eval_log:
+        final = eval_log[-1][1]
+        print("eval improvement over init: " + " ".join(
+            f"{k} {init_metrics[k]:.4f}->{final[k]:.4f}"
+            f"({final[k] - init_metrics[k]:+.4f})" for k in final))
     print(f"done: {args.steps} steps, "
           f"{len(runner.skipped_steps)} skipped, "
           f"{len(runner.remesh_events)} re-mesh events")

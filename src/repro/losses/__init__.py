@@ -1,5 +1,7 @@
 from repro.losses.contrastive import (
     flops_regularizer,
+    gathered_infonce,
+    infonce_from_scores,
     infonce_loss,
     l1_regularizer,
     margin_mse_loss,

@@ -9,7 +9,7 @@ MarginMSE distillation is included because SPLADE-v3's recipe uses it
 
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +29,44 @@ def infonce_loss(
     labels = jnp.arange(q_reps.shape[0])
     logp = jax.nn.log_softmax(scores, axis=-1)
     return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def gathered_infonce(
+    q_reps: Array,     # (B_local, V) this shard's query rows
+    d_reps: Array,     # (B_local, V) this shard's doc rows
+    *,
+    axis_names: Tuple[str, ...] = (),
+    temperature: float = 1.0,
+) -> Array:
+    """Mesh-aware in-batch InfoNCE: negatives gathered across the data
+    axes.
+
+    Inside ``shard_map``/``pmap`` over ``axis_names``, each device
+    holds a ``B_local`` slice of the global batch; in-batch negatives
+    must still span the *global* batch or the effective negative pool
+    shrinks by the data-parallel degree. Documents are all_gather'd
+    over ``axis_names`` (row-major gather order), the diagonal label
+    is offset by this shard's global row position, and the per-shard
+    mean is pmean'd so the result equals single-device
+    :func:`infonce_loss` on the concatenated batch. With no axes it
+    *is* ``infonce_loss``. (The vocab-sharded head path instead uses
+    ``core.sharded.sharded_infonce``, which fuses the same gather with
+    the partial-score psum.)
+    """
+    if not axis_names:
+        return infonce_loss(q_reps, d_reps, temperature=temperature)
+    from repro.compat import axis_size
+
+    d_full = jax.lax.all_gather(d_reps, axis_names, axis=0, tiled=True)
+    scores = jnp.einsum("qv,dv->qd", q_reps, d_full,
+                        preferred_element_type=jnp.float32) / temperature
+    offset = jnp.zeros((), jnp.int32)
+    for ax in axis_names:
+        offset = offset * axis_size(ax) + jax.lax.axis_index(ax)
+    labels = offset * q_reps.shape[0] + jnp.arange(q_reps.shape[0])
+    logp = jax.nn.log_softmax(scores, axis=-1)
+    local = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+    return jax.lax.pmean(local, axis_names)
 
 
 def infonce_from_scores(scores: Array, *, temperature: float = 1.0) -> Array:

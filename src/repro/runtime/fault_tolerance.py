@@ -116,6 +116,13 @@ class FaultTolerantRunner:
     on_remesh: optional callback(state) -> (step_fn, state) invoked when
       the straggler policy demands a re-mesh (tests inject this;
       launch/train.py wires it to ElasticMeshManager + re-jit).
+    on_step: optional callback(step, state) invoked after every
+      *successful* step (skipped/straggled steps don't fire it) — the
+      periodic-work hook (eval, extra logging). A returned non-empty
+      dict is appended to ``metrics_log`` as its own
+      ``{"step": step, **extras}`` entry; the callback decides its own
+      cadence. Exceptions propagate: the hook runs host-side work the
+      caller asked for, not step execution the FT policy owns.
     """
 
     def __init__(
@@ -128,6 +135,8 @@ class FaultTolerantRunner:
         place_batch: Callable[[Dict[str, np.ndarray]], PyTree] = lambda b: b,
         on_remesh: Optional[Callable[[PyTree],
                                      Tuple[Callable, PyTree]]] = None,
+        on_step: Optional[Callable[[int, PyTree],
+                                   Optional[Dict[str, Any]]]] = None,
         clock: Callable[[], float] = time.monotonic,
     ):
         self.step_fn = step_fn
@@ -136,6 +145,7 @@ class FaultTolerantRunner:
         self.config = config
         self.place_batch = place_batch
         self.on_remesh = on_remesh
+        self.on_step = on_step
         self.clock = clock
         self._step_clock = _StepClock(config.straggler)
         self._ckpt = AsyncCheckpointer(config.ckpt_dir,
@@ -177,6 +187,10 @@ class FaultTolerantRunner:
             self.suspect_strikes = 0
             if cfg.log_every and step % cfg.log_every == 0:
                 self.metrics_log.append({"step": step, **metrics})
+            if self.on_step is not None:
+                extras = self.on_step(step, self.state)
+                if extras:
+                    self.metrics_log.append({"step": step, **extras})
             step += 1
             if cfg.ckpt_every and step % cfg.ckpt_every == 0:
                 self._ckpt.save(step, self.state)

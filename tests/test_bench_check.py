@@ -16,8 +16,8 @@ import pytest
 
 from benchmarks import report
 from benchmarks.check import (check_engine, check_file, check_kernels,
-                              check_retrieval, check_serving,
-                              infer_bench, main)
+                              check_quality, check_retrieval,
+                              check_serving, infer_bench, main)
 
 GOOD_KERNELS = {"heads": {"naive": {}, "tiled": {}, "sparton-jax": {},
                           "sparton-kernel": {}}}
@@ -54,8 +54,9 @@ GOOD_SERVING = {
                degrade_name_end="aggressive"),
         _phase("recovery"),
     ],
+    "quality_metric": "ndcg@10",
     "degrade_quality": {"exact": 1.0, "pruned": 1.0,
-                        "aggressive": 0.52, "minimal": 0.4},
+                        "aggressive": 0.98, "minimal": 0.91},
     "faults": {"submitted": 234, "served": 205, "shed": 23,
                "failed": 6, "lost": 0, "poisoned": 6,
                "poisoned_failed": 6, "failed_outside_poison": 0,
@@ -64,11 +65,38 @@ GOOD_SERVING = {
 }
 
 
+def _q_method(ndcg=1.0, mrr=1.0):
+    return {"mrr@10": mrr, "ndcg@10": ndcg, "recall@10": 0.83,
+            "success@10": 1.0}
+
+
+GOOD_QUALITY = {
+    "quality_metric": "ndcg@10",
+    "method_quality": {
+        "exact": _q_method(), "pruned": _q_method(),
+        "quantized": _q_method(), "term_sharded": _q_method(),
+        "doc_sharded": _q_method(),
+        "aggressive": _q_method(ndcg=0.97, mrr=0.95),
+    },
+    "ladder_quality": {"exact": 1.0, "pruned": 1.0,
+                       "aggressive": 0.977, "minimal": 0.923},
+    "rep_topk_sweep": {"8": {"ndcg@10": 0.9}, "16": {"ndcg@10": 0.95},
+                       "32": {"ndcg@10": 1.0}, "64": {"ndcg@10": 1.0}},
+    "trained_vs_init": {
+        "steps": 250, "loss_first": 20.6, "loss_last": 8.1,
+        "init": {"mrr@10": 0.27, "ndcg@10": 0.38},
+        "trained": {"mrr@10": 0.36, "ndcg@10": 0.46},
+        "delta": {"mrr@10": 0.09, "ndcg@10": 0.08},
+    },
+}
+
+
 def test_good_records_pass():
     assert check_kernels(GOOD_KERNELS) == []
     assert check_retrieval(GOOD_RETRIEVAL) == []
     assert check_engine(GOOD_ENGINE) == []
     assert check_serving(GOOD_SERVING) == []
+    assert check_quality(GOOD_QUALITY) == []
 
 
 def test_kernels_missing_head_fails():
@@ -128,6 +156,9 @@ def _phases(d):
      "bought no capacity"),
     (lambda d: _phases(d)["recovery"].update(
         degrade_name_end="pruned"), "ended degraded"),
+    (lambda d: d.pop("quality_metric"), "quality_metric"),
+    (lambda d: d.update(quality_metric="topk_overlap"),
+     "quality_metric"),
     (lambda d: d["degrade_quality"].pop("minimal"), "missing rungs"),
     (lambda d: d["degrade_quality"].update(exact=0.9), "!= 1.0"),
     (lambda d: d["degrade_quality"].update(aggressive=1.1),
@@ -149,9 +180,57 @@ def test_serving_gate_failures(mutate, needle):
     assert any(needle in e for e in errs), (needle, errs)
 
 
+@pytest.mark.parametrize("mutate,needle", [
+    (lambda d: d.update(quality_metric="topk_overlap"),
+     "quality_metric"),
+    (lambda d: d["method_quality"].pop("quantized"),
+     "method_quality missing"),
+    (lambda d: d["method_quality"]["exact"].update({"ndcg@10": 0.99}),
+     "perfectly recoverable"),
+    (lambda d: d["method_quality"]["exact"].update({"mrr@10": 0.9}),
+     "perfectly recoverable"),
+    (lambda d: d["method_quality"]["quantized"].update(
+        {"ndcg@10": 0.98}), "effectiveness loss"),
+    (lambda d: d["method_quality"]["pruned"].update({"mrr@10": 0.99}),
+     "effectiveness loss"),
+    (lambda d: d["ladder_quality"].pop("aggressive"),
+     "ladder_quality missing"),
+    (lambda d: d["ladder_quality"].update(exact=0.99), "!= 1.0"),
+    (lambda d: d["ladder_quality"].update(minimal=0.99),
+     "not monotone"),
+    (lambda d: d["ladder_quality"].update(minimal=0.0), "not > 0"),
+    (lambda d: d.update(rep_topk_sweep={}), "rep_topk_sweep"),
+    (lambda d: d["rep_topk_sweep"]["16"].update({"ndcg@10": 0.85}),
+     "not non-decreasing"),
+    (lambda d: d["rep_topk_sweep"]["64"].update({"ndcg@10": 0.97}),
+     "recover exact"),
+    (lambda d: d["trained_vs_init"]["delta"].update({"mrr@10": 0.004}),
+     "did not beat"),
+    (lambda d: d["trained_vs_init"]["delta"].update(
+        {"ndcg@10": -0.02}), "did not beat"),
+    (lambda d: d["trained_vs_init"].update(loss_last=25.0),
+     "loss did not fall"),
+])
+def test_quality_gate_failures(mutate, needle):
+    bad = copy.deepcopy(GOOD_QUALITY)
+    mutate(bad)
+    errs = check_quality(bad)
+    assert any(needle in e for e in errs), (needle, errs)
+
+
+def test_quality_gate_aggressive_margin_may_trade():
+    """The aggressive prune margin is allowed to lose quality — only
+    the nominally lossless methods are held to exact."""
+    rec = copy.deepcopy(GOOD_QUALITY)
+    rec["method_quality"]["aggressive"].update(
+        {"ndcg@10": 0.7, "mrr@10": 0.6})
+    assert check_quality(rec) == []
+
+
 def test_infer_bench_and_check_file(tmp_path):
     assert infer_bench("BENCH_kernels.json") == "kernels"
     assert infer_bench("BENCH_serving-20260809-abc.json") == "serving"
+    assert infer_bench("BENCH_quality-20260809-abc.json") == "quality"
     assert infer_bench("a/b/BENCH_engine-20260801-abc-77.json") == \
         "engine"
     with pytest.raises(ValueError, match="cannot infer"):
@@ -212,8 +291,19 @@ def test_bench_metrics_flattens_serving(tmp_path):
     assert m["serving/overload/sustained_qps"] == 390.0
     assert m["serving/overload/shed_rate"] == 0.22
     assert m["serving/warm/p99_ms"] == 27.0
-    assert m["serving/quality/minimal"] == 0.4
+    assert m["serving/quality/minimal"] == 0.91
     assert m["serving/faults/lost"] == 0
+
+
+def test_bench_metrics_flattens_quality(tmp_path):
+    p = tmp_path / "BENCH_quality.json"
+    p.write_text(json.dumps(GOOD_QUALITY))
+    m = report._bench_metrics(str(p))
+    assert m["quality/method/aggressive"] == 0.97
+    assert m["quality/ladder/minimal"] == 0.923
+    assert m["quality/rep_topk/w16"] == 0.95
+    assert m["quality/train_delta/mrr@10"] == 0.09
+    assert m["quality/train_delta/ndcg@10"] == 0.08
 
 
 def test_trend_table_with_run_id_keys(tmp_path):

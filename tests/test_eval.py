@@ -1,0 +1,306 @@
+"""Eval subsystem: ranking metrics (reference + batched JAX parity),
+Qrels containers, and the end-to-end evaluate_retrieval harness.
+
+The reference implementations are pinned against hand-computed
+values; the batched path is pinned against the references on random
+instances (so a broadcast bug can't hide behind a symmetric formula);
+properties (ideal ranking, irrelevant-permutation invariance, recall
+monotonicity) run under the hypothesis stub.
+"""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.eval import (BATCHED, METRIC_NAMES, MethodSpec, Qrels,
+                        REFERENCE, compute_metrics, encode_reps,
+                        evaluate_retrieval, mrr_ref, ndcg_ref,
+                        ranked_grades, recall_ref, success_ref)
+
+# ---------------------------------------------------------------------------
+# reference metrics: hand-computed values
+# ---------------------------------------------------------------------------
+
+# query with graded judgments: doc 3 grade 2, doc 7 grade 1, doc 9
+# grade 3 (the most relevant), docs 0/5 unjudged
+RELS = {3: 2.0, 7: 1.0, 9: 3.0}
+
+
+def test_mrr_hand_computed():
+    assert mrr_ref([0, 5, 3, 9], RELS, 10) == pytest.approx(1 / 3)
+    assert mrr_ref([9, 0, 5, 3], RELS, 10) == 1.0
+    assert mrr_ref([0, 5, 3, 9], RELS, 2) == 0.0      # first hit at 3
+    assert mrr_ref([0, 5], RELS, 10) == 0.0
+    assert mrr_ref([-1, 9], RELS, 10) == 0.5          # pad not a match
+
+
+def test_ndcg_hand_computed():
+    # ranked [9, 3, 7]: dcg = 7/log2(2) + 3/log2(3) + 1/log2(4)
+    dcg = 7.0 + 3.0 / math.log2(3) + 0.5
+    assert ndcg_ref([9, 3, 7], RELS, 10) == pytest.approx(1.0)
+    # worst relevant order [7, 3, 9]
+    got = 1.0 + 3.0 / math.log2(3) + 7.0 / 2.0
+    assert ndcg_ref([7, 3, 9], RELS, 10) == pytest.approx(got / dcg)
+    # unjudged docs at the top push gains to deeper discounts
+    deep = 7.0 / math.log2(3) + 3.0 / 2.0 + 1.0 / math.log2(5)
+    assert ndcg_ref([0, 9, 3, 7], RELS, 10) == pytest.approx(deep / dcg)
+    assert ndcg_ref([0, 5], RELS, 10) == 0.0
+    assert ndcg_ref([9], {}, 10) == 0.0               # nothing judged
+
+
+def test_recall_success_hand_computed():
+    assert recall_ref([9, 0, 3], RELS, 10) == pytest.approx(2 / 3)
+    assert recall_ref([9, 0, 3], RELS, 1) == pytest.approx(1 / 3)
+    assert recall_ref([0, 5], RELS, 10) == 0.0
+    assert recall_ref([9], {}, 10) == 0.0
+    assert success_ref([0, 5, 7], RELS, 10) == 1.0
+    assert success_ref([0, 5], RELS, 10) == 0.0
+
+
+def test_negative_grade_is_not_relevant():
+    rels = {3: -1.0, 7: 2.0}
+    assert mrr_ref([3, 7], rels, 10) == 0.5
+    assert recall_ref([3], rels, 10) == 0.0
+    assert ndcg_ref([3, 7], rels, 10) == pytest.approx(
+        (3.0 / math.log2(3)) / 3.0)
+
+
+# ---------------------------------------------------------------------------
+# batched JAX path: parity with the references
+# ---------------------------------------------------------------------------
+
+def _random_instance(rng, n_docs=30, b=6, k=8, r=5):
+    ranked = np.stack([rng.permutation(n_docs)[:k] for _ in range(b)])
+    ranked[rng.random(ranked.shape) < 0.15] = -1      # padding holes
+    qrels = {}
+    for q in range(b):
+        docs = rng.permutation(n_docs)[:rng.integers(0, r + 1)]
+        qrels[q] = {int(d): float(rng.integers(1, 4)) for d in docs}
+    return ranked, Qrels(qrels)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), k=st.integers(1, 8))
+def test_batched_matches_reference(seed, k):
+    rng = np.random.default_rng(seed)
+    ranked, qrels = _random_instance(rng)
+    rel_ids, rel_grades = qrels.to_arrays()
+    for name in METRIC_NAMES:
+        got = np.asarray(BATCHED[name](ranked, rel_ids, rel_grades,
+                                       k=k))
+        want = [REFERENCE[name](ranked[q], qrels.relevant(q), k)
+                for q in range(ranked.shape[0])]
+        np.testing.assert_allclose(got, want, atol=1e-5,
+                                   err_msg=f"{name}@{k} seed={seed}")
+
+
+def test_ranked_grades_broadcast():
+    ranked = np.array([[9, -1, 3], [7, 7, 0]])
+    rel_ids = np.array([[3, 9], [7, -1]])
+    rel_grades = np.array([[2.0, 3.0], [1.0, 0.0]])
+    np.testing.assert_allclose(
+        np.asarray(ranked_grades(ranked, rel_ids, rel_grades)),
+        [[3.0, 0.0, 2.0], [1.0, 1.0, 0.0]])
+
+
+# ---------------------------------------------------------------------------
+# metric properties (hypothesis stub)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_property_ideal_ranking_is_perfect(seed):
+    """Relevant docs ranked by descending grade ⇒ nDCG = MRR = 1."""
+    rng = np.random.default_rng(seed)
+    docs = rng.permutation(50)[:rng.integers(1, 8)]
+    rels = {int(d): float(g) for d, g in
+            zip(docs, rng.integers(1, 5, size=docs.size))}
+    ideal = sorted(rels, key=rels.get, reverse=True)
+    assert ndcg_ref(ideal, rels, 10) == pytest.approx(1.0)
+    assert mrr_ref(ideal, rels, 10) == 1.0
+    assert recall_ref(ideal, rels, 10) == 1.0
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_property_irrelevant_permutation_invariance(seed):
+    """Shuffling docs *below* every relevant one changes nothing."""
+    rng = np.random.default_rng(seed)
+    rels = {3: 2.0, 8: 1.0}
+    tail = list(rng.permutation([10, 11, 12, 13, 14]))
+    a = [3, 8] + [10, 11, 12, 13, 14]
+    b = [3, 8] + [int(t) for t in tail]
+    for name in METRIC_NAMES:
+        assert REFERENCE[name](a, rels, 7) == pytest.approx(
+            REFERENCE[name](b, rels, 7))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_property_recall_monotone_in_k(seed):
+    rng = np.random.default_rng(seed)
+    ranked, qrels = _random_instance(rng, b=1)
+    rels = qrels.relevant(0)
+    vals = [recall_ref(ranked[0], rels, k) for k in range(1, 9)]
+    assert all(a <= b + 1e-12 for a, b in zip(vals, vals[1:]))
+
+
+# ---------------------------------------------------------------------------
+# Qrels container
+# ---------------------------------------------------------------------------
+
+def test_qrels_from_triples_keeps_highest_grade():
+    q = Qrels.from_triples([(0, 5, 1.0), (0, 5, 3.0), (1, 2, 2.0),
+                            (0, 5, 2.0)])
+    assert q.grade(0, 5) == 3.0
+    assert q.grade(1, 2) == 2.0
+    assert q.grade(1, 5) == 0.0
+    assert q.query_ids == [0, 1]
+    assert q.n_judged == 2
+    # (M, 3) float array form (what lsr_impact_corpus emits)
+    arr = np.array([[0, 3, 2.0], [2, 4, 1.0]], np.float32)
+    q2 = Qrels.from_triples(arr)
+    assert q2.grade(0, 3) == 2.0 and q2.grade(2, 4) == 1.0
+
+
+def test_qrels_paired():
+    q = Qrels.paired(3, doc_ids=[10, 20, 30], grade=2.0)
+    assert q.relevant(1) == {20: 2.0}
+    assert q.max_relevant == 1
+    with pytest.raises(ValueError, match="doc ids"):
+        Qrels.paired(3, doc_ids=[1, 2])
+
+
+def test_qrels_remap_docs():
+    q = Qrels({0: {5: 1.0, 6: 2.0}})
+    r = q.remap_docs({5: 50, 6: 60})
+    assert r.relevant(0) == {50: 1.0, 60: 2.0}
+    with pytest.raises(KeyError, match="no entry"):
+        q.remap_docs({5: 50})
+    dropped = q.remap_docs({5: 50}, strict=False)
+    assert dropped.relevant(0) == {50: 1.0}
+
+
+def test_qrels_to_arrays_padding():
+    q = Qrels({0: {3: 2.0}, 4: {1: 1.0, 2: 3.0}})
+    ids, grades = q.to_arrays()
+    assert ids.shape == (2, 2)
+    np.testing.assert_array_equal(ids, [[3, -1], [1, 2]])
+    np.testing.assert_allclose(grades, [[2.0, 0.0], [1.0, 3.0]])
+    # explicit query order incl. an unjudged query
+    ids, grades = q.to_arrays([4, 7], width=3)
+    np.testing.assert_array_equal(ids, [[1, 2, -1], [-1, -1, -1]])
+    with pytest.raises(ValueError, match="width"):
+        q.to_arrays([4], width=1)
+
+
+def test_compute_metrics_row_alignment():
+    qrels = Qrels.paired(2)
+    ranked = np.array([[0, 5], [1, 5], [9, 9]])
+    with pytest.raises(ValueError, match="ranking rows"):
+        compute_metrics(ranked, qrels)
+    out = compute_metrics(ranked[:2], qrels, ks=(1, 2))
+    assert out["mrr@1"] == 1.0 and out["mrr@2"] == 1.0
+    # reversed alignment: query 0 scored against qrels query 1
+    out = compute_metrics(ranked[:2], qrels, ks=(2,),
+                          query_ids=[1, 0])
+    assert out["mrr@2"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# harness: encode → index → search → score
+# ---------------------------------------------------------------------------
+
+def test_evaluate_retrieval_impact_corpus_methods_agree():
+    from repro.data.synthetic import lsr_impact_corpus
+
+    corpus = lsr_impact_corpus(n_docs=96, vocab=1024, doc_nnz=32,
+                               n_queries=8, q_nnz=26, graded=12,
+                               seed=3)
+    qrels = Qrels.from_triples(corpus["qrels"])
+    methods = (MethodSpec("exact"),
+               MethodSpec("pruned", engine={"keep_forward": True},
+                          search={"method": "pruned",
+                                  "prune_margin": 0.0}),
+               MethodSpec("quantized", engine={"quantize": True}),
+               MethodSpec("doc_sharded", doc_shards=3))
+    res = evaluate_retrieval(None, corpus, qrels, methods=methods,
+                             ks=(10,), metrics=("mrr", "ndcg"))
+    assert res["exact"]["ndcg@10"] == pytest.approx(1.0)
+    assert res["exact"]["mrr@10"] == pytest.approx(1.0)
+    for name in ("pruned", "quantized", "doc_sharded"):
+        for m in ("mrr@10", "ndcg@10"):
+            assert res[name][m] == pytest.approx(res["exact"][m],
+                                                 abs=1e-6), name
+
+
+def test_evaluate_retrieval_token_corpus_and_external_ids():
+    """A toy sparse 'encoder' (token histogram) + shifted external doc
+    ids: the harness must key rankings by the ids qrels use."""
+    import jax.numpy as jnp
+
+    vocab = 64
+
+    def encoder(tokens, mask):
+        oh = jnp.zeros((tokens.shape[0], vocab))
+        rows = jnp.repeat(jnp.arange(tokens.shape[0]),
+                          tokens.shape[1])
+        oh = oh.at[rows, tokens.reshape(-1)].add(mask.reshape(-1))
+        return oh
+
+    rng = np.random.default_rng(0)
+    n_docs, n_q, s = 12, 4, 6
+    doc_tokens = np.stack([rng.permutation(vocab)[:s]
+                           for _ in range(n_docs)]).astype(np.int32)
+    q_tokens = doc_tokens[:n_q]          # query q == doc q's tokens
+    corpus = {"doc_tokens": doc_tokens, "q_tokens": q_tokens,
+              "vocab_size": vocab}
+    doc_ids = 100 + np.arange(n_docs)
+    qrels = Qrels.paired(n_q, doc_ids=doc_ids[:n_q])
+    res = evaluate_retrieval(encoder, corpus, qrels,
+                             methods=(MethodSpec("exact"),), ks=(3,),
+                             doc_ids=doc_ids, batch=5, rep_topk=8)
+    assert res["exact"]["mrr@3"] == pytest.approx(1.0)
+
+
+def test_encode_reps_chunking_single_trace():
+    """Chunk padding must be trimmed and every chunk share a shape."""
+    shapes = []
+
+    def encoder(tokens, mask):
+        shapes.append(tuple(tokens.shape))
+        return np.eye(tokens.shape[0], 32, dtype=np.float32) * 2.0
+
+    reps = encode_reps(encoder, np.zeros((11, 4), np.int32), batch=4,
+                       rep_topk=8)
+    assert reps.values.shape[0] == 11
+    assert set(shapes) == {(4, 4)}       # one trace shape, padded tail
+
+
+def test_evaluate_retrieval_rejects_bad_corpus():
+    with pytest.raises(ValueError, match="corpus must carry"):
+        evaluate_retrieval(None, {"docs": np.ones((2, 4))},
+                           Qrels.paired(1))
+    with pytest.raises(ValueError, match="needs an encoder"):
+        evaluate_retrieval(None, {"doc_tokens": np.ones((2, 4)),
+                                  "q_tokens": np.ones((1, 4))},
+                           Qrels.paired(1))
+
+
+def test_synthetic_corpus_qrels_grades():
+    """lsr_impact_corpus emits (query, doc, grade) triples matching
+    its planted geometry: graded docs per query, top grade first."""
+    from repro.data.synthetic import lsr_impact_corpus
+
+    c = lsr_impact_corpus(n_docs=40, vocab=256, doc_nnz=16,
+                          n_queries=3, q_nnz=12, graded=4, seed=0)
+    q = Qrels.from_triples(c["qrels"])
+    assert q.n_queries == 3
+    for b in range(3):
+        rels = q.relevant(b)
+        assert len(rels) == 4
+        assert sorted(rels.values(), reverse=True) == [4.0, 3.0, 2.0,
+                                                       1.0]
+        assert rels[b * 4] == 4.0        # doc b*graded+i has grade g-i

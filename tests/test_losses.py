@@ -6,6 +6,7 @@ import numpy as np
 from hypothesis import given, settings, strategies as st
 
 from repro.losses.contrastive import (flops_regularizer,
+                                      gathered_infonce,
                                       infonce_from_scores, infonce_loss,
                                       l1_regularizer, margin_mse_loss,
                                       splade_loss)
@@ -56,6 +57,33 @@ def test_splade_loss_composition():
     base = float(infonce_loss(q, d))
     full = float(splade_loss(q, d, lambda_q=1.0, lambda_d=1.0))
     assert full > base  # regularizers add
+
+
+def test_gathered_infonce_no_axes_matches_local():
+    ks = jax.random.split(jax.random.PRNGKey(2), 2)
+    q = jax.random.normal(ks[0], (6, 32))
+    d = jax.random.normal(ks[1], (6, 32))
+    np.testing.assert_allclose(float(gathered_infonce(q, d)),
+                               float(infonce_loss(q, d)), atol=1e-6)
+
+
+def test_gathered_infonce_single_device_axis_matches_local():
+    """Under a size-1 shard_map data axis the gathered negatives are
+    exactly the local batch — loss must equal plain infonce."""
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.compat import shard_map
+
+    ks = jax.random.split(jax.random.PRNGKey(3), 2)
+    q = jax.random.normal(ks[0], (8, 16))
+    d = jax.random.normal(ks[1], (8, 16))
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    fn = shard_map(
+        lambda a, b: gathered_infonce(a, b, axis_names=("data",)),
+        mesh=mesh, in_specs=(P("data"), P("data")), out_specs=P(),
+        check_vma=False)
+    np.testing.assert_allclose(float(fn(q, d)),
+                               float(infonce_loss(q, d)), atol=1e-5)
 
 
 @settings(max_examples=15, deadline=None)

@@ -55,6 +55,49 @@ def test_runner_runs_and_checkpoints(tmp_path):
     assert latest_step(str(tmp_path)) == 10
 
 
+def test_runner_on_step_hook(tmp_path):
+    """on_step fires after every successful step with the fresh state;
+    a non-empty returned dict lands in metrics_log as its own entry."""
+    clock = FakeClock()
+    seen = []
+
+    def hook(step, state):
+        seen.append((step, int(state["n"])))
+        return {"eval_x": step * 10} if step % 3 == 0 else None
+
+    runner = FaultTolerantRunner(
+        _counting_step([0.1] * 100, clock), {"n": jnp.array(0)},
+        _batches(),
+        config=RunnerConfig(ckpt_dir=str(tmp_path), ckpt_every=0,
+                            max_steps=6, log_every=0),
+        on_step=hook, clock=clock)
+    runner.run()
+    # hook saw post-step state: after step i the counter is i+1
+    assert seen == [(i, i + 1) for i in range(6)]
+    assert runner.metrics_log == [{"step": 0, "eval_x": 0},
+                                  {"step": 3, "eval_x": 30}]
+
+
+def test_runner_on_step_skipped_on_straggler(tmp_path):
+    """Straggled (skipped) steps must not fire the hook."""
+    clock = FakeClock()
+    fired = []
+    # steps 0/1 fast (build EWMA), step 2 slow twice (retry + skip)
+    durations = [0.1, 0.1, 9.0, 9.0] + [0.1] * 10
+    runner = FaultTolerantRunner(
+        _counting_step(durations, clock), {"n": jnp.array(0)},
+        _batches(),
+        config=RunnerConfig(
+            ckpt_dir=str(tmp_path), ckpt_every=0, max_steps=5,
+            log_every=0,
+            straggler=StragglerPolicy(slack=2.0, min_deadline_s=0.05)),
+        on_step=lambda s, st: fired.append(s),
+        clock=clock)
+    runner.run()
+    assert runner.skipped_steps == [2]
+    assert fired == [0, 1, 3, 4]
+
+
 def test_runner_resume(tmp_path):
     clock = FakeClock()
     cfg = RunnerConfig(ckpt_dir=str(tmp_path), ckpt_every=5, max_steps=5)

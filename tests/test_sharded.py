@@ -78,6 +78,38 @@ _SCRIPT = textwrap.dedent("""
                                atol=1e-4, rtol=1e-5)
     print("OK sharded flops")
 
+    # ---- sharded l1 reg == plain --------------------------------------
+    from repro.core.sharded import sharded_l1_reg, sharded_row_dots
+    from repro.losses.contrastive import l1_regularizer, gathered_infonce
+    l1 = sharded_l1_reg(mesh, batch_axes=("data",))
+    with set_mesh(mesh):
+        l1_sharded = jax.jit(l1)(jnp.abs(yq))
+    np.testing.assert_allclose(float(l1_sharded),
+                               float(l1_regularizer(jnp.abs(yq))),
+                               atol=1e-4, rtol=1e-5)
+    print("OK sharded l1")
+
+    # ---- sharded row dots == per-row einsum ---------------------------
+    rd = sharded_row_dots(mesh, batch_axes=("data",))
+    with set_mesh(mesh):
+        dots = jax.jit(rd)(yq, yd)
+    np.testing.assert_allclose(np.asarray(dots),
+                               np.asarray(jnp.einsum("bv,bv->b", yq, yd)),
+                               atol=1e-4, rtol=1e-5)
+    print("OK sharded row dots")
+
+    # ---- gathered infonce over the data axis == global infonce --------
+    from repro.compat import shard_map as _shard_map
+    gi = _shard_map(
+        lambda a, c: gathered_infonce(a, c, axis_names=("data",)),
+        mesh=mesh, in_specs=(P("data", None), P("data", None)),
+        out_specs=P(), check_vma=False)
+    with set_mesh(mesh):
+        l_gathered = jax.jit(gi)(yq, yd)
+    np.testing.assert_allclose(float(l_gathered),
+                               float(infonce_loss(yq, yd)), atol=1e-5)
+    print("OK gathered infonce")
+
     # ---- expert-parallel MoE == local MoE -----------------------------
     from repro.models.moe import moe_ffn, moe_ffn_local_experts
     from repro.compat import shard_map
