@@ -40,6 +40,34 @@ def compiled_peak_bytes(fn: Callable, *abstract_args) -> float:
                  + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
 
 
+def scoring_peak_bytes(method: str, *, B: int, N: int, k: int,
+                       Q: int = 0, L: int = 0) -> int:
+    """Analytic peak bytes of one scoring call's *intermediates*.
+
+    The quantity the fused-kernel gate compares (corpus bytes are
+    reported separately): every lane of the gathered posting windows
+    costs 8 bytes (f32 weight + i32 doc id, or i32 packed byte + i32
+    gap for the u4 variant), the unfused index paths then materialize
+    the dense ``(B, N)`` f32 score matrix, and every path emits the
+    ``(B, k)`` winners (f32 + i32). The fused and streaming paths'
+    peaks are the ones with no N term — the whole point of the kernel
+    (DESIGN.md §12). ``Q``/``L`` are the query width and the index's
+    ``max_postings`` (0 for the dense-corpus paths, which gather no
+    windows).
+    """
+    window = B * Q * L * 8
+    topk = B * k * 8
+    if method == "dense":
+        return B * N * 4 + topk
+    if method in ("impact", "pruned", "quantized"):
+        return window + B * N * 4 + topk
+    if method in ("fused", "fused_quantized"):
+        return window + topk
+    if method == "streaming":
+        return topk
+    raise ValueError(f"no scoring-memory model for method {method!r}")
+
+
 def csv_print(header: Iterable[str], rows: List[Iterable]) -> None:
     print(",".join(str(h) for h in header))
     for r in rows:

@@ -5,9 +5,12 @@ corpus (``repro.data.synthetic.lsr_impact_corpus``).
 Four comparisons behind ``BENCH_engine.json``:
 
 * ``methods`` — median ms for ``impact`` (exact segment-sums),
-  ``pruned`` (two-tier MaxScore), ``quantized`` (on-the-fly dequant)
-  and ``streaming`` (the dense Pallas kernel over the densified
-  corpus, the PR-3 reference point);
+  ``pruned`` (two-tier MaxScore), ``quantized`` (on-the-fly dequant),
+  ``fused`` / ``fused_quantized`` (the kernels/impact_score fused
+  Pallas paths — no (B, N) matrix, in-kernel u4 dequant for the
+  latter) and ``streaming`` (the dense Pallas kernel over the
+  densified corpus, the PR-3 reference point), each with its analytic
+  peak scoring bytes;
 * ``quantization`` — raw vs compressed index bytes; the acceptance
   bar is ratio >= 4x at identical top-k ids;
 * ``pruned`` — id parity vs impact at the safe margin plus the
@@ -33,7 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks._common import time_fn
+from benchmarks._common import scoring_peak_bytes, time_fn
 from repro.data.synthetic import lsr_impact_corpus
 from repro.retrieval import (build_inverted_index, pruned_retrieve,
                              quantize_index, retrieve, shard_index,
@@ -75,26 +78,45 @@ def run(smoke: bool = False, json_path: str = None):
         "methods": {},
     }
 
+    mem = dict(B=p["n_queries"], N=p["n_docs"], k=k, Q=p["q_nnz"])
     methods = {
         "impact": (lambda: retrieve(q_rep, raw, k, method="impact"),
-                   raw.memory_bytes()),
+                   raw.memory_bytes(),
+                   scoring_peak_bytes("impact", L=raw.max_postings,
+                                      **mem)),
+        "fused": (lambda: retrieve(q_rep, raw, k, method="fused",
+                                   interpret=interpret),
+                  raw.memory_bytes(),
+                  scoring_peak_bytes("fused", L=raw.max_postings,
+                                     **mem)),
         "pruned": (lambda: retrieve(q_rep, engine, k, method="pruned"),
-                   engine.memory_bytes()),
+                   engine.memory_bytes(),
+                   scoring_peak_bytes("pruned", L=engine.max_postings,
+                                      **mem)),
         "quantized": (lambda: retrieve(q_rep, quant, k,
                                        method="quantized"),
-                      quant.memory_bytes()),
+                      quant.memory_bytes(),
+                      scoring_peak_bytes("quantized",
+                                         L=quant.max_postings, **mem)),
+        "fused_quantized": (lambda: retrieve(
+            q_rep, quant, k, method="fused", interpret=interpret),
+            quant.memory_bytes(),
+            scoring_peak_bytes("fused_quantized",
+                               L=quant.max_postings, **mem)),
         "streaming": (lambda: retrieve(
             q_rep, d_dense, k, method="streaming",
             block_b=min(8, p["n_queries"]), block_n=p["block_n"],
-            interpret=interpret), int(d_dense.nbytes)),
+            interpret=interpret), int(d_dense.nbytes),
+            scoring_peak_bytes("streaming", L=0, **mem)),
     }
     ids = {}
-    for name, (fn, corpus_bytes) in methods.items():
+    for name, (fn, corpus_bytes, peak_bytes) in methods.items():
         t = time_fn(fn, iters=iters)
         _, idx = fn()
         ids[name] = np.asarray(idx)
         record["methods"][name] = {"median_ms": round(t, 3),
-                                   "corpus_bytes": int(corpus_bytes)}
+                                   "corpus_bytes": int(corpus_bytes),
+                                   "peak_scoring_bytes": int(peak_bytes)}
 
     # quantization: the >= 4x acceptance bar at identical top-k ids
     ratio = raw.memory_bytes() / quant.memory_bytes()
@@ -150,17 +172,28 @@ def run(smoke: bool = False, json_path: str = None):
                                                   np.asarray(tid))),
         }
 
-    record["parity"] = {"topk_ids_equal": bool(
-        record["quantization"]["topk_ids_equal"]
-        and record["pruned"]["topk_ids_equal"]
-        and all(v["topk_ids_equal"]
-                for v in record["sharded"].values())
-        and all(v["topk_ids_equal"]
-                for v in record["term_sharded"].values()))}
+    # fused parity: raw-index fused vs exact impact, and the in-kernel
+    # dequant vs the unfused dequantizing scorer (same compressed
+    # index, so the ids must match bit-exactly, not just within
+    # quantization tolerance)
+    fused_agree = bool(
+        np.array_equal(ids["impact"], ids["fused"])
+        and np.array_equal(ids["quantized"], ids["fused_quantized"]))
+    record["parity"] = {
+        "topk_ids_equal": bool(
+            record["quantization"]["topk_ids_equal"]
+            and record["pruned"]["topk_ids_equal"]
+            and all(v["topk_ids_equal"]
+                    for v in record["sharded"].values())
+            and all(v["topk_ids_equal"]
+                    for v in record["term_sharded"].values())),
+        "fused_ids_equal": fused_agree,
+    }
 
-    print("method,median_ms,corpus_bytes")
+    print("method,median_ms,corpus_bytes,peak_scoring_bytes")
     for name, rec in record["methods"].items():
-        print(f"{name},{rec['median_ms']},{rec['corpus_bytes']}")
+        print(f"{name},{rec['median_ms']},{rec['corpus_bytes']},"
+              f"{rec['peak_scoring_bytes']}")
     print(f"quantized/raw bytes: 1/{ratio:.2f} "
           f"(ids equal: {record['quantization']['topk_ids_equal']})")
     print(f"pruned ids equal: {record['pruned']['topk_ids_equal']} "
@@ -175,6 +208,8 @@ def run(smoke: bool = False, json_path: str = None):
               f"{rec['topk_ids_equal']}/{trec['topk_ids_equal']})")
     print(f"top-k ids identical across engine paths: "
           f"{record['parity']['topk_ids_equal']}")
+    print(f"fused ids identical (raw vs impact, u4 vs quantized): "
+          f"{fused_agree}")
     if json_path:
         with open(json_path, "w") as f:
             json.dump(record, f, indent=2, sort_keys=True)

@@ -10,14 +10,21 @@ densification), so the comparison isolates the scoring machinery:
 * ``streaming`` — the ``kernels.topk_score`` Pallas kernel (same dense
                   corpus, but the (B, N) score matrix never exists);
 * ``impact``    — inverted-index segment-sums (corpus bytes = the
-                  postings, O(total nnz)).
+                  postings, O(total nnz));
+* ``fused``     — the ``kernels.impact_score`` fused Pallas kernel
+                  over the same inverted index: posting windows scored
+                  and top-k-merged tile-by-tile, no (B, N) matrix
+                  (DESIGN.md §12).
 
 Emits ``BENCH_retrieval.json`` with per-method median ms + corpus
-bytes and the cross-method top-k agreement flag, tracked by CI
-alongside ``BENCH_kernels.json``. ``--smoke`` (or ``BENCH_SMOKE=1``)
-shrinks the workload for CI latency; off-TPU the streaming kernel runs
-through the Pallas interpreter, so timings order implementations
-rather than predict hardware (DESIGN.md §5 caveat applies).
+bytes + analytic peak *scoring* bytes (``_common.scoring_peak_bytes``
+— the (B, N)-vs-windows comparison the fused gate checks) and the
+cross-method top-k agreement flags, tracked by CI alongside
+``BENCH_kernels.json``. ``--smoke`` (or ``BENCH_SMOKE=1``) shrinks the
+workload for CI latency; off-TPU the Pallas kernels run through the
+interpreter, so timings order implementations rather than predict
+hardware (DESIGN.md §5 caveat applies — ``benchmarks/check.py`` only
+enforces the fused-latency bar on real backends).
 """
 
 from __future__ import annotations
@@ -30,7 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks._common import time_fn
+from benchmarks._common import scoring_peak_bytes, time_fn
 from repro.retrieval import build_inverted_index, retrieve, sparsify_topk
 
 # full-size operating point (CPU-feasible stand-in for the paper-scale
@@ -68,15 +75,24 @@ def run(smoke: bool = False, json_path: str = None):
     k = p["k"]
     interpret = jax.default_backend() != "tpu"
 
+    mem = dict(B=p["batch"], N=p["n_docs"], k=k, Q=p["q_nnz"],
+               L=index.max_postings)
     methods = {
         "dense": (lambda: retrieve(q_dense, d_dense, k, method="dense"),
-                  int(d_dense.nbytes)),
+                  int(d_dense.nbytes),
+                  scoring_peak_bytes("dense", **mem)),
         "streaming": (lambda: retrieve(
             q_dense, d_dense, k, method="streaming",
             block_b=min(8, p["batch"]), block_n=p["block_n"],
-            interpret=interpret), int(d_dense.nbytes)),
+            interpret=interpret), int(d_dense.nbytes),
+            scoring_peak_bytes("streaming", **mem)),
         "impact": (lambda: retrieve(q_rep, index, k, method="impact"),
-                   index.memory_bytes()),
+                   index.memory_bytes(),
+                   scoring_peak_bytes("impact", **mem)),
+        "fused": (lambda: retrieve(q_rep, index, k, method="fused",
+                                   interpret=interpret),
+                  index.memory_bytes(),
+                  scoring_peak_bytes("fused", **mem)),
     }
 
     record = {
@@ -88,25 +104,29 @@ def run(smoke: bool = False, json_path: str = None):
     }
     ids = {}
     rows = []
-    for name, (fn, corpus_bytes) in methods.items():
+    for name, (fn, corpus_bytes, peak_bytes) in methods.items():
         t = time_fn(fn, iters=iters)
         vals, idx = fn()
         ids[name] = np.asarray(idx)
         record["methods"][name] = {
             "median_ms": round(t, 3),
             "corpus_bytes": corpus_bytes,
+            "peak_scoring_bytes": peak_bytes,
         }
-        rows.append((name, round(t, 2), corpus_bytes))
+        rows.append((name, round(t, 2), corpus_bytes, peak_bytes))
 
     agree = bool(
         np.array_equal(ids["dense"], ids["streaming"])
         and np.array_equal(ids["dense"], ids["impact"]))
-    record["parity"] = {"topk_ids_equal": agree}
+    fused_agree = bool(np.array_equal(ids["impact"], ids["fused"]))
+    record["parity"] = {"topk_ids_equal": agree,
+                       "fused_ids_equal": fused_agree}
 
-    print("method,median_ms,corpus_bytes")
+    print("method,median_ms,corpus_bytes,peak_scoring_bytes")
     for r in rows:
         print(",".join(str(x) for x in r))
     print(f"top-k ids identical across methods: {agree}")
+    print(f"fused ids identical to impact: {fused_agree}")
     if json_path:
         with open(json_path, "w") as f:
             json.dump(record, f, indent=2, sort_keys=True)

@@ -7,13 +7,18 @@ diffs. Each bench family has a named check:
 
 * ``kernels``   — the head-implementation set is complete (a missing
                   row means a backend silently fell out of the bench);
-* ``retrieval`` — the three scoring paths ran and their top-k ids
-                  agree (the PR-3 parity acceptance);
-* ``engine``    — the four engine methods ran, pruned/quantized ids
+* ``retrieval`` — the four scoring paths ran and their top-k ids
+                  agree (the PR-3 parity acceptance), and the fused
+                  kernel clears its bars (id parity with impact,
+                  strictly lower analytic peak scoring bytes, and —
+                  on real backends only — latency at-or-below impact);
+* ``engine``    — the six engine methods ran, pruned/quantized ids
                   match impact, the quantized index clears the >= 4x
-                  compression bar, and BOTH sharding axes (doc top-k
+                  compression bar, BOTH sharding axes (doc top-k
                   merge and term partial-sum merge) are id-identical
-                  to the unsharded scorer at 1/2/4 shards;
+                  to the unsharded scorer at 1/2/4 shards, and both
+                  fused rows (raw + in-kernel-dequant) clear the
+                  fused bars against their unfused references;
 * ``serving``   — the traffic simulation survived: non-zero sustained
                   QPS every phase, healthy warm/recovery (no shedding,
                   p99 under the SLO, back to ``exact``), the overload
@@ -49,8 +54,9 @@ import sys
 from typing import Callable, Dict, List
 
 EXPECTED_HEADS = {"naive", "tiled", "sparton-jax", "sparton-kernel"}
-EXPECTED_RETRIEVAL = {"dense", "streaming", "impact"}
-EXPECTED_ENGINE = {"impact", "pruned", "quantized", "streaming"}
+EXPECTED_RETRIEVAL = {"dense", "streaming", "impact", "fused"}
+EXPECTED_ENGINE = {"impact", "fused", "pruned", "quantized",
+                   "fused_quantized", "streaming"}
 EXPECTED_SHARD_COUNTS = {"1", "2", "4"}
 MIN_COMPRESSION_RATIO = 4.0
 EXPECTED_PHASES = ("warm", "overload", "recovery")
@@ -81,6 +87,42 @@ def check_kernels(d: dict) -> List[str]:
     return []
 
 
+def _check_fused(d: dict, pairs) -> List[str]:
+    """Fused-kernel gates shared by the retrieval and engine benches.
+
+    ``pairs`` lists (fused_row, unfused_reference) method names. Three
+    bars per pair: the fused parity flag must hold, the fused path's
+    analytic peak *scoring* bytes must be strictly below the unfused
+    reference's (no (B, N) materialization — the kernel's reason to
+    exist), and on real backends its latency must not exceed the
+    reference's. The latency bar is skipped under the Pallas
+    interpreter (``interpret: true``): interpret-mode timings order
+    implementations, they do not predict hardware (DESIGN.md §5), and
+    a serially-interpreted grid losing to jitted XLA says nothing
+    about the TPU.
+    """
+    errs = []
+    if not d.get("parity", {}).get("fused_ids_equal"):
+        errs.append(f"fused top-k id parity failed: {d.get('parity')}")
+    methods = d.get("methods", {})
+    for fused, ref in pairs:
+        frec, rrec = methods.get(fused, {}), methods.get(ref, {})
+        if not frec or not rrec:
+            continue    # the method-set check reports the missing row
+        fp = frec.get("peak_scoring_bytes")
+        rp = rrec.get("peak_scoring_bytes")
+        if fp is None or not fp < rp:
+            errs.append(f"{fused} peak scoring bytes {fp} not strictly "
+                        f"below {ref}'s {rp} — the (B, N) matrix is "
+                        f"supposed to be gone")
+        if not d.get("interpret", True):
+            ft, rt = frec.get("median_ms"), rrec.get("median_ms")
+            if ft is None or not ft <= rt:
+                errs.append(f"{fused} median {ft}ms above {ref}'s "
+                            f"{rt}ms on a real backend")
+    return errs
+
+
 def check_retrieval(d: dict) -> List[str]:
     errs = []
     methods = set(d.get("methods", {}))
@@ -90,6 +132,7 @@ def check_retrieval(d: dict) -> List[str]:
     if not d.get("parity", {}).get("topk_ids_equal"):
         errs.append(f"retrieval top-k id parity failed: "
                     f"{d.get('parity')}")
+    errs += _check_fused(d, [("fused", "impact")])
     return errs
 
 
@@ -128,6 +171,8 @@ def check_engine(d: dict) -> List[str]:
     if not d.get("parity", {}).get("topk_ids_equal"):
         errs.append(f"engine cross-path parity flag is false: "
                     f"{d.get('parity')}")
+    errs += _check_fused(d, [("fused", "impact"),
+                             ("fused_quantized", "quantized")])
     return errs
 
 

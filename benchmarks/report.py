@@ -93,6 +93,13 @@ def _bench_metrics(path: str) -> dict:
             out[f"{head}/{pss}"] = rec.get("median_ms")
     for m, rec in d.get("methods", {}).items():
         out[f"retrieval/{m}"] = rec.get("median_ms")
+        # the fused-kernel rows carry the analytic scoring-memory
+        # model; trend it in MB next to the latency so a peak
+        # regression (someone reintroducing a (B, N) materialization)
+        # is as visible as a slowdown
+        if rec.get("peak_scoring_bytes") is not None:
+            out[f"retrieval/{m}/peak_mb"] = round(
+                rec["peak_scoring_bytes"] / 1e6, 3)
     if "quantization" in d:
         out["quant/ratio"] = d["quantization"].get("ratio")
     for s, rec in d.get("sharded", {}).items():

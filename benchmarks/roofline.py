@@ -367,14 +367,97 @@ def fused_hbm_estimate(arch_id: str, shape_name: str, mesh) -> float:
     return 0.0
 
 
+# (B, Q, L, N, k) operating points for the fused impact-scorer probe:
+# a serving batch against a CI-sized, a mid, and a paper-scale corpus.
+_IMPACT_PROBE_SHAPES = (
+    (16, 32, 256, 16384, 100),
+    (16, 32, 1024, 131072, 100),
+    (16, 32, 4096, 1 << 20, 100),
+)
+
+
+def impact_probe(shapes=_IMPACT_PROBE_SHAPES) -> list:
+    """Analytic bytes-moved vs FLOPs for the impact scorer, unfused vs
+    fused (kernels/impact_score), per variant.
+
+    The unfused path reads the gathered posting windows, materializes
+    the (B, N) score matrix in HBM (one write + one read back by
+    top_k), and writes (B, k); the u4 variant additionally writes and
+    re-reads the dequantized window. The fused kernel reads the same
+    windows once and writes (B, k) — but pays the one-hot contraction:
+    every posting lane is multiplied against every doc column of its
+    tile, 2*B*W*N_pad MACs of MXU work. The probe makes that trade
+    explicit: fused swaps O(B*N) HBM traffic for O(B*W*N) cheap MXU
+    FLOPs, which wins whenever the unfused path is memory-bound —
+    exactly the Sparton argument on the encode side.
+    """
+    from repro.kernels.autotune import heuristic_impact_blocks
+    from repro.kernels.impact_score import fused_window_bytes
+
+    out = []
+    for B, Q, L, N, k in shapes:
+        W = Q * L
+        topk_out = B * k * 8
+        for variant in ("f32", "u4"):
+            window = fused_window_bytes(B, Q, L, variant)
+            unfused = window + 2 * B * N * 4 + topk_out
+            if variant == "u4":
+                unfused += 2 * B * W * 8   # dequant materialization
+            bn, bw = heuristic_impact_blocks(B, Q, L, N,
+                                             variant=variant)
+            n_pad = -(-N // bn) * bn
+            fused = window + topk_out
+            flops_unfused = 2.0 * B * W + float(B) * N
+            flops_fused = 2.0 * B * W * n_pad
+            for path, byts, flops in (
+                    ("unfused", unfused, flops_unfused),
+                    ("fused", fused, flops_fused)):
+                mem_s = byts / hlo.HBM_BW
+                compute_s = flops / hlo.PEAK_FLOPS
+                out.append({
+                    "probe": "impact_scorer",
+                    "shape": {"B": B, "Q": Q, "L": L, "N": N, "k": k},
+                    "variant": variant,
+                    "path": path,
+                    "blocks": ([bn, bw] if path == "fused" else None),
+                    "hbm_bytes": int(byts),
+                    "flops": flops,
+                    "intensity_flops_per_byte": round(flops / byts, 3),
+                    "roof_memory_s": mem_s,
+                    "roof_compute_s": compute_s,
+                    "roof_bottleneck": ("memory" if mem_s >= compute_s
+                                        else "compute"),
+                })
+    return out
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--dryrun", required=True,
+    ap.add_argument("--dryrun", default=None,
                     help="dry-run json (rolled lowering records)")
     ap.add_argument("--out", required=True)
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--only-arch", default=None)
+    ap.add_argument("--impact-probe", action="store_true",
+                    help="emit the analytic fused-impact-scorer "
+                         "bytes/FLOPs records instead of correcting a "
+                         "dry-run (no mesh, no lowering)")
     args = ap.parse_args(argv)
+
+    if args.impact_probe:
+        recs = impact_probe()
+        with open(args.out, "w") as f:
+            json.dump(recs, f, indent=1)
+        for r in recs:
+            s = r["shape"]
+            print(f"N={s['N']} {r['variant']:>3} {r['path']:>7}: "
+                  f"{r['hbm_bytes'] / 1e6:9.1f} MB, "
+                  f"{r['flops'] / 1e9:9.2f} GFLOP "
+                  f"-> {r['roof_bottleneck']}")
+        print(f"wrote {args.out}")
+        return 0
+    if not args.dryrun:
+        ap.error("--dryrun is required unless --impact-probe is set")
 
     mesh = make_production_mesh(multi_pod=args.multi_pod)
     records = json.load(open(args.dryrun))

@@ -37,12 +37,18 @@ import jax.numpy as jnp
 import numpy as np
 
 Blocks = Tuple[int, int, int]  # (block_b, block_s, block_v)
+ImpactBlocks = Tuple[int, int]  # (block_n, block_w)
 
 # The three Pallas kernels with independently tunable blocks. One joint
 # triple (the legacy scheme) leaves measurable wins on the table at
 # large D: the dH kernel's VMEM is dominated by its (bb, bs, D) scratch
 # while dE's is (bv, D), so their feasible/optimal regions differ.
 KERNELS = ("fwd", "dh", "de")
+# Fused impact-scoring kernel variants (kernels/impact_score.py): raw
+# f32 windows vs in-kernel u4+delta dequant. Tuned separately from the
+# head kernels — different block axes ((block_n, block_w), not a
+# (bb, bs, bv) triple) and a different shape key ("_impact" suffix).
+IMPACT_VARIANTS = ("f32", "u4")
 
 CACHE_ENV = "SPARTON_AUTOTUNE_CACHE"
 DEFAULT_CACHE = os.path.join(
@@ -54,12 +60,16 @@ VMEM_BUDGET_BYTES = 12 * 1024 * 1024
 _BB_CHOICES = (1, 2, 4, 8, 16, 32)
 _BS_CHOICES = (64, 128, 256, 512)
 _BV_CHOICES = (128, 256, 512, 1024, 2048)
+_IMPACT_BN_CHOICES = (128, 256, 512, 1024, 2048, 4096)
+_IMPACT_BW_CHOICES = (128, 256, 512)
 
 # Smallest enumerable triple — the overflow-*minimizing* fallback when
 # no candidate fits the budget (a huge D can make even this overflow,
 # but never by more than any other choice would).
 MIN_BLOCKS: Blocks = (min(_BB_CHOICES), min(_BS_CHOICES),
                       min(_BV_CHOICES))
+MIN_IMPACT_BLOCKS: ImpactBlocks = (min(_IMPACT_BN_CHOICES),
+                                   min(_IMPACT_BW_CHOICES))
 
 # One in-memory cache per JSON file: entries from distinct cache paths
 # must never bleed into each other's saves.
@@ -85,6 +95,22 @@ def shape_key(B: int, S: int, D: int, V: int, dtype, backend: str,
     """
     base = f"B{B}_S{S}_D{D}_V{V}_{jnp.dtype(dtype).name}_{backend}"
     return base if kernel is None else f"{base}_{kernel}"
+
+
+def impact_shape_key(B: int, Q: int, L: int, N: int, variant: str,
+                     backend: str) -> str:
+    """Cache key for the fused impact-scoring kernel.
+
+    Its shape space is (batch, query width, window length, corpus
+    docs) — disjoint from the head kernels' (B, S, D, V) — and the
+    ``_impact`` suffix keeps the two families from ever colliding in
+    one cache file. ``variant`` is "f32" (raw windows) or "u4"
+    (in-kernel dequant).
+    """
+    if variant not in IMPACT_VARIANTS:
+        raise ValueError(f"unknown impact variant {variant!r}; "
+                         f"one of {list(IMPACT_VARIANTS)}")
+    return f"B{B}_Q{Q}_L{L}_N{N}_{variant}_{backend}_impact"
 
 
 def _load(path: str) -> Dict[str, dict]:
@@ -584,3 +610,229 @@ def blocks_for_config(vocab_size: int, d_model: int, batch: int,
                                 dtype=jnp.dtype(dtype), pinned=pinned)
     return get_blocks(batch, seq_len, d_model, vocab_size,
                       dtype=jnp.dtype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# fused impact-scoring kernel (kernels/impact_score.py)
+# ---------------------------------------------------------------------------
+
+def impact_vmem_bytes(blocks: ImpactBlocks, Q: int, L: int,
+                      variant: str = "f32") -> int:
+    """VMEM residency of one fused impact grid step.
+
+    The posting window stays resident across every doc tile of a query
+    (same block index -> no re-fetch, but Pallas still double-buffers
+    it), the per-chunk one-hot tile lives in registers/VMEM during the
+    contraction, and the running top-k merge needs the union working
+    set. Per variant: "f32" ships two (1, W) arrays (f32 weights + i32
+    docs); "u4" ships two (1, Q, L) i32 windows plus five (1, Q, 1)
+    per-term columns and decodes (Q, L) weight/doc planes in-kernel.
+    """
+    bn, bw = blocks
+    f32 = 4
+    w_lanes = Q * max(L, 1)
+    if variant == "f32":
+        resident = 2 * 2 * w_lanes * f32           # w + docs, dbl-buf
+    else:
+        resident = (2 * 2 * w_lanes * f32          # byte + gap windows
+                    + 2 * 5 * Q * f32              # per-term columns
+                    + 2 * w_lanes * f32)           # decoded w + docs
+    onehot = bw * bn * f32                         # chunk one-hot tile
+    merge = 4 * bn * f32                           # union vals+ids, x2
+    return resident + onehot + bn * f32 + merge
+
+
+def impact_traffic_proxy(blocks: ImpactBlocks, B: int, Q: int, L: int,
+                         N: int) -> float:
+    """Analytic cost proxy ranking impact-block candidates.
+
+    HBM traffic is nearly block-independent here (the window loads once
+    per query; outputs are (B, k)), so the ranking term is the serial
+    merge work: each doc tile pays one union-top-k of ~(k + block_n)
+    lanes, and each chunk pays fixed MXU issue overhead — so fewer,
+    larger tiles and chunks win until VMEM says stop. The padded tile
+    and chunk remainders are charged in full, which is what stops an
+    oversized block from winning on tile count alone.
+    """
+    bn, bw = blocks
+    n_tiles = -(-N // bn)
+    n_chunks = -(-(Q * max(L, 1)) // bw)
+    k_est = 128.0  # merge working set is k+bn lanes; k is unknown here
+    merge_cost = n_tiles * (k_est + bn)
+    chunk_cost = n_tiles * n_chunks * (64.0 + bw * bn / 8192.0)
+    return float(B) * (merge_cost + chunk_cost)
+
+
+def impact_candidate_blocks(
+    B: int, Q: int, L: int, N: int,
+    *,
+    variant: str = "f32",
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+) -> List[ImpactBlocks]:
+    """All (block_n, block_w) under the VMEM budget, best first."""
+    out = []
+    w_lanes = Q * max(L, 1)
+    for bn in _IMPACT_BN_CHOICES:
+        if bn > max(128, 2 * N):
+            continue
+        for bw in _IMPACT_BW_CHOICES:
+            if bw > max(128, 2 * w_lanes):
+                continue
+            blocks = (bn, bw)
+            if impact_vmem_bytes(blocks, Q, L, variant) > vmem_budget:
+                continue
+            out.append(blocks)
+    out.sort(key=lambda blk: (impact_traffic_proxy(blk, B, Q, L, N),
+                              -blk[0] * blk[1]))
+    return out
+
+
+def heuristic_impact_blocks(B: int, Q: int, L: int, N: int,
+                            *, variant: str = "f32",
+                            vmem_budget: int = VMEM_BUDGET_BYTES
+                            ) -> ImpactBlocks:
+    """Best impact candidate by the analytic model — no measurement."""
+    cands = impact_candidate_blocks(B, Q, L, N, variant=variant,
+                                    vmem_budget=vmem_budget)
+    return cands[0] if cands else MIN_IMPACT_BLOCKS
+
+
+def get_impact_blocks(
+    B: int, Q: int, L: int, N: int,
+    *,
+    variant: str = "f32",
+    backend: Optional[str] = None,
+    path: Optional[str] = None,
+) -> ImpactBlocks:
+    """Cached impact-kernel winner for the shape, else the heuristic.
+
+    Same contract as ``get_blocks``: never measures, safe under jit
+    tracing. There is no joint-key fallback — the ``_impact`` family
+    is new, so a miss goes straight to the heuristic.
+    """
+    backend = backend or jax.default_backend()
+    cache = _load(cache_path(path))
+    hit = cache.get(impact_shape_key(B, Q, L, N, variant, backend))
+    if hit is not None:
+        return (hit["block_n"], hit["block_w"])
+    return heuristic_impact_blocks(B, Q, L, N, variant=variant)
+
+
+def resolve_impact_blocks(
+    B: int, Q: int, L: int, N: int,
+    block_n: Optional[int], block_w: Optional[int],
+    *,
+    variant: str = "f32",
+) -> ImpactBlocks:
+    """Fill the None components of a (block_n, block_w) pair — the
+    impact-kernel analogue of ``resolve_blocks``. Partial pins are
+    re-enumerated with the pin fixed (bypassing the winner cache, which
+    was tuned without it)."""
+    if block_n is not None and block_w is not None:
+        return (block_n, block_w)
+    if block_n is None and block_w is None:
+        return get_impact_blocks(B, Q, L, N, variant=variant)
+    cands = [blk for blk in impact_candidate_blocks(B, Q, L, N,
+                                                    variant=variant)
+             if (block_n is None or blk[0] == block_n)
+             and (block_w is None or blk[1] == block_w)]
+    if cands:
+        return cands[0]
+    return (block_n or MIN_IMPACT_BLOCKS[0],
+            block_w or MIN_IMPACT_BLOCKS[1])
+
+
+def autotune_impact_blocks(
+    B: int, Q: int, L: int, N: int,
+    *,
+    variant: str = "f32",
+    backend: Optional[str] = None,
+    interpret: Optional[bool] = None,
+    max_candidates: int = 6,
+    k: int = 100,
+    path: Optional[str] = None,
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+) -> ImpactBlocks:
+    """Time impact-block candidates, persist and return the winner.
+
+    Mirrors ``autotune_blocks``: real kernel at the real shape on a
+    TPU, Pallas interpreter on a capped proxy shape elsewhere (the key
+    still records the real shape), and the all-candidates-failed path
+    returns the untimed heuristic without persisting anything.
+    """
+    from repro.kernels.impact_score import (fused_impact_topk,
+                                            fused_quantized_topk)
+
+    backend = backend or jax.default_backend()
+    if interpret is None:
+        interpret = backend != "tpu"
+    p = cache_path(path)
+    cache = _load(p)
+    key = impact_shape_key(B, Q, L, N, variant, backend)
+    hit = cache.get(key)
+    if hit is not None and hit.get("source") == "measured":
+        return (hit["block_n"], hit["block_w"])
+
+    cands = impact_candidate_blocks(B, Q, L, N, variant=variant,
+                                    vmem_budget=vmem_budget
+                                    )[:max_candidates]
+    if not cands:
+        cands = [MIN_IMPACT_BLOCKS]
+
+    mb, mq, ml, mn = ((min(B, 4), min(Q, 16), min(L, 256),
+                       min(N, 4096)) if interpret else (B, Q, L, N))
+    rng = np.random.default_rng(0)
+    if variant == "f32":
+        w = jnp.asarray(rng.uniform(0, 2, (mb, mq * ml)), jnp.float32)
+        d = jnp.asarray(rng.integers(0, mn, (mb, mq * ml)), jnp.int32)
+
+        def run(blocks):
+            bn, bw = blocks
+            return lambda: fused_impact_topk(
+                w, d, n_docs=mn, k=min(k, mn), block_n=bn, block_w=bw,
+                interpret=interpret)
+    else:
+        byte = jnp.asarray(rng.integers(0, 256, (mb, mq, ml)), jnp.int32)
+        gap = jnp.asarray(rng.integers(0, 3, (mb, mq, ml)), jnp.int32)
+        starts = jnp.asarray(rng.integers(0, 2, (mb, mq)), jnp.int32)
+        lens = jnp.full((mb, mq), ml, jnp.int32)
+        qv = jnp.asarray(rng.uniform(0.1, 2, (mb, mq)), jnp.float32)
+        lo = jnp.zeros((mb, mq), jnp.float32)
+        step = jnp.full((mb, mq), 0.1, jnp.float32)
+
+        def run(blocks):
+            bn, bw = blocks
+            return lambda: fused_quantized_topk(
+                byte, gap, starts, lens, qv, lo, step, n_docs=mn,
+                k=min(k, mn), block_n=bn, block_w=bw,
+                interpret=interpret)
+
+    best: Tuple[float, ImpactBlocks] = (float("inf"), cands[0])
+    last_error: Optional[Exception] = None
+    for blocks in cands:
+        try:
+            t = _time_ms(run(blocks))
+        except Exception as e:   # candidate not lowerable here
+            last_error = e
+            continue
+        if t < best[0]:
+            best = (t, blocks)
+    t, blocks = best
+    if t == float("inf"):
+        warnings.warn(
+            f"sparton autotune[impact/{variant}]: all {len(cands)} "
+            f"candidates failed to time for {key}; returning untimed "
+            f"heuristic blocks. Last error: {last_error!r}")
+        return heuristic_impact_blocks(B, Q, L, N, variant=variant,
+                                       vmem_budget=vmem_budget)
+    cache[key] = {
+        "block_n": blocks[0], "block_w": blocks[1],
+        "ms": round(t, 3),
+        "source": "measured",
+        "kernel": "impact",
+        "variant": variant,
+        "measured_shape": [mb, mq, ml, mn],
+        "interpret": bool(interpret),
+    }
+    _save(p)
+    return blocks

@@ -1,0 +1,294 @@
+"""Fused impact scoring + streaming top-k — Pallas TPU kernel.
+
+The Sparton fusion applied to the *query* side of LSR retrieval
+(DESIGN.md §12). The plain-JAX impact scorer
+(``retrieval/score.py:impact_scores``) gathers the query terms' posting
+windows, segment-sums them into a dense ``(B, N)`` score matrix, and
+runs a *separate* ``lax.top_k`` — at serving batch sizes and
+million-doc corpora that matrix is the retrieval analogue of the
+``(B, S, V)`` logit tensor Sparton refuses to materialize on the encode
+side. This kernel streams it away: per query, the gathered posting
+window stays resident in VMEM while doc-range tiles of width
+``block_n`` are scored via a scatter-free one-hot contraction and
+folded into a running ``(1, k)`` top-k with the same ``merge_topk``
+reduction every other streaming top-k in the repo uses. Peak scoring
+memory is the window plus one ``(block_n,)`` tile — independent of N.
+
+Grid: ``(B, N_pad / block_n)``, doc tiles innermost and visited in
+ascending-id order so ties break to the lowest doc id exactly like the
+reference ``lax.top_k`` path (the id-parity contract).
+
+Scoring one tile: the flattened posting axis (``W = Q * L_max`` lanes
+of ``(weight, doc_id)``) is walked in ``block_w`` chunks; each chunk
+builds the ``(block_w, block_n)`` membership one-hot ``1[doc_c ==
+d0 + n]`` and multiply-accumulates ``w_chunk @ onehot`` on the MXU —
+the same irregular-scatter-to-dense-contraction trade as the backward
+kernels' ``onehot_weights`` (Mosaic has no scatter).
+
+Two entry points share that machinery:
+
+* ``fused_impact_topk`` — raw f32 windows (from an ``InvertedIndex``).
+* ``fused_quantized_topk`` — u4+delta windows (from a
+  ``QuantizedIndex``): the *packed* byte and gap windows are shipped to
+  the kernel, which unpacks nibbles, affine-decodes against the
+  per-term bounds, and cumsums gaps to absolute doc ids per tile — the
+  standalone dequant materialization ``quantized_scores`` pays is gone.
+
+Both run under the Pallas interpreter off-TPU (CI's forced host
+devices); hardware validation stays the open ROADMAP item.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels._common import NEG_INF, pad_to
+from repro.kernels.topk_score import merge_topk
+
+# matches engine.quantize._LEVELS (duplicated to keep this module
+# importable without the engine package — kernels sit below it)
+_U4_LEVELS = 14
+
+
+def _score_tile(w, docs, d0, *, block_n: int, block_w: int):
+    """Score one ``(1, block_n)`` doc tile from flat posting lanes.
+
+    ``w``/``docs`` are ``(1, W)`` with W a multiple of ``block_w``;
+    invalid lanes carry weight 0 (their doc id then contributes
+    nothing). Each chunk's one-hot is built with the repo's
+    3D-broadcasted-iota idiom (``_common.onehot_weights``) and
+    contracted on the MXU with f32 accumulation.
+    """
+    n_chunks = w.shape[1] // block_w
+
+    def body(c, acc):
+        wc = jax.lax.dynamic_slice(w, (0, c * block_w), (1, block_w))
+        dc = jax.lax.dynamic_slice(docs, (0, c * block_w), (1, block_w))
+        col = jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_w, block_n), 2)
+        onehot = (dc[:, :, None] - d0 == col).astype(jnp.float32)
+        return acc + jax.lax.dot_general(
+            wc, onehot.reshape(block_w, block_n),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    return jax.lax.fori_loop(
+        0, n_chunks, body, jnp.zeros((1, block_n), jnp.float32))
+
+
+def _merge_tile(scores, val_ref, idx_ref, j, *, k: int, block_n: int,
+                n_real: int):
+    """Mask padded docs and fold one scored tile into the running top-k."""
+    cand = j * block_n + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_n), 1)
+    scores = jnp.where(cand < n_real, scores, NEG_INF)
+    top_vals, top_idx = merge_topk(val_ref[...], idx_ref[...], scores,
+                                   cand, k)
+    val_ref[...] = top_vals
+    idx_ref[...] = top_idx
+
+
+def _impact_kernel(
+    w_ref,      # (1, W) f32 — q[t] * impact, invalid lanes 0
+    d_ref,      # (1, W) i32 — absolute doc ids
+    val_ref,    # (1, k) out — running top-k values
+    idx_ref,    # (1, k) out — running top-k doc ids
+    *,
+    k: int,
+    block_n: int,
+    block_w: int,
+    n_real: int,
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        val_ref[...] = jnp.full(val_ref.shape, NEG_INF, jnp.float32)
+        idx_ref[...] = jnp.zeros(idx_ref.shape, jnp.int32)
+
+    scores = _score_tile(w_ref[...], d_ref[...], j * block_n,
+                         block_n=block_n, block_w=block_w)
+    _merge_tile(scores, val_ref, idx_ref, j, k=k, block_n=block_n,
+                n_real=n_real)
+
+
+def _impact_q_kernel(
+    byte_ref,    # (1, Q, L) i32 — gathered *packed* bytes per lane
+    gap_ref,     # (1, Q, L) i32 — gathered doc-id gaps per lane
+    starts_ref,  # (1, Q, 1) i32 — posting offsets (nibble parity)
+    lens_ref,    # (1, Q, 1) i32 — expanded list lengths
+    qv_ref,      # (1, Q, 1) f32 — query term weights
+    lo_ref,      # (1, Q, 1) f32 — per-term affine low
+    step_ref,    # (1, Q, 1) f32 — per-term affine step
+    val_ref,     # (1, k) out
+    idx_ref,     # (1, k) out
+    *,
+    k: int,
+    block_n: int,
+    block_w: int,
+    n_real: int,
+    q_width: int,
+    l_width: int,
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        val_ref[...] = jnp.full(val_ref.shape, NEG_INF, jnp.float32)
+        idx_ref[...] = jnp.zeros(idx_ref.shape, jnp.int32)
+
+    q, l = q_width, l_width
+    lane = jax.lax.broadcasted_iota(jnp.int32, (q, l), 1)
+    starts = starts_ref[...].reshape(q, 1)
+    lens = lens_ref[...].reshape(q, 1)
+    qv = qv_ref[...].reshape(q, 1)
+    lo = lo_ref[...].reshape(q, 1)
+    step = step_ref[...].reshape(q, 1)
+
+    # in-kernel u4+delta decode — bit-identical to quantized_scores:
+    # nibble parity from the absolute posting position, code 0 =
+    # phantom (weight exactly 0, cumsum still advances)
+    valid = (lane < lens) & (qv > 0)
+    byte = byte_ref[...].reshape(q, l)
+    code = jnp.where((starts + lane) & 1 == 1, byte >> 4, byte & 0xF)
+    code = jnp.where(valid, code, 0)
+    gaps = jnp.where(valid, gap_ref[...].reshape(q, l), 0)
+    docs = jnp.cumsum(gaps, axis=1)
+    w = jnp.where(code > 0,
+                  lo + (code - 1).astype(jnp.float32) * step,
+                  0.0) * qv
+
+    scores = _score_tile(w.reshape(1, q * l), docs.reshape(1, q * l),
+                         j * block_n, block_n=block_n, block_w=block_w)
+    _merge_tile(scores, val_ref, idx_ref, j, k=k, block_n=block_n,
+                n_real=n_real)
+
+
+def _out_shapes(B: int, k: int):
+    specs = [pl.BlockSpec((1, k), lambda i, j: (i, 0)),
+             pl.BlockSpec((1, k), lambda i, j: (i, 0))]
+    shapes = [jax.ShapeDtypeStruct((B, k), jnp.float32),
+              jax.ShapeDtypeStruct((B, k), jnp.int32)]
+    return specs, shapes
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_docs", "k", "block_n", "block_w", "interpret"))
+def fused_impact_topk(
+    w: jax.Array,       # (B, W) f32 — per-lane q[t]*impact, invalid 0
+    docs: jax.Array,    # (B, W) i32 — per-lane absolute doc ids
+    *,
+    n_docs: int,
+    k: int,
+    block_n: int = 1024,
+    block_w: int = 256,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused scoring + top-k over flat posting windows.
+
+    Returns ``(vals (B, k), idx (B, k))`` with the ``topk_score``
+    contract: ties to the lowest doc id, ``k > n_docs`` columns carry
+    NEG_INF. Callers clamp k; the posting axis is zero-padded here so
+    the chunk walk divides evenly (weight-0 lanes score nothing).
+    """
+    B, W = w.shape
+    if W == 0:      # no active terms anywhere — keep the grid non-empty
+        w = jnp.zeros((B, block_w), jnp.float32)
+        docs = jnp.zeros((B, block_w), jnp.int32)
+    wp = pad_to(w.astype(jnp.float32), 1, block_w)
+    dp = pad_to(docs.astype(jnp.int32), 1, block_w)
+    w_pad = wp.shape[1]
+    n_tiles = -(-n_docs // block_n)
+    grid = (B, n_tiles)
+
+    out_specs, out_shape = _out_shapes(B, k)
+    vals, idx = pl.pallas_call(
+        functools.partial(_impact_kernel, k=k, block_n=block_n,
+                          block_w=block_w, n_real=n_docs),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, w_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, w_pad), lambda i, j: (i, 0)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(wp, dp)
+    return vals, idx
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_docs", "k", "block_n", "block_w", "interpret"))
+def fused_quantized_topk(
+    byte_win: jax.Array,   # (B, Q, L) i32 — packed bytes per lane
+    gap_win: jax.Array,    # (B, Q, L) i32 — doc-id gaps per lane
+    starts: jax.Array,     # (B, Q) i32 — posting offsets per term
+    lens: jax.Array,       # (B, Q) i32 — expanded lengths per term
+    qv: jax.Array,         # (B, Q) f32 — query term weights
+    lo: jax.Array,         # (B, Q) f32 — per-term affine low
+    step: jax.Array,       # (B, Q) f32 — per-term affine step
+    *,
+    n_docs: int,
+    k: int,
+    block_n: int = 1024,
+    block_w: int = 256,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused u4+delta dequant + scoring + top-k.
+
+    The packed windows are decoded *inside* the kernel (nibble unpack,
+    affine decode, gap cumsum) — no dequantized ``(B, Q, L)`` weight or
+    doc-id array is ever materialized in HBM. Lane padding added here
+    lands outside every term's length, so the in-kernel valid mask
+    zeroes it.
+    """
+    B, Q, L = byte_win.shape
+    bw = pad_to(byte_win.astype(jnp.int32), 2, block_w)
+    gw = pad_to(gap_win.astype(jnp.int32), 2, block_w)
+    l_pad = bw.shape[2]
+    meta3 = [a.reshape(B, Q, 1) for a in (
+        starts.astype(jnp.int32), lens.astype(jnp.int32),
+        qv.astype(jnp.float32), lo.astype(jnp.float32),
+        step.astype(jnp.float32))]
+    n_tiles = -(-n_docs // block_n)
+    grid = (B, n_tiles)
+
+    win_spec = pl.BlockSpec((1, Q, l_pad), lambda i, j: (i, 0, 0))
+    meta_spec = pl.BlockSpec((1, Q, 1), lambda i, j: (i, 0, 0))
+    out_specs, out_shape = _out_shapes(B, k)
+    vals, idx = pl.pallas_call(
+        functools.partial(_impact_q_kernel, k=k, block_n=block_n,
+                          block_w=block_w, n_real=n_docs,
+                          q_width=Q, l_width=l_pad),
+        grid=grid,
+        in_specs=[win_spec, win_spec] + [meta_spec] * 5,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(bw, gw, *meta3)
+    return vals, idx
+
+
+def fused_window_bytes(B: int, Q: int, L: int,
+                       variant: str = "f32") -> int:
+    """HBM bytes of the gathered posting windows one fused call ships.
+
+    The analytic peak-scoring-memory model benches gate on: the fused
+    path's scoring footprint is these windows plus the ``(B, k)``
+    outputs — the ``(B, N)`` score matrix of the unfused paths never
+    exists. ``variant`` "f32" = raw windows (f32 weights + i32 docs),
+    "u4" = quantized windows (i32 packed bytes + i32 gaps + 5 small
+    per-term columns).
+    """
+    if variant == "f32":
+        return B * Q * L * (4 + 4)
+    if variant == "u4":
+        return B * Q * L * (4 + 4) + B * Q * 5 * 4
+    raise ValueError(f"unknown fused variant {variant!r}")

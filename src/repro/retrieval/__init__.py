@@ -5,12 +5,15 @@ pruned / quantized / sharded scoring plus the incremental builder
 
 from repro.retrieval.engine import (IndexBuilder, QuantizedIndex,
                                     ShardedIndex, TermShardedIndex,
-                                    choose_shard_axis, pruned_retrieve,
+                                    choose_shard_axis,
+                                    fused_quantized_retrieve,
+                                    pruned_retrieve,
                                     quantize_index, shard_index,
                                     sharded_retrieve, term_shard_index,
                                     term_sharded_retrieve)
 from repro.retrieval.index import InvertedIndex, build_inverted_index
-from repro.retrieval.score import METHODS, impact_scores, retrieve
+from repro.retrieval.score import (METHODS, fused_retrieve,
+                                   impact_scores, retrieve)
 from repro.retrieval.sparse_rep import (SparseRep, sparsify_threshold,
                                         sparsify_topk, split_rows,
                                         stack_rows, truncate_width)
@@ -25,6 +28,8 @@ __all__ = [
     "TermShardedIndex",
     "build_inverted_index",
     "choose_shard_axis",
+    "fused_quantized_retrieve",
+    "fused_retrieve",
     "impact_scores",
     "pruned_retrieve",
     "quantize_index",

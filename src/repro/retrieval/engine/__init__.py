@@ -24,7 +24,9 @@ Four pieces over the PR-3 ``InvertedIndex``:
                       delta segment pair, and periodic compaction.
 
 Everything threads through ``repro.retrieval.retrieve`` (methods
-``pruned`` / ``quantized`` / ``sharded`` / ``term_sharded``).
+``pruned`` / ``quantized`` / ``fused`` / ``sharded`` /
+``term_sharded``; ``fused`` scores either index flavor inside one
+Pallas kernel — ``kernels/impact_score.py``).
 """
 
 from repro.retrieval.engine.builder import IndexBuilder
@@ -33,6 +35,7 @@ from repro.retrieval.engine.pruning import (default_candidates,
                                             select_and_rescore,
                                             upper_bound_scores)
 from repro.retrieval.engine.quantize import (QuantizedIndex,
+                                             fused_quantized_retrieve,
                                              quantize_index,
                                              quantized_retrieve,
                                              quantized_scores)
@@ -53,6 +56,7 @@ __all__ = [
     "TermShardedIndex",
     "choose_shard_axis",
     "default_candidates",
+    "fused_quantized_retrieve",
     "pruned_retrieve",
     "quantize_index",
     "quantized_retrieve",

@@ -334,11 +334,18 @@ class IndexBuilder:
         parts = []   # (vals (B, k'), global slots (B, k'))
         if self._base is not None:
             bm = method
-            if bm == "pruned" and self.term_shards:
+            if bm in ("pruned", "fused") and self.term_shards:
                 # a term-sharded base serves pruning through its own
                 # two-tier composition (per-shard ceilings + rescore);
-                # margin 0 routes to the exact psum path — same ids
+                # margin 0 routes to the exact psum path — same ids.
+                # The fused kernel likewise has no TermShardedIndex
+                # entry point; the psum path is the id-identical stand-
+                # in (any fused block kwargs would be rejected by the
+                # strict retrieve() check, so none are forwarded here).
                 bm = "term_sharded"
+                kw = {key: v for key, v in kw.items()
+                      if key in ("mesh", "axis_name", "prune_margin",
+                                 "candidates")}
             bv, bi = retrieve(queries, self._base,
                               min(k, self._base.n_docs),
                               method=bm, **kw)
@@ -346,6 +353,7 @@ class IndexBuilder:
         if self._delta is not None:
             # the hot delta is always a raw single InvertedIndex —
             # base-only methods fall back to exact impact scoring
+            # ("fused" passes through: the kernel scores a raw index)
             dm = ("impact" if method in ("pruned", "quantized",
                                          "sharded", "term_sharded")
                   else method)

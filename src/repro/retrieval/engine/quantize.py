@@ -40,7 +40,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -246,3 +246,64 @@ def quantized_retrieve(queries: SparseRep, index: QuantizedIndex,
                        k: int = 10) -> Tuple[Array, Array]:
     """Top-k over the compressed index — same contract as ``retrieve``."""
     return _quantized_retrieve(queries, index, min(k, index.n_docs))
+
+
+@jax.jit
+def _fused_q_windows(queries: SparseRep, index: QuantizedIndex
+                     ) -> Tuple[Array, ...]:
+    """Gather the *packed* per-query windows for the fused kernel.
+
+    Unlike ``quantized_scores``, nothing is decoded here: the kernel
+    receives the raw packed bytes and gaps plus the per-term affine
+    metadata, and the nibble unpack / affine decode / gap cumsum all
+    happen inside the Pallas grid (kernels/impact_score.py) — the
+    standalone dequant materialization is gone.
+    """
+    l_max = index.max_postings
+    p_total = index.deltas.shape[0]
+    lane = jnp.arange(l_max, dtype=jnp.int32)
+    qv = queries.values.reshape(-1, queries.width).astype(jnp.float32)
+    qi = queries.indices.reshape(-1, queries.width)
+    starts = index.term_starts[qi]                         # (B, Q)
+    lens = index.term_lens[qi].astype(jnp.int32)           # (B, Q)
+    pos = starts[:, :, None] + lane[None, None, :]         # (B, Q, L)
+    pos = jnp.clip(pos, 0, p_total - 1)
+    byte_win = index.packed_vals[pos >> 1].astype(jnp.int32)
+    gap_win = index.deltas[pos].astype(jnp.int32)
+    lo = index.term_lo[qi].astype(jnp.float32)
+    step = (index.term_hi[qi].astype(jnp.float32) - lo) / _LEVELS
+    return byte_win, gap_win, starts, lens, qv, lo, step
+
+
+def fused_quantized_retrieve(
+    queries: SparseRep,
+    index: QuantizedIndex,
+    k: int = 10,
+    *,
+    block_n: Optional[int] = None,
+    block_w: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> Tuple[Array, Array]:
+    """Fused-kernel top-k over the compressed index — id-identical to
+    ``quantized_retrieve`` (the in-kernel decode is bit-exact against
+    the same f16-rounded bounds).
+
+    None blocks resolve through the autotune cache/heuristic under the
+    ``u4`` ``_impact`` keys; ``interpret`` defaults to the Pallas
+    interpreter off-TPU.
+    """
+    from repro.kernels.autotune import resolve_impact_blocks
+    from repro.kernels.impact_score import fused_quantized_topk
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b = queries.values.reshape(-1, queries.width).shape[0]
+    block_n, block_w = resolve_impact_blocks(
+        b, queries.width, index.max_postings, index.n_docs,
+        block_n, block_w, variant="u4")
+    byte_win, gap_win, starts, lens, qv, lo, step = _fused_q_windows(
+        queries, index)
+    return fused_quantized_topk(
+        byte_win, gap_win, starts, lens, qv, lo, step,
+        n_docs=index.n_docs, k=min(k, index.n_docs),
+        block_n=block_n, block_w=block_w, interpret=interpret)

@@ -1,4 +1,4 @@
-"""Retrieval scoring — impact, pruned, quantized, sharded,
+"""Retrieval scoring — impact, pruned, quantized, fused, sharded,
 streaming-kernel, and dense paths behind one ``retrieve()``
 dispatcher.
 
@@ -8,6 +8,19 @@ Dispatch table (``method=``):
     ---------    ---------------    ---------------    -------------
     "impact"     SparseRep          InvertedIndex      exact segment-
                                                        sums into (B, N)
+    "fused"      SparseRep          InvertedIndex      fused Pallas
+                                    or QuantizedIndex  kernel: posting
+                                                       window resident
+                                                       in VMEM, per-
+                                                       tile one-hot
+                                                       MAC + running
+                                                       top-k merge — no
+                                                       (B, N) matrix;
+                                                       u4 windows are
+                                                       dequantized
+                                                       inside the
+                                                       kernel (kernels/
+                                                       impact_score)
     "pruned"     SparseRep          InvertedIndex      two-tier MaxScore:
                                     (+ term_ubs and    upper-bound pass
                                     forward rows)      -> exact rescore
@@ -34,14 +47,23 @@ Dispatch table (``method=``):
     "dense"      dense or rep       dense (N, V)       (B, N) einsum
                                                        + lax.top_k
     "auto"       resolved from the corpus type:
-                 * QuantizedIndex              -> "quantized"
+                 * QuantizedIndex: "fused" for corpora >= AUTO_FUSED_N
+                   docs (the (B, N) matrix stops being a rounding
+                   error), "quantized" below that
                  * ShardedIndex                -> "sharded"
                  * TermShardedIndex            -> "term_sharded"
                  * InvertedIndex with upper bounds AND forward rows
                    (an engine build)           -> "pruned"
-                 * any other InvertedIndex     -> "impact"
+                 * any other InvertedIndex: "fused" at >= AUTO_FUSED_N
+                   docs, "impact" below
                  * dense matrix: "streaming" for corpora >=
                    AUTO_STREAMING_N rows, "dense" below that
+
+Keyword arguments are validated against the *resolved* method: passing
+a kwarg the method cannot honor (``mesh`` with ``"impact"``,
+``prune_margin`` with ``"streaming"``) raises instead of being
+silently ignored — a typo'd or misrouted tuning knob must not
+masquerade as a no-op. The per-method table is ``_METHOD_KWARGS``.
 
 Which *sharding axis* to build in the first place is the upstream
 choice: ``engine.term_sharded.choose_shard_axis`` keys it on the
@@ -53,10 +75,11 @@ all-reduce over (B, N) partials.
 
 All paths return ``(vals (B, k) f32, idx (B, k) i32)`` with identical
 ids (scores within fp/quantization tolerance) for equivalent inputs —
-the parity tests in ``tests/test_retrieval.py`` and
-``tests/test_engine.py`` pin that down. ``pruned`` is id-identical to
-``impact`` at the default safe margin (0.0) with a sufficient
-candidate budget; ``prune_margin`` > 0 trades recall for speed.
+the parity tests in ``tests/test_retrieval.py``,
+``tests/test_kernels_impact.py`` and ``tests/test_engine.py`` pin that
+down. ``pruned`` is id-identical to ``impact`` at the default safe
+margin (0.0) with a sufficient candidate budget; ``prune_margin`` > 0
+trades recall for speed.
 
 The impact path is the sparse-native one: per query row it gathers the
 posting lists of the query's active terms (padded to the index's
@@ -65,7 +88,10 @@ posting lists of the query's active terms (padded to the index's
 impact[t, d]`` — exactly the inverted-index formulation GPUSparse
 serves LSR with. Work per query is ``O(Q * max_postings)``; the
 padding cost is the usual TPU trade of ragged gathers for one static
-dense gather + masked reduce.
+dense gather + masked reduce. The fused path walks the *same* gathered
+windows but scores and merges tile-by-tile inside one Pallas kernel
+(DESIGN.md §12), so its peak scoring memory is the window plus the
+(B, k) winners — independent of the corpus size.
 """
 
 from __future__ import annotations
@@ -85,14 +111,58 @@ Array = jax.Array
 Queries = Union[Array, SparseRep]
 Corpus = Union[Array, InvertedIndex]
 
-METHODS = ("auto", "impact", "pruned", "quantized", "sharded",
+METHODS = ("auto", "impact", "fused", "pruned", "quantized", "sharded",
            "term_sharded", "streaming", "dense")
 # methods that need an index-shaped corpus (not a dense matrix)
-_INDEX_METHODS = ("impact", "pruned", "quantized", "sharded",
+_INDEX_METHODS = ("impact", "fused", "pruned", "quantized", "sharded",
                   "term_sharded")
 # corpora at or above this many rows route "auto" to the streaming
 # kernel (the (B, N) score matrix stops being a rounding error)
 AUTO_STREAMING_N = 16384
+# indexed corpora at or above this many docs route "auto" to the fused
+# impact kernel for the same reason: below it the dense (B, N) matrix
+# is small enough that the plain segment-sum path's simplicity wins
+AUTO_FUSED_N = 16384
+
+# kwargs each resolved method can honor; everything else raises.
+# ``interpret`` spans the Pallas-backed paths, block sizes go to the
+# kernel they tune, pruning knobs to the two-tier paths, mesh/axis to
+# the shard_map paths. impact/dense/quantized take no tuning kwargs.
+_METHOD_KWARGS = {
+    "impact": frozenset(),
+    "dense": frozenset(),
+    "quantized": frozenset(),
+    "fused": frozenset({"interpret", "block_n", "block_w"}),
+    "streaming": frozenset({"interpret", "block_b", "block_n"}),
+    "pruned": frozenset({"prune_margin", "candidates"}),
+    "sharded": frozenset({"mesh", "axis_name"}),
+    "term_sharded": frozenset({"mesh", "axis_name", "prune_margin",
+                               "candidates"}),
+}
+
+
+@functools.lru_cache(maxsize=1)
+def _engine():
+    """Engine-type lookup, imported once per process.
+
+    The engine package imports the index/rep modules this module also
+    feeds, so the imports stay function-local to keep the import graph
+    acyclic — but cached, not re-executed per ``retrieve()`` call like
+    the old per-call ``from ... import`` blocks.
+    """
+    from repro.retrieval.engine import pruning, quantize, sharded_index
+    from repro.retrieval.engine import term_sharded
+
+    return {
+        "QuantizedIndex": quantize.QuantizedIndex,
+        "quantized_retrieve": quantize.quantized_retrieve,
+        "fused_quantized_retrieve": quantize.fused_quantized_retrieve,
+        "ShardedIndex": sharded_index.ShardedIndex,
+        "sharded_retrieve": sharded_index.sharded_retrieve,
+        "TermShardedIndex": term_sharded.TermShardedIndex,
+        "term_sharded_retrieve": term_sharded.term_sharded_retrieve,
+        "pruned_retrieve": pruning.pruned_retrieve,
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -126,6 +196,67 @@ def impact_scores(queries: SparseRep, index: InvertedIndex) -> Array:
 
 
 # ---------------------------------------------------------------------------
+# fused impact retrieval (Pallas kernel over gathered windows)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _fused_windows(queries: SparseRep, index: InvertedIndex
+                   ) -> Tuple[Array, Array]:
+    """Flat ``(B, Q * L_max)`` weight/doc windows for the fused kernel.
+
+    The same padded gather as ``impact_scores`` — invalid lanes carry
+    weight exactly 0 — but flattened to the kernel's posting axis
+    instead of being segment-summed into (B, N).
+    """
+    l_max = index.max_postings
+    p_total = index.postings_doc.shape[0]
+    lane = jnp.arange(l_max, dtype=jnp.int32)
+    qv = queries.values.reshape(-1, queries.width).astype(jnp.float32)
+    qi = queries.indices.reshape(-1, queries.width)
+    starts = index.term_starts[qi]                         # (B, Q)
+    lens = index.term_lens[qi]                             # (B, Q)
+    pos = starts[:, :, None] + lane[None, None, :]         # (B, Q, L)
+    valid = ((lane[None, None, :] < lens[:, :, None])
+             & (qv > 0)[:, :, None])
+    pos = jnp.clip(pos, 0, p_total - 1)
+    docs = jnp.where(valid, index.postings_doc[pos], 0)
+    w = jnp.where(valid, index.postings_val[pos], 0.0) * qv[:, :, None]
+    b = w.shape[0]
+    return w.reshape(b, -1), docs.reshape(b, -1)
+
+
+def fused_retrieve(
+    queries: SparseRep,
+    index: InvertedIndex,
+    k: int = 10,
+    *,
+    block_n: Optional[int] = None,
+    block_w: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> Tuple[Array, Array]:
+    """Fused-kernel top-k over an ``InvertedIndex`` — id-identical to
+    the ``impact`` path (pinned by tests/test_kernels_impact.py).
+
+    None blocks resolve through the autotune cache/heuristic
+    (``_impact`` keys); ``interpret`` defaults to the Pallas
+    interpreter off-TPU.
+    """
+    from repro.kernels.autotune import resolve_impact_blocks
+    from repro.kernels.impact_score import fused_impact_topk
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b = queries.values.reshape(-1, queries.width).shape[0]
+    block_n, block_w = resolve_impact_blocks(
+        b, queries.width, index.max_postings, index.n_docs,
+        block_n, block_w, variant="f32")
+    w, docs = _fused_windows(queries, index)
+    return fused_impact_topk(
+        w, docs, n_docs=index.n_docs, k=min(k, index.n_docs),
+        block_n=block_n, block_w=block_w, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
 # dispatcher
 # ---------------------------------------------------------------------------
 
@@ -136,28 +267,39 @@ def _dense_queries(queries: Queries, vocab_size: int) -> Array:
 
 
 def _resolve_method(method: str, corpus: Corpus) -> str:
-    from repro.retrieval.engine.quantize import QuantizedIndex
-    from repro.retrieval.engine.sharded_index import ShardedIndex
-    from repro.retrieval.engine.term_sharded import TermShardedIndex
-
     if method not in METHODS:
         raise ValueError(f"unknown retrieval method {method!r}; "
                          f"one of {list(METHODS)}")
     if method != "auto":
         return method
-    if isinstance(corpus, QuantizedIndex):
-        return "quantized"
-    if isinstance(corpus, ShardedIndex):
+    eng = _engine()
+    if isinstance(corpus, eng["QuantizedIndex"]):
+        return ("fused" if corpus.n_docs >= AUTO_FUSED_N
+                else "quantized")
+    if isinstance(corpus, eng["ShardedIndex"]):
         return "sharded"
-    if isinstance(corpus, TermShardedIndex):
+    if isinstance(corpus, eng["TermShardedIndex"]):
         return "term_sharded"
     if isinstance(corpus, InvertedIndex):
         # an engine build (upper bounds + forward rows) can serve the
-        # two-tier pruned path; a bare PR-3 index only the exact one
+        # two-tier pruned path; a bare PR-3 index only the exact ones
         if corpus.has_upper_bounds and corpus.has_forward:
             return "pruned"
-        return "impact"
+        return "fused" if corpus.n_docs >= AUTO_FUSED_N else "impact"
     return "streaming" if corpus.shape[0] >= AUTO_STREAMING_N else "dense"
+
+
+def _check_kwargs(method: str, passed: dict) -> None:
+    """Raise on kwargs the resolved method cannot honor."""
+    allowed = _METHOD_KWARGS[method]
+    stray = [name for name, value in passed.items()
+             if value is not None and name not in allowed]
+    if stray:
+        raise ValueError(
+            f"method={method!r} does not accept "
+            f"{', '.join(sorted(stray))} (accepted: "
+            f"{sorted(allowed) if allowed else 'no tuning kwargs'}); "
+            "refusing to silently ignore a tuning knob")
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
@@ -184,9 +326,10 @@ def retrieve(
     *,
     method: str = "auto",
     interpret: Optional[bool] = None,
-    block_b: int = 8,
-    block_n: int = 1024,
-    prune_margin: float = 0.0,
+    block_b: Optional[int] = None,
+    block_n: Optional[int] = None,
+    block_w: Optional[int] = None,
+    prune_margin: Optional[float] = None,
     candidates: Optional[int] = None,
     mesh=None,
     axis_name: Optional[str] = None,
@@ -194,44 +337,60 @@ def retrieve(
     """Top-k retrieval via the method table in the module docstring.
 
     ``k`` is clamped to the corpus size so every path returns the same
-    ``(B, min(k, N))`` shape. ``interpret`` only affects the streaming
-    kernel (None = auto: Pallas interpreter off-TPU);
-    ``prune_margin``/``candidates`` only the pruned path
+    ``(B, min(k, N))`` shape. Tuning kwargs are validated against the
+    *resolved* method (``_METHOD_KWARGS``) — a kwarg the method cannot
+    honor raises instead of being ignored. ``interpret`` affects the
+    Pallas-backed paths (None = auto: interpreter off-TPU);
+    ``block_b``/``block_n`` tune the streaming kernel and
+    ``block_n``/``block_w`` the fused one (None = autotune cache /
+    heuristic); ``prune_margin``/``candidates`` drive the pruned path
     (``engine.pruning``) and, for margins > 0, the term-sharded
-    two-tier composition; ``mesh``/``axis_name`` only the sharded
-    paths (None = single-device vmap over shards).
+    two-tier composition; ``mesh``/``axis_name`` the sharded paths
+    (None = single-device vmap over shards).
     """
     method = _resolve_method(method, corpus)
+    _check_kwargs(method, {
+        "interpret": interpret, "block_b": block_b, "block_n": block_n,
+        "block_w": block_w, "prune_margin": prune_margin,
+        "candidates": candidates, "mesh": mesh, "axis_name": axis_name,
+    })
 
     if method in _INDEX_METHODS:
-        from repro.retrieval.engine.quantize import (QuantizedIndex,
-                                                     quantized_retrieve)
-        from repro.retrieval.engine.sharded_index import (ShardedIndex,
-                                                          sharded_retrieve)
-
+        eng = _engine()
         if not isinstance(queries, SparseRep):
             raise ValueError(
                 f"method={method!r} needs SparseRep queries — sparsify "
                 "with retrieval.sparse_rep.sparsify_topk/threshold "
                 "(an explicit budget, not a silent one)")
+        if method == "fused":
+            if isinstance(corpus, eng["QuantizedIndex"]):
+                return eng["fused_quantized_retrieve"](
+                    queries, corpus, k, block_n=block_n,
+                    block_w=block_w, interpret=interpret)
+            if not isinstance(corpus, InvertedIndex):
+                raise ValueError(
+                    "method='fused' needs an InvertedIndex or "
+                    "QuantizedIndex corpus — build one with "
+                    "retrieval.index.build_inverted_index or "
+                    "engine.quantize.quantize_index")
+            return fused_retrieve(queries, corpus, k, block_n=block_n,
+                                  block_w=block_w, interpret=interpret)
         if method == "quantized":
-            if not isinstance(corpus, QuantizedIndex):
+            if not isinstance(corpus, eng["QuantizedIndex"]):
                 raise ValueError(
                     "method='quantized' needs a QuantizedIndex corpus "
                     "— compress one with engine.quantize.quantize_index")
-            return quantized_retrieve(queries, corpus, k)
+            return eng["quantized_retrieve"](queries, corpus, k)
         if method == "sharded":
-            if not isinstance(corpus, ShardedIndex):
+            if not isinstance(corpus, eng["ShardedIndex"]):
                 raise ValueError(
                     "method='sharded' needs a ShardedIndex corpus — "
                     "build one with engine.sharded_index.shard_index")
-            return sharded_retrieve(queries, corpus, k, mesh=mesh,
-                                    axis_name=axis_name)
+            return eng["sharded_retrieve"](queries, corpus, k,
+                                           mesh=mesh,
+                                           axis_name=axis_name)
         if method == "term_sharded":
-            from repro.retrieval.engine.term_sharded import (
-                TermShardedIndex, term_sharded_retrieve)
-
-            if not isinstance(corpus, TermShardedIndex):
+            if not isinstance(corpus, eng["TermShardedIndex"]):
                 raise ValueError(
                     "method='term_sharded' needs a TermShardedIndex "
                     "corpus — build one with "
@@ -239,20 +398,21 @@ def retrieve(
             # margin 0 routes to the exact psum path (identical ids,
             # no candidate budget to size); > 0 opts into the
             # two-tier composition and requires forward rows
-            return term_sharded_retrieve(
+            margin = prune_margin if prune_margin is not None else 0.0
+            return eng["term_sharded_retrieve"](
                 queries, corpus, k, mesh=mesh, axis_name=axis_name,
-                prune_margin=prune_margin if prune_margin > 0 else None,
+                prune_margin=margin if margin > 0 else None,
                 candidates=candidates)
         if not isinstance(corpus, InvertedIndex):
             raise ValueError(
                 f"method={method!r} needs an InvertedIndex corpus — "
                 "build one with retrieval.index.build_inverted_index")
         if method == "pruned":
-            from repro.retrieval.engine.pruning import pruned_retrieve
-
-            return pruned_retrieve(queries, corpus, k,
-                                   prune_margin=prune_margin,
-                                   candidates=candidates)
+            return eng["pruned_retrieve"](
+                queries, corpus, k,
+                prune_margin=(prune_margin if prune_margin is not None
+                              else 0.0),
+                candidates=candidates)
         return _impact_retrieve(queries, corpus, min(k, corpus.n_docs))
 
     if isinstance(corpus, InvertedIndex) or not hasattr(corpus, "shape"):
@@ -269,5 +429,7 @@ def retrieve(
 
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    return topk_score(q, corpus, k=k, block_b=block_b,
-                      block_n=block_n, interpret=interpret)
+    return topk_score(q, corpus, k=k,
+                      block_b=block_b if block_b is not None else 8,
+                      block_n=block_n if block_n is not None else 1024,
+                      interpret=interpret)

@@ -607,6 +607,9 @@ class CorpusEngine:
     handed out), surviving compactions. ``keep_forward=True`` enables
     the pruned path (``search(..., method="pruned")``); with
     ``quantize=True`` the base segment is served compressed.
+    ``method="fused"`` scores base and delta inside the fused Pallas
+    kernel (in-kernel u4 dequant when the base is quantized, the exact
+    psum path when it is term-sharded — ids identical either way).
 
     ``shard_axis``/``n_shards`` pick the base segment's partitioning:
     ``"doc"`` leaves the base a single index (doc sharding is a

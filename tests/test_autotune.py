@@ -206,6 +206,89 @@ def test_all_kernel_candidates_failing_does_not_poison_cache(
     assert not os.path.exists(isolated_cache)
 
 
+# ---------------------------------------------------------------------------
+# fused impact-scoring kernel (``_impact`` key family)
+# ---------------------------------------------------------------------------
+
+def test_impact_candidates_respect_vmem_budget():
+    budget = 2 * 1024 * 1024
+    cands = autotune.impact_candidate_blocks(16, 32, 512, 1 << 20,
+                                             vmem_budget=budget)
+    assert cands, "no impact candidates under a 2 MiB budget"
+    for blocks in cands:
+        assert autotune.impact_vmem_bytes(blocks, 32, 512) <= budget
+    proxies = [autotune.impact_traffic_proxy(c, 16, 32, 512, 1 << 20)
+               for c in cands]
+    assert proxies == sorted(proxies)
+
+
+def test_impact_shape_key_rejects_unknown_variant():
+    with pytest.raises(ValueError, match="variant"):
+        autotune.impact_shape_key(4, 8, 16, 64, "f16", "cpu")
+
+
+def test_impact_cache_round_trip(isolated_cache):
+    """Measured impact winner persists under the ``_impact`` key and is
+    read back by a cold cache; the head-kernel key family is
+    untouched."""
+    blocks = autotune.autotune_impact_blocks(2, 4, 8, 64,
+                                             max_candidates=2)
+    raw = json.load(open(isolated_cache))
+    backend = jax.default_backend()
+    key = autotune.impact_shape_key(2, 4, 8, 64, "f32", backend)
+    assert raw[key]["source"] == "measured"
+    assert raw[key]["kernel"] == "impact"
+    assert (raw[key]["block_n"], raw[key]["block_w"]) == blocks
+    assert all(k.endswith("_impact") for k in raw)
+
+    autotune.clear_cache()
+    assert autotune.get_impact_blocks(2, 4, 8, 64) == blocks
+    # re-tuning the same key is a cache hit (no re-measurement)
+    assert autotune.autotune_impact_blocks(2, 4, 8, 64) == blocks
+
+
+def test_impact_variants_get_distinct_keys(isolated_cache):
+    autotune.autotune_impact_blocks(2, 4, 8, 64, max_candidates=1)
+    raw = json.load(open(isolated_cache))
+    backend = jax.default_backend()
+    assert autotune.impact_shape_key(2, 4, 8, 64, "u4",
+                                     backend) not in raw
+    u4 = autotune.autotune_impact_blocks(2, 4, 8, 64, variant="u4",
+                                         max_candidates=1)
+    raw = json.load(open(isolated_cache))
+    key = autotune.impact_shape_key(2, 4, 8, 64, "u4", backend)
+    assert (raw[key]["block_n"], raw[key]["block_w"]) == u4
+    assert raw[key]["variant"] == "u4"
+
+
+def test_impact_cold_cache_is_heuristic():
+    assert (autotune.get_impact_blocks(4, 16, 64, 4096)
+            == autotune.heuristic_impact_blocks(4, 16, 64, 4096))
+
+
+def test_impact_resolve_partial_pins():
+    """Explicit pair passes through; a single pin filters the
+    candidate enumeration instead of grafting onto the cached
+    winner."""
+    assert autotune.resolve_impact_blocks(4, 16, 64, 4096, 256,
+                                          128) == (256, 128)
+    bn, bw = autotune.resolve_impact_blocks(4, 16, 64, 4096, 256, None)
+    assert bn == 256 and bw in autotune._IMPACT_BW_CHOICES
+    bn, bw = autotune.resolve_impact_blocks(4, 16, 64, 4096, None, None)
+    assert (bn, bw) == autotune.heuristic_impact_blocks(4, 16, 64, 4096)
+
+
+def test_impact_all_candidates_failing_does_not_poison_cache(
+        isolated_cache, monkeypatch):
+    def boom(*a, **k):
+        raise RuntimeError("lowering failed")
+    monkeypatch.setattr(autotune, "_time_ms", boom)
+    blocks = autotune.autotune_impact_blocks(2, 4, 8, 64,
+                                             max_candidates=2)
+    assert blocks == autotune.heuristic_impact_blocks(2, 4, 8, 64)
+    assert not os.path.exists(isolated_cache)
+
+
 def test_config_head_blocks_threading():
     """TransformerConfig.head_blocks: pinned fields win, None = auto."""
     from repro.configs import get_config

@@ -22,18 +22,32 @@ from benchmarks.check import (check_engine, check_file, check_kernels,
 GOOD_KERNELS = {"heads": {"naive": {}, "tiled": {}, "sparton-jax": {},
                           "sparton-kernel": {}}}
 GOOD_RETRIEVAL = {"methods": {"dense": {}, "streaming": {},
-                              "impact": {}},
-                  "parity": {"topk_ids_equal": True}}
+                              "impact": {"median_ms": 1.0,
+                                         "peak_scoring_bytes": 100},
+                              "fused": {"median_ms": 1.0,
+                                        "peak_scoring_bytes": 40}},
+                  "interpret": True,
+                  "parity": {"topk_ids_equal": True,
+                             "fused_ids_equal": True}}
 GOOD_ENGINE = {
-    "methods": {"impact": {}, "pruned": {}, "quantized": {},
+    "methods": {"impact": {"median_ms": 1.0,
+                           "peak_scoring_bytes": 100},
+                "fused": {"median_ms": 1.0,
+                          "peak_scoring_bytes": 40},
+                "pruned": {},
+                "quantized": {"median_ms": 1.0,
+                              "peak_scoring_bytes": 100},
+                "fused_quantized": {"median_ms": 1.0,
+                                    "peak_scoring_bytes": 40},
                 "streaming": {}},
+    "interpret": True,
     "quantization": {"ratio": 4.82, "topk_ids_equal": True},
     "pruned": {"topk_ids_equal": True},
     "sharded": {s: {"topk_ids_equal": True, "median_ms": 1.0}
                 for s in ("1", "2", "4")},
     "term_sharded": {s: {"topk_ids_equal": True, "median_ms": 1.0}
                      for s in ("1", "2", "4")},
-    "parity": {"topk_ids_equal": True},
+    "parity": {"topk_ids_equal": True, "fused_ids_equal": True},
 }
 
 
@@ -124,12 +138,31 @@ def test_retrieval_parity_and_method_gates():
     (lambda d: d.pop("term_sharded"), "term_sharded scaling rows"),
     (lambda d: d["parity"].update(topk_ids_equal=False),
      "parity flag"),
+    (lambda d: d["parity"].update(fused_ids_equal=False),
+     "fused top-k id parity"),
+    (lambda d: d["methods"]["fused"].update(peak_scoring_bytes=100),
+     "not strictly"),
+    (lambda d: d["methods"]["fused_quantized"].pop(
+        "peak_scoring_bytes"), "fused_quantized peak"),
+    (lambda d: (d.update(interpret=False),
+                d["methods"]["fused"].update(median_ms=9.0)),
+     "real backend"),
 ])
 def test_engine_gate_failures(mutate, needle):
     bad = copy.deepcopy(GOOD_ENGINE)
     mutate(bad)
     errs = check_engine(bad)
     assert any(needle in e for e in errs), (needle, errs)
+
+
+def test_fused_latency_gate_only_on_real_backends():
+    """Interpret-mode timings never gate (DESIGN.md §5) — the latency
+    bar arms only once the record says it ran on a real backend."""
+    rec = copy.deepcopy(GOOD_RETRIEVAL)
+    rec["methods"]["fused"]["median_ms"] = 99.0
+    assert check_retrieval(rec) == []
+    rec["interpret"] = False
+    assert any("real backend" in e for e in check_retrieval(rec))
 
 
 def _phases(d):

@@ -1,0 +1,279 @@
+"""Fused impact-scoring kernel tests (kernels/impact_score,
+DESIGN.md §12).
+
+The acceptance anchor is id parity: ``method="fused"`` must return doc
+ids identical to ``method="impact"`` on the graded benchmark corpus
+(scores bit-close), and the fused-quantized entry point identical to
+the unfused ``quantized_retrieve`` on the *same* compressed index —
+quantization error is shared, so the comparison is exact, not
+tolerance-based. The property test drives both with values that are
+multiples of 1/8 so every partial sum is exactly representable in f32
+and tie-breaks are deterministic; edge cases (empty queries, k >= N,
+duplicate scores, W == 0) are pinned individually. The subprocess test
+mirrors ``test_engine``'s forced-host-device pattern so CI's
+multidevice job exercises the kernel under the interpreter at 1/2/4
+devices.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.data.synthetic import lsr_impact_corpus
+from repro.kernels._common import NEG_INF
+from repro.kernels.impact_score import (fused_impact_topk,
+                                        fused_window_bytes)
+from repro.retrieval import (build_inverted_index, quantize_index,
+                             retrieve, sparsify_topk)
+from repro.retrieval.engine.quantize import (fused_quantized_retrieve,
+                                             quantized_retrieve)
+from repro.retrieval.score import fused_retrieve
+
+K = 10
+BENCH = dict(n_docs=384, vocab=512, doc_nnz=32, n_queries=6, q_nnz=28)
+
+
+@pytest.fixture(scope="module")
+def graded():
+    """Pinned graded corpus + the exact impact baseline the fused
+    kernel must reproduce id-for-id."""
+    data = lsr_impact_corpus(**BENCH)
+    q = sparsify_topk(jnp.asarray(data["queries"]), BENCH["q_nnz"])
+    d = sparsify_topk(jnp.asarray(data["docs"]), BENCH["doc_nnz"])
+    raw = build_inverted_index(d, BENCH["vocab"])
+    vals, idx = retrieve(q, raw, K, method="impact")
+    return {"q": q, "d": d, "raw": raw,
+            "vals": np.asarray(vals), "idx": np.asarray(idx)}
+
+
+# ---------------------------------------------------------------------------
+# raw-index parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("block_n,block_w", [(64, 128), (128, 256),
+                                             (512, 128)])
+def test_fused_matches_impact_across_block_sizes(graded, block_n,
+                                                 block_w):
+    """Acceptance: identical ids and scores for every tile/chunk
+    geometry, including tile counts that don't divide N (384)."""
+    vals, idx = fused_retrieve(graded["q"], graded["raw"], K,
+                               block_n=block_n, block_w=block_w,
+                               interpret=True)
+    np.testing.assert_array_equal(np.asarray(idx), graded["idx"])
+    np.testing.assert_allclose(np.asarray(vals), graded["vals"],
+                               atol=1e-4)
+
+
+def test_dispatcher_fused_with_autotuned_blocks(graded):
+    """block_*=None resolves through the autotune cache/heuristic
+    (fresh cache per test via the conftest fixture) — still id-exact."""
+    vals, idx = retrieve(graded["q"], graded["raw"], K, method="fused",
+                         interpret=True)
+    np.testing.assert_array_equal(np.asarray(idx), graded["idx"])
+
+
+def test_fused_empty_query_rows(graded):
+    """All-zero queries score every doc 0: ties break to the lowest
+    doc id, exactly like lax.top_k over the zero score matrix."""
+    z = sparsify_topk(jnp.zeros((2, BENCH["vocab"])), 4)
+    v_ref, i_ref = retrieve(z, graded["raw"], K, method="impact")
+    v_f, i_f = fused_retrieve(z, graded["raw"], K, block_n=64,
+                              block_w=128, interpret=True)
+    np.testing.assert_array_equal(np.asarray(i_f), np.asarray(i_ref))
+    np.testing.assert_array_equal(np.asarray(i_f),
+                                  np.tile(np.arange(K), (2, 1)))
+    assert (np.asarray(v_f) == 0).all()
+
+
+@pytest.mark.filterwarnings("ignore:build_inverted_index")
+def test_fused_duplicate_scores_tie_to_lowest_id():
+    """A corpus of identical docs makes every score a duplicate — the
+    running merge must hand back ascending doc ids like the
+    reference."""
+    n, vocab = 37, 64
+    m = np.zeros((n, vocab), np.float32)
+    m[:, [3, 7, 11]] = 1.0                     # every doc identical
+    d = sparsify_topk(jnp.asarray(m), 4)
+    q = sparsify_topk(jnp.asarray(m[:1]), 4)
+    idxobj = build_inverted_index(d, vocab)
+    v_ref, i_ref = retrieve(q, idxobj, 8, method="impact")
+    v_f, i_f = fused_retrieve(q, idxobj, 8, block_n=8, block_w=128,
+                              interpret=True)
+    np.testing.assert_array_equal(np.asarray(i_f), np.asarray(i_ref))
+    np.testing.assert_array_equal(np.asarray(i_f)[0], np.arange(8))
+
+
+def test_fused_kernel_k_exceeds_corpus():
+    """Direct kernel call with k > n_docs: real docs first, NEG_INF
+    sentinels in the overflow columns (the topk_score contract)."""
+    w = jnp.asarray([[1.0, 2.0, 3.0]])
+    docs = jnp.asarray([[0, 1, 2]], jnp.int32)
+    vals, idx = fused_impact_topk(w, docs, n_docs=3, k=5, block_n=8,
+                                  block_w=128, interpret=True)
+    np.testing.assert_array_equal(np.asarray(idx)[0, :3], [2, 1, 0])
+    np.testing.assert_allclose(np.asarray(vals)[0, :3], [3.0, 2.0, 1.0])
+    assert (np.asarray(vals)[0, 3:] == NEG_INF).all()
+
+
+def test_fused_kernel_empty_window():
+    """W == 0 (no active terms anywhere) must not build an empty grid:
+    all scores 0, ids ascending."""
+    vals, idx = fused_impact_topk(
+        jnp.zeros((2, 0), jnp.float32), jnp.zeros((2, 0), jnp.int32),
+        n_docs=16, k=4, block_n=8, block_w=128, interpret=True)
+    assert (np.asarray(vals) == 0).all()
+    np.testing.assert_array_equal(np.asarray(idx),
+                                  np.tile(np.arange(4), (2, 1)))
+
+
+# ---------------------------------------------------------------------------
+# quantized-index parity (in-kernel u4+delta decode)
+# ---------------------------------------------------------------------------
+
+def test_fused_quantized_matches_unfused_quantized(graded):
+    """Same compressed index on both sides, so the ids must match
+    bit-exactly — not merely within quantization tolerance."""
+    quant = quantize_index(graded["raw"])
+    v_ref, i_ref = quantized_retrieve(graded["q"], quant, K)
+    v_f, i_f = fused_quantized_retrieve(graded["q"], quant, K,
+                                        block_n=64, block_w=128,
+                                        interpret=True)
+    np.testing.assert_array_equal(np.asarray(i_f), np.asarray(i_ref))
+    np.testing.assert_allclose(np.asarray(v_f), np.asarray(v_ref),
+                               atol=1e-4)
+    # and through the dispatcher with autotune-resolved blocks
+    v_d, i_d = retrieve(graded["q"], quant, K, method="fused",
+                        interpret=True)
+    np.testing.assert_array_equal(np.asarray(i_d), np.asarray(i_ref))
+
+
+def test_fused_quantized_handles_escape_phantoms():
+    """Large doc-id gaps round-trip through escape phantoms (code 0):
+    the in-kernel decode must advance the cumsum without scoring."""
+    n = 2000
+    v = np.zeros((n, 2), np.float32)
+    i = np.zeros((n, 2), np.int32)
+    docs = np.concatenate([np.arange(64), [777, 1901]])
+    v[docs, 0] = 1.5
+    i[docs, 0] = 3
+    from repro.retrieval import SparseRep
+    rep = SparseRep(v, i, (v > 0).sum(1).astype(np.int32))
+    quant = quantize_index(build_inverted_index(rep, 8))
+    assert quant.stats()["phantom_frac"] > 0
+    q = SparseRep(np.ones((1, 1), np.float32),
+                  np.full((1, 1), 3, np.int32), np.ones(1, np.int32))
+    # k covers every positive-scoring doc (66), so the long-jump docs
+    # must surface — a dropped escape phantom would shift their cumsum
+    # and score the wrong doc ids instead
+    v_ref, i_ref = quantized_retrieve(q, quant, 70)
+    v_f, i_f = fused_quantized_retrieve(q, quant, 70, block_n=512,
+                                        block_w=128, interpret=True)
+    np.testing.assert_array_equal(np.asarray(i_f), np.asarray(i_ref))
+    pos = set(np.asarray(i_f)[0][np.asarray(v_f)[0] > 0].tolist())
+    assert {777, 1901} <= pos
+
+
+# ---------------------------------------------------------------------------
+# property test: fused == impact on random shapes
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(n_docs=st.integers(3, 48), doc_nnz=st.integers(1, 6),
+       q_nnz=st.integers(1, 8), k=st.integers(1, 12),
+       zero_q=st.booleans(), seed=st.integers(0, 2 ** 16))
+def test_fused_vs_impact_property(n_docs, doc_nnz, q_nnz, k, zero_q,
+                                  seed):
+    """Randomized id parity. Values are multiples of 1/8, so every
+    product is a multiple of 1/64 and every partial sum is exactly
+    representable in f32 — summation order cannot flip a tie, making
+    id equality a hard invariant (duplicates included). Covers empty
+    query rows (zero_q) and k >= N (k is clamped identically by both
+    paths)."""
+    rng = np.random.default_rng(seed)
+    vocab = 64
+    D = rng.integers(0, 16, size=(n_docs, vocab)).astype(np.float32) / 8
+    Q = rng.integers(0, 16, size=(3, vocab)).astype(np.float32) / 8
+    if zero_q:
+        Q[0] = 0.0
+    d = sparsify_topk(jnp.asarray(D), doc_nnz)
+    q = sparsify_topk(jnp.asarray(Q), q_nnz)
+    index = build_inverted_index(d, vocab)
+
+    v_ref, i_ref = retrieve(q, index, k, method="impact")
+    v_f, i_f = fused_retrieve(q, index, k, block_n=16, block_w=128,
+                              interpret=True)
+    np.testing.assert_array_equal(np.asarray(i_f), np.asarray(i_ref))
+    np.testing.assert_array_equal(np.asarray(v_f), np.asarray(v_ref))
+
+
+# ---------------------------------------------------------------------------
+# analytic window model
+# ---------------------------------------------------------------------------
+
+def test_fused_window_bytes_model():
+    assert fused_window_bytes(4, 16, 32) == 4 * 16 * 32 * 8
+    assert (fused_window_bytes(4, 16, 32, "u4")
+            == 4 * 16 * 32 * 8 + 4 * 16 * 5 * 4)
+    with pytest.raises(ValueError, match="variant"):
+        fused_window_bytes(1, 1, 1, "f16")
+
+
+# ---------------------------------------------------------------------------
+# multidevice subprocess (CI forces 1/2/4 host devices)
+# ---------------------------------------------------------------------------
+
+_FUSED_SCRIPT = textwrap.dedent("""
+    import os
+    n = int(os.environ.get("REPRO_SHARD_TEST_DEVICES", "2"))
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={n}")
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.data.synthetic import lsr_impact_corpus
+    from repro.retrieval import (build_inverted_index, quantize_index,
+                                 retrieve, sparsify_topk)
+
+    assert jax.device_count() >= n, jax.devices()
+    data = lsr_impact_corpus(n_docs=192, vocab=256, doc_nnz=16,
+                             n_queries=4, q_nnz=14, graded=6)
+    q = sparsify_topk(jnp.asarray(data["queries"]), 14)
+    d = sparsify_topk(jnp.asarray(data["docs"]), 16)
+    k = 4
+    raw = build_inverted_index(d, 256)
+    v_ref, i_ref = retrieve(q, raw, k, method="impact")
+    v_f, i_f = retrieve(q, raw, k, method="fused", interpret=True,
+                        block_n=64, block_w=128)
+    np.testing.assert_array_equal(np.asarray(i_f), np.asarray(i_ref))
+    np.testing.assert_allclose(np.asarray(v_f), np.asarray(v_ref),
+                               atol=1e-4)
+    quant = quantize_index(raw)
+    v_q, i_q = retrieve(q, quant, k, method="quantized")
+    v_fq, i_fq = retrieve(q, quant, k, method="fused", interpret=True)
+    np.testing.assert_array_equal(np.asarray(i_fq), np.asarray(i_q))
+    print("ALL_FUSED_IMPACT_PASSED")
+""")
+
+
+def test_fused_kernel_multi_device_subprocess():
+    """Fused kernel under the Pallas interpreter with forced host
+    devices (mirrors test_engine's subprocess pattern — the
+    device-count flag never leaks into this process). Device count:
+    REPRO_SHARD_TEST_DEVICES (default 2; CI's multidevice job sweeps
+    1/2/4)."""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                     "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", _FUSED_SCRIPT], env=env,
+        capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, (
+        f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr[-4000:]}")
+    assert "ALL_FUSED_IMPACT_PASSED" in proc.stdout

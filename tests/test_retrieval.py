@@ -176,13 +176,20 @@ def test_parity_impact_streaming_dense(corpus):
                                   method="streaming", block_b=2,
                                   block_n=16, interpret=True)
     v_imp, i_imp = retrieve(q_rep, index, k, method="impact")
+    v_fused, i_fused = retrieve(q_rep, index, k, method="fused",
+                                block_n=16, block_w=128,
+                                interpret=True)
 
     np.testing.assert_array_equal(np.asarray(i_dense),
                                   np.asarray(i_stream))
     np.testing.assert_array_equal(np.asarray(i_dense), np.asarray(i_imp))
+    np.testing.assert_array_equal(np.asarray(i_dense),
+                                  np.asarray(i_fused))
     np.testing.assert_allclose(np.asarray(v_dense), np.asarray(v_stream),
                                atol=1e-5)
     np.testing.assert_allclose(np.asarray(v_dense), np.asarray(v_imp),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(v_dense), np.asarray(v_fused),
                                atol=1e-5)
 
 
@@ -219,6 +226,33 @@ def test_dispatcher_input_errors(corpus):
                  method="impact")
     with pytest.raises(ValueError, match="dense .* corpus matrix"):
         retrieve(jnp.asarray(Q), index, 5, method="dense")
+
+
+def test_dispatcher_rejects_stray_kwargs(corpus):
+    """Kwargs the *resolved* method cannot honor raise instead of being
+    silently ignored — a typo'd tuning knob must not become a no-op."""
+    Q, D = corpus
+    q_rep = sparsify_threshold(jnp.asarray(Q), 0.0, max_nnz=16)
+    d_rep = sparsify_threshold(jnp.asarray(D), 0.0, max_nnz=16)
+    index = build_inverted_index(d_rep, V)
+    with pytest.raises(ValueError, match="does not accept mesh"):
+        retrieve(q_rep, index, 5, method="impact", mesh=object())
+    with pytest.raises(ValueError, match="does not accept prune_margin"):
+        retrieve(q_rep, jnp.asarray(D), 5, method="streaming",
+                 prune_margin=0.5, interpret=True)
+    with pytest.raises(ValueError, match="does not accept block_w"):
+        retrieve(q_rep, index, 5, method="impact", block_w=128)
+    with pytest.raises(ValueError, match="does not accept candidates"):
+        retrieve(q_rep, index, 5, method="fused", candidates=32,
+                 interpret=True)
+    # the check runs against the *resolved* method, so 'auto' on a
+    # small bare index (-> impact) rejects fused-kernel knobs too
+    with pytest.raises(ValueError, match="method='impact'"):
+        retrieve(q_rep, index, 5, block_n=64)
+    # None sentinels are "not passed", never an error
+    vals, idx = retrieve(q_rep, index, 5, method="impact", mesh=None,
+                         block_w=None)
+    assert idx.shape == (5, 5)
 
 
 # ---------------------------------------------------------------------------
