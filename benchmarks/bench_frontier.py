@@ -1,0 +1,398 @@
+"""Serving-frontier benchmark: caches, tenancy, continuous batching.
+
+Drives the frontier subsystem (DESIGN.md §13) on the same simulated
+clock and workload machinery as ``bench_serving`` — deterministic,
+bit-stable records, real production code under test. Four experiments
+behind ``BENCH_frontier.json``:
+
+* ``zipf_replay`` — the same Zipf-skewed query stream served cache-off
+  and cache-on (result cache + hot posting windows over the fused
+  scorer). Reports hit rate, p50/p99, sustained QPS both ways, and a
+  **parity** bit: cached results must be id- and value-identical to
+  the uncached engine on a probe batch. Offered load sits above the
+  cache-off capacity, so the cache-on sustained-QPS win is the point
+  of the experiment, not noise.
+* ``churn`` — interleaves add/remove/flush/compact with cached
+  searches; after every mutation the cached frontend is compared
+  against the raw engine on the same builder. ``mismatches`` must be
+  0 — generation invalidation means a stale entry is *never* served.
+* ``tenancy`` — three tenants (weights 2/1/1) saturating one shared
+  encoder, one of them submitting poison batches. Checks stride-fair
+  capacity splits (the weight-2 tenant serves ~2× the weight-1s
+  during the contended window) and isolation: only the poisoned
+  tenant records failures, the victims' shed/failed stay 0.
+* ``continuous`` — the same bursty mixed-SLO arrival sequence into a
+  one-batch-per-tick loop and a ``continuous=True`` loop. EDF
+  admission lets tight-deadline requests jump the queue instead of
+  shedding behind patient ones, so continuous must sustain strictly
+  higher QPS at no worse shed rate.
+
+``--smoke`` (or ``BENCH_SMOKE=1``) shortens everything for CI;
+``benchmarks/check.py`` gates the record, ``report.py`` trends it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.workload import (VOCAB, SimClock, ZipfQueries,
+                                 make_sim_encoder, poisson_arrivals,
+                                 pump, uniform_query)
+from repro.runtime.faults import inject_faults
+from repro.runtime.frontier import (CachedEngine, HotPostingCache,
+                                    QueryResultCache, TenantPool,
+                                    TenantQuota)
+from repro.runtime.serving import (AdmissionPolicy, BatchedEncoder,
+                                   BatchPolicy, CorpusEngine,
+                                   FailedResult, Request, ServingLoop,
+                                   ShedResult)
+
+K = 10
+MAX_BATCH = 16
+MAX_WAIT_S = 0.005
+CATALOG = 64                 # distinct Zipf query texts
+ZIPF_ALPHA = 1.1
+CACHE_BYTES = 1 << 20
+HOT_BYTES = 1 << 16
+HIT_COST_S = 0.0002          # simulated serve-from-cache cost
+MISS_COST_S = 0.004          # simulated full-search cost
+POISON_TOKEN = VOCAB + 7
+
+FULL = dict(n_docs=512, replay_s=4.0, replay_qps=300.0,
+            churn_rounds=40, tenant_s=1.5, tenant_qps=150.0,
+            cont_cycles=8)
+SMOKE = dict(n_docs=192, replay_s=2.0, replay_qps=300.0,
+             churn_rounds=16, tenant_s=1.0, tenant_qps=150.0,
+             cont_cycles=4)
+
+
+def _sim_corpus_engine(clock: SimClock, n_docs: int,
+                       **engine_kw) -> CorpusEngine:
+    """A ``CorpusEngine`` over the sim encoder, pre-loaded with
+    ``n_docs`` deterministic documents; the clock is rezeroed so
+    corpus setup doesn't bill the experiment."""
+    be = BatchedEncoder(make_sim_encoder(clock),
+                        policy=BatchPolicy(max_batch=MAX_BATCH,
+                                           max_wait_s=MAX_WAIT_S))
+    eng = CorpusEngine(be, VOCAB)
+    rng = np.random.default_rng(0)
+    eng.add_docs(list(rng.integers(1, VOCAB, size=(n_docs, 24))
+                      .astype(np.int32)))
+    eng.flush()
+    clock.t = 0.0
+    return eng
+
+
+def _encode_one(eng: CorpusEngine, toks: np.ndarray):
+    """Encode one query through the engine's (clock-advancing)
+    encoder."""
+    toks = np.asarray(toks, np.int32)[None, :]
+    return eng.encoder.encode_fn(toks, np.ones_like(toks))
+
+
+def run_zipf_replay(n_docs: int, duration: float, qps: float) -> Dict:
+    """The same skewed stream, cache-off then cache-on."""
+    out: Dict = {}
+    for mode in ("off", "on"):
+        clock = SimClock()
+        eng = _sim_corpus_engine(clock, n_docs)
+        cache = hot = None
+        if mode == "on":
+            cache = QueryResultCache(CACHE_BYTES)
+            hot = HotPostingCache(HOT_BYTES)
+            frontend = CachedEngine(eng, result_cache=cache,
+                                    hot_cache=hot, tag="replay")
+        else:
+            frontend = eng
+        zipf = ZipfQueries(CATALOG, alpha=ZIPF_ALPHA, seed=3)
+        rng = np.random.default_rng(4)
+        lats, served = [], 0
+        for t_arr in poisson_arrivals(rng, qps, 0.0, duration):
+            # closed single-server replay: the serving point can't
+            # start before the query arrives or the previous finishes
+            clock.t = max(clock.t, t_arr)
+            _, toks = zipf.sample(rng)
+            rep = _encode_one(eng, toks)
+            h0 = cache.counters["hits"] if cache is not None else 0
+            frontend.search(rep, K, method="fused")
+            hit = cache is not None and cache.counters["hits"] > h0
+            clock.advance(HIT_COST_S if hit else MISS_COST_S)
+            lats.append(clock.t - t_arr)
+            served += 1
+        lat_ms = np.asarray(lats) * 1e3
+        span = max(clock.t, duration)
+        rec = {
+            "offered_qps": round(served / duration, 2),
+            "sustained_qps": round(served / span, 2),
+            "p50_ms": round(float(np.percentile(lat_ms, 50)), 3),
+            "p99_ms": round(float(np.percentile(lat_ms, 99)), 3),
+        }
+        if mode == "on":
+            rec["hit_rate"] = cache.stats()["hit_rate"]
+            rec["cache"] = cache.stats()
+            rec["hot"] = hot.stats()
+            # the hard invariant, checked on this very corpus: cached
+            # vs raw engine, id- and value-identical
+            probes = eng.encoder.encode_fn(
+                zipf.tokens[:8], np.ones_like(zipf.tokens[:8]))
+            cv, ci = frontend.search(probes, K, method="fused")
+            rv, ri = eng.search(probes, K, method="fused")
+            rec["parity"] = bool(
+                np.array_equal(cv, np.asarray(rv))
+                and np.array_equal(ci, np.asarray(ri)))
+        out[f"cache_{mode}"] = rec
+    return out
+
+
+def run_churn(n_docs: int, rounds: int) -> Dict:
+    """Mutations interleaved with cached searches; cache-on must
+    match cache-off after every single step."""
+    clock = SimClock()
+    eng = _sim_corpus_engine(clock, n_docs)
+    cache = QueryResultCache(CACHE_BYTES)
+    cached = CachedEngine(eng, result_cache=cache,
+                          hot_cache=HotPostingCache(HOT_BYTES),
+                          tag="churn")
+    zipf = ZipfQueries(CATALOG, alpha=ZIPF_ALPHA, seed=3)
+    rng = np.random.default_rng(5)
+    live = list(eng.builder.external_ids()) if hasattr(
+        eng.builder, "external_ids") else []
+    mismatches = 0
+    ops = {"add": 0, "remove": 0, "flush": 0, "compact": 0, "none": 0}
+    removable: list = []
+    for _ in range(rounds):
+        op = ("add", "remove", "flush", "compact",
+              "none")[int(rng.integers(0, 5))]
+        ops[op] += 1
+        if op == "add":
+            ids = eng.add_docs(list(
+                rng.integers(1, VOCAB, size=(6, 24)).astype(np.int32)))
+            removable.extend(int(i) for i in ids)
+        elif op == "remove" and removable:
+            n = min(3, len(removable))
+            eng.remove_docs(removable[:n])
+            removable = removable[n:]
+        elif op == "flush":
+            eng.flush()
+        elif op == "compact":
+            eng.flush(force_compact=True)
+        qidx = rng.integers(0, CATALOG, size=4)
+        probes = eng.encoder.encode_fn(
+            zipf.tokens[qidx], np.ones((4, zipf.tokens.shape[1]),
+                                       np.int32))
+        cv, ci = cached.search(probes, K)
+        rv, ri = eng.search(probes, K)
+        if not (np.array_equal(cv, np.asarray(rv))
+                and np.array_equal(ci, np.asarray(ri))):
+            mismatches += 1
+    st = cache.stats()
+    return {
+        "rounds": rounds,
+        "ops": ops,
+        "mismatches": mismatches,
+        "end_generation": eng.builder.generation,
+        "invalidations": st["invalidations"],
+        "hits": st["hits"],
+        "misses": st["misses"],
+        "live_docs": int(eng.builder.stats()["n_alive"]),
+    }
+
+
+def _pool_pump(pool: TenantPool, clock: SimClock,
+               until_t: float) -> None:
+    """``workload.pump`` lifted to the pool scheduler."""
+    while clock.t < until_t:
+        _, n = pool.tick()
+        if n:
+            continue
+        trigs = [t.loop.pending[0].arrival_t
+                 + t.loop.encoder.policy.max_wait_s
+                 for t in (pool.tenant(nm) for nm in pool.names())
+                 if t.loop.pending]
+        if not trigs:
+            clock.t = until_t
+            return
+        clock.t = min(max(min(trigs), clock.t + 1e-4), until_t)
+
+
+def run_tenancy(duration: float, qps_each: float) -> Dict:
+    """Weighted fairness under saturation + poison isolation."""
+    clock = SimClock()
+    # fold a search-sized per-item cost in so the shared encoder is
+    # the contended resource; tenant "c" poisons every 10th request
+    faulty = inject_faults(
+        make_sim_encoder(clock, item_cost=lambda: MISS_COST_S),
+        [{"on": {"token": POISON_TOKEN}, "exc": "fault"}],
+        seed=0, sleep=clock.advance)
+    be = BatchedEncoder(faulty,
+                        policy=BatchPolicy(max_batch=MAX_BATCH,
+                                           max_wait_s=MAX_WAIT_S))
+    pool = TenantPool(be, clock=clock, cache_bytes=CACHE_BYTES)
+    weights = {"a": 2.0, "b": 1.0, "c": 1.0}
+    for name, w in weights.items():
+        pool.add_tenant(name, VOCAB, quota=TenantQuota(weight=w),
+                        keep_forward=True)
+    rng = np.random.default_rng(7)
+    for name in pool.names():
+        pool.add_docs(name, list(
+            rng.integers(1, VOCAB, size=(12, 24)).astype(np.int32)))
+    clock.t = 0.0
+    uid, n_poison = 0, 0
+    names = ("a", "b", "c")
+    for t_arr in poisson_arrivals(rng, 3 * qps_each, 0.0, duration):
+        _pool_pump(pool, clock, t_arr)
+        name = names[uid % 3]
+        toks = uniform_query(rng)
+        if name == "c" and uid % 30 == 2:
+            toks[0] = POISON_TOKEN
+            n_poison += 1
+        pool.submit(name, Request(uid=uid, tokens=toks))
+        uid += 1
+    # fairness is read *inside* the contended window — drain serves
+    # the backlog and would equalize totals
+    contended = {n: int(pool.tenant(n).loop.counters["served"])
+                 for n in names}
+    pool.drain()
+    per = {}
+    for n in names:
+        c = pool.tenant(n).loop.counters
+        per[n] = {
+            "weight": weights[n],
+            "served_contended": contended[n],
+            "served": int(c["served"]),
+            "shed": int(c["shed_admission"] + c["shed_expired"]),
+            "failed": int(c["failed"]),
+        }
+    fair = (contended["a"] / max(1, contended["b"]))
+    return {
+        "tenants": per,
+        "fairness_ratio_ab": round(fair, 3),
+        "weight_ratio_ab": weights["a"] / weights["b"],
+        "poison_submitted": n_poison,
+        "pool_memory_bytes": pool.memory_bytes(),
+    }
+
+
+def run_continuous(cycles: int) -> Dict:
+    """Bursty mixed-SLO traffic: one-batch-per-tick vs continuous."""
+    burst_s, calm_s = 0.25, 0.75
+    burst_qps, calm_qps = 600.0, 40.0
+    tight_s, loose_s = 0.04, 1.0
+
+    def run(continuous: bool) -> Dict:
+        clock = SimClock()
+        be = BatchedEncoder(
+            make_sim_encoder(clock, item_cost=lambda: 0.002),
+            policy=BatchPolicy(max_batch=MAX_BATCH,
+                               max_wait_s=MAX_WAIT_S))
+        loop = ServingLoop(be, clock=clock,
+                           admission=AdmissionPolicy(
+                               max_queue_depth=256),
+                           continuous=continuous, window=1 << 16)
+        rng = np.random.default_rng(6)
+        uid = 0
+        t0 = 0.0
+        for _ in range(cycles):
+            for qps, dur in ((burst_qps, burst_s),
+                             (calm_qps, calm_s)):
+                for t_arr in poisson_arrivals(rng, qps, t0, t0 + dur):
+                    pump(loop, clock, t_arr)
+                    toks = uniform_query(rng)
+                    deadline = tight_s if uid % 2 else loose_s
+                    loop.submit(Request(uid=uid, tokens=toks,
+                                        deadline_s=deadline))
+                    uid += 1
+                pump(loop, clock, t0 + dur)
+                t0 += dur
+        while loop.pending:
+            loop.tick(force=True)
+        served = shed = failed = 0
+        for u in range(uid):
+            res = loop.take(u)          # KeyError == lost uid
+            if isinstance(res, ShedResult):
+                shed += 1
+            elif isinstance(res, FailedResult):
+                failed += 1
+            else:
+                served += 1
+        span = max(clock.t, 1e-9)
+        lat = loop.latencies() * 1e3
+        return {
+            "submitted": uid,
+            "served": served,
+            "shed": shed,
+            "failed": failed,
+            "lost": uid - served - shed - failed,
+            "sustained_qps": round(served / span, 2),
+            "shed_rate": round(shed / max(1, uid), 4),
+            "p50_ms": (round(float(np.percentile(lat, 50)), 3)
+                       if lat.size else 0.0),
+            "p99_ms": (round(float(np.percentile(lat, 99)), 3)
+                       if lat.size else 0.0),
+        }
+
+    return {"one_batch": run(False), "continuous": run(True)}
+
+
+def run(smoke: bool = False, json_path: str = None):
+    smoke = smoke or os.environ.get("BENCH_SMOKE") == "1"
+    p = SMOKE if smoke else FULL
+
+    replay = run_zipf_replay(p["n_docs"], p["replay_s"],
+                             p["replay_qps"])
+    churn = run_churn(p["n_docs"], p["churn_rounds"])
+    tenancy = run_tenancy(p["tenant_s"], p["tenant_qps"])
+    continuous = run_continuous(p["cont_cycles"])
+
+    record = {
+        "shape": {"vocab": VOCAB, "n_docs": p["n_docs"],
+                  "catalog": CATALOG, "zipf_alpha": ZIPF_ALPHA,
+                  "max_batch": MAX_BATCH,
+                  "cache_bytes": CACHE_BYTES,
+                  "hot_bytes": HOT_BYTES},
+        "zipf_replay": replay,
+        "churn": churn,
+        "tenancy": tenancy,
+        "continuous": continuous,
+    }
+
+    on, off = replay["cache_on"], replay["cache_off"]
+    print("zipf replay: hit_rate="
+          f"{on['hit_rate']} parity={on['parity']} "
+          f"qps on/off={on['sustained_qps']}/{off['sustained_qps']} "
+          f"p99 on/off={on['p99_ms']}/{off['p99_ms']} ms")
+    print(f"churn: {churn['rounds']} rounds, "
+          f"{churn['mismatches']} mismatches, "
+          f"gen={churn['end_generation']}, "
+          f"invalidations={churn['invalidations']}")
+    t = tenancy["tenants"]
+    print("tenancy: contended served "
+          + ", ".join(f"{n}={t[n]['served_contended']}" for n in t)
+          + f" (ratio a/b={tenancy['fairness_ratio_ab']}), "
+          + f"poison c failed={t['c']['failed']}, "
+          + f"victims shed+failed="
+          f"{t['a']['shed'] + t['a']['failed'] + t['b']['shed'] + t['b']['failed']}")
+    cb, ob = continuous["continuous"], continuous["one_batch"]
+    print(f"continuous: qps {ob['sustained_qps']} -> "
+          f"{cb['sustained_qps']}, shed_rate {ob['shed_rate']} -> "
+          f"{cb['shed_rate']}")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(record, f, indent=2, sort_keys=True)
+        print(f"wrote {json_path}")
+    return record
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized workload")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="emit BENCH_frontier.json-style record here")
+    a = ap.parse_args()
+    run(smoke=a.smoke, json_path=a.json)

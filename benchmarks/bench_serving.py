@@ -36,26 +36,25 @@ from __future__ import annotations
 import argparse
 import json
 import os
-from typing import Callable, Dict, List
+from typing import Dict, List
 
 import numpy as np
 
-from repro.retrieval.sparse_rep import SparseRep
+from benchmarks.workload import (ENCODE_BASE_S, ENCODE_ITEM_S,
+                                 REP_WIDTH, VOCAB, SimClock,
+                                 make_sim_encoder, poisson_arrivals,
+                                 pump, uniform_query)
 from repro.runtime.faults import inject_faults
 from repro.runtime.serving import (AdmissionPolicy, BatchedEncoder,
                                    BatchPolicy, DegradeController,
                                    DegradePolicy, FailedResult, Request,
                                    ServingLoop, ShedResult)
 
-VOCAB = 512
-REP_WIDTH = 16
 DOC_LEN = 24
 SLO_S = 0.05
 MAX_BATCH = 16
 MAX_WAIT_S = 0.005
 MAX_QUEUE = 256
-ENCODE_BASE_S = 0.002       # per-dispatch fixed cost
-ENCODE_ITEM_S = 0.0005      # per-request marginal cost
 # simulated per-query search cost by ladder rung (exact -> minimal):
 # the quality/latency trade the degrade ladder exploits
 SEARCH_COST_S = (0.004, 0.0025, 0.0012, 0.0006)
@@ -68,64 +67,6 @@ SMOKE = dict(n_docs=256, durations=(1.5, 2.0, 2.5), fault_s=1.5,
              fault_qps=150.0, n_probes=8)
 POISON_TOKEN = VOCAB + 7
 POISON_EVERY = 40
-
-
-class SimClock:
-    """Monotonic simulated time (the loop's ``clock`` callable)."""
-
-    def __init__(self):
-        self.t = 0.0
-
-    def __call__(self) -> float:
-        return self.t
-
-    def advance(self, dt: float) -> None:
-        self.t += dt
-
-
-def make_sim_encoder(clock: SimClock,
-                     item_cost: Callable[[], float] = lambda: 0.0):
-    """Deterministic sparse encoder: bag-of-token-counts reps, cost
-    modeled as a simulated time advance (base + per-item).
-
-    ``item_cost`` adds the per-request downstream (search) cost to the
-    advance — the serving pipeline is encode→search per batch, so
-    folding it in here lets the loop's own EWMA see the true service
-    time (that estimate drives admission and the pressure signal)."""
-
-    def encode(tokens, mask):
-        toks = np.asarray(tokens)
-        msk = np.asarray(mask)
-        B = toks.shape[0]
-        clock.advance(ENCODE_BASE_S
-                      + (ENCODE_ITEM_S + item_cost()) * B)
-        vals = np.zeros((B, REP_WIDTH), np.float32)
-        idxs = np.zeros((B, REP_WIDTH), np.int32)
-        for i in range(B):
-            ids, counts = np.unique(toks[i][msk[i] > 0] % VOCAB,
-                                    return_counts=True)
-            order = np.argsort(-counts, kind="stable")[:REP_WIDTH]
-            k = order.size
-            vals[i, :k] = counts[order]
-            idxs[i, :k] = ids[order]
-        return SparseRep(vals, idxs,
-                         (vals > 0).sum(axis=1).astype(np.int32))
-
-    return encode
-
-
-def pump(loop: ServingLoop, clock: SimClock, until_t: float) -> None:
-    """Run the (synchronous) server forward to wall-time ``until_t``:
-    tick until the queue is drained or time runs out (service time
-    advances the clock inside the encode fn)."""
-    pol = loop.encoder.policy
-    while clock.t < until_t:
-        if not loop.pending:
-            clock.t = until_t
-            return
-        if not loop.tick() and loop.pending:
-            trig = loop.pending[0].arrival_t + pol.max_wait_s
-            clock.t = min(max(trig, clock.t + 1e-4), until_t)
 
 
 def _pct(lat_s: np.ndarray, q: float) -> float:
@@ -151,16 +92,14 @@ def run_traffic(durations) -> List[Dict]:
         t0, c0 = clock.t, dict(loop.counters)
         lat0, tr0 = loop.latencies().size, len(ctl.transitions)
         t_end = t0 + dur
-        t_arr = t0 + rng.exponential(1.0 / qps)
         n_offered = 0
-        while t_arr < t_end:
+        for t_arr in poisson_arrivals(rng, qps, t0, t_end):
             pump(loop, clock, t_arr)
-            toks = rng.integers(1, VOCAB, size=12).astype(np.int32)
+            toks = uniform_query(rng)
             loop.submit(Request(uid=uid, tokens=toks,
                                 deadline_s=SLO_S))
             uid += 1
             n_offered += 1
-            t_arr += rng.exponential(1.0 / qps)
         pump(loop, clock, t_end)
         if name == PHASES[-1][0]:
             while loop.pending:            # settle the tail
@@ -259,18 +198,16 @@ def run_faults(duration: float, qps: float) -> Dict:
         window=1 << 16)
     rng = np.random.default_rng(2)
     uid, poisoned = 0, []
-    t_arr = rng.exponential(1.0 / qps)
     min_cap = MAX_BATCH
-    while t_arr < duration:
+    for t_arr in poisson_arrivals(rng, qps, 0.0, duration):
         pump(loop, clock, t_arr)
         min_cap = min(min_cap, loop.stats()["batch_cap"])
-        toks = rng.integers(1, VOCAB, size=12).astype(np.int32)
+        toks = uniform_query(rng)
         if uid % POISON_EVERY == 7:
             toks[0] = POISON_TOKEN
             poisoned.append(uid)
         loop.submit(Request(uid=uid, tokens=toks, deadline_s=SLO_S))
         uid += 1
-        t_arr += rng.exponential(1.0 / qps)
     while loop.pending:
         loop.tick(force=True)
     served = shed = 0

@@ -27,6 +27,15 @@ diffs. Each bench family has a named check:
                   exact rung at 1.0, and the fault run lost zero
                   requests with only poisoned uids failing (plus an
                   OOM cap halve + regrow);
+* ``frontier``  — the caching/tenancy frontier holds its invariants:
+                  cache-on results id- and value-identical to
+                  cache-off (Zipf replay probe AND zero mismatches
+                  under index churn), hit rate >= 0.5 on the skewed
+                  replay with a sustained-QPS win over cache-off,
+                  weighted-fair tenant scheduling near its configured
+                  ratio with poison failures confined to the poisoned
+                  tenant, and continuous batching strictly out-serving
+                  one-batch-per-tick at no worse shed rate;
 * ``quality``   — the effectiveness loop closed: exact retrieval
                   scores nDCG@10 = 1.0 on the planted graded corpus,
                   pruned (default margin) and quantized match exact
@@ -77,6 +86,12 @@ LOSSLESS_METHODS = ("pruned", "quantized", "term_sharded",
                     "doc_sharded")
 QUALITY_TOL = 1e-3
 MIN_TRAIN_DELTA = 0.01
+# frontier bars: the ISSUE-9 acceptance criteria
+MIN_HIT_RATE = 0.5
+# measured fair-share ratio must land near the configured weight
+# ratio — wide enough for batch-quantization noise, tight enough that
+# unweighted round-robin (ratio 1.0) fails
+FAIRNESS_REL_TOL = 0.35
 
 
 def check_kernels(d: dict) -> List[str]:
@@ -255,6 +270,83 @@ def check_serving(d: dict) -> List[str]:
     return errs
 
 
+def check_frontier(d: dict) -> List[str]:
+    errs = []
+    replay = d.get("zipf_replay", {})
+    on, off = replay.get("cache_on", {}), replay.get("cache_off", {})
+    if not on or not off:
+        return [f"zipf_replay missing cache_on/cache_off rows: "
+                f"{sorted(replay)}"]
+    if on.get("parity") is not True:
+        errs.append(f"cache-on results are not id/value-identical to "
+                    f"the raw engine on the replay probe: "
+                    f"parity={on.get('parity')}")
+    hr = on.get("hit_rate", 0.0)
+    if not hr >= MIN_HIT_RATE:
+        errs.append(f"zipf replay hit_rate {hr} below the "
+                    f"{MIN_HIT_RATE} bar")
+    if not on.get("sustained_qps", 0.0) > off.get("sustained_qps",
+                                                  float("inf")):
+        errs.append(f"cache-on sustained {on.get('sustained_qps')} qps "
+                    f"not above cache-off "
+                    f"{off.get('sustained_qps')} — the cache bought "
+                    f"no throughput")
+    if not on.get("p99_ms", float("inf")) < off.get("p99_ms", 0.0):
+        errs.append(f"cache-on p99 {on.get('p99_ms')}ms not below "
+                    f"cache-off {off.get('p99_ms')}ms")
+    churn = d.get("churn", {})
+    if not churn.get("rounds", 0) > 0:
+        errs.append("churn experiment ran 0 rounds")
+    if churn.get("mismatches", -1) != 0:
+        errs.append(f"churn: {churn.get('mismatches')} cached searches "
+                    f"differed from cache-off — a stale entry was "
+                    f"served")
+    if not churn.get("invalidations", 0) >= 1:
+        errs.append("churn: generation invalidation never fired — the "
+                    "mutations were not exercised against the cache")
+    ten = d.get("tenancy", {})
+    per = ten.get("tenants", {})
+    poisoned = [n for n, t in per.items() if t.get("failed", 0) > 0]
+    if poisoned != ["c"]:
+        errs.append(f"tenancy isolation: expected only tenant 'c' to "
+                    f"record failures, got {poisoned or 'none'}")
+    for n in ("a", "b"):
+        t = per.get(n, {})
+        if t.get("shed", -1) != 0 or t.get("failed", -1) != 0:
+            errs.append(f"tenancy isolation: victim tenant {n!r} has "
+                        f"shed={t.get('shed')} failed={t.get('failed')}"
+                        f" — the poisoned tenant leaked")
+    ratio = ten.get("fairness_ratio_ab", 0.0)
+    want = ten.get("weight_ratio_ab", 0.0)
+    if not want > 0 or abs(ratio - want) > FAIRNESS_REL_TOL * want:
+        errs.append(f"tenancy fairness: contended served ratio a/b "
+                    f"{ratio} not within {FAIRNESS_REL_TOL:.0%} of the "
+                    f"weight ratio {want}")
+    cont = d.get("continuous", {})
+    cb, ob = cont.get("continuous", {}), cont.get("one_batch", {})
+    if not cb or not ob:
+        return errs + [f"continuous experiment missing rows: "
+                       f"{sorted(cont)}"]
+    for name, row in (("one_batch", ob), ("continuous", cb)):
+        if row.get("lost", -1) != 0:
+            errs.append(f"continuous/{name}: {row.get('lost')} "
+                        f"requests lost")
+        if row.get("failed", -1) != 0:
+            errs.append(f"continuous/{name}: {row.get('failed')} "
+                        f"failed in a fault-free run")
+    if not cb.get("sustained_qps", 0.0) > ob.get("sustained_qps",
+                                                 float("inf")):
+        errs.append(f"continuous sustained {cb.get('sustained_qps')} "
+                    f"qps not strictly above one-batch-per-tick "
+                    f"{ob.get('sustained_qps')}")
+    if not cb.get("shed_rate", float("inf")) <= ob.get("shed_rate",
+                                                       -1.0):
+        errs.append(f"continuous shed_rate {cb.get('shed_rate')} above "
+                    f"one-batch-per-tick {ob.get('shed_rate')} — the "
+                    f"QPS win was bought with extra shedding")
+    return errs
+
+
 def check_quality(d: dict) -> List[str]:
     errs = []
     if d.get("quality_metric") != "ndcg@10":
@@ -324,6 +416,7 @@ CHECKS: Dict[str, Callable[[dict], List[str]]] = {
     "retrieval": check_retrieval,
     "engine": check_engine,
     "serving": check_serving,
+    "frontier": check_frontier,
     "quality": check_quality,
 }
 

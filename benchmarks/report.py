@@ -83,8 +83,10 @@ def _bench_metrics(path: str) -> dict:
     fwd/fwd_bwd passes), ``BENCH_retrieval.json`` (``methods``),
     ``BENCH_engine.json`` (``methods`` + quantization ratio + sharded
     scaling), ``BENCH_serving.json`` (per-phase traffic stats +
-    ladder quality + fault-run outcome), and ``BENCH_quality.json``
-    (method/ladder/rep-width nDCG@10 + trained-vs-init deltas).
+    ladder quality + fault-run outcome), ``BENCH_quality.json``
+    (method/ladder/rep-width nDCG@10 + trained-vs-init deltas), and
+    ``BENCH_frontier.json`` (cache hit rate, cache-on/off p99 and
+    QPS, churn coherence, tenant fairness, continuous-batching gain).
     """
     d = json.load(open(path))
     out = {}
@@ -123,6 +125,20 @@ def _bench_metrics(path: str) -> dict:
     tv = d.get("trained_vs_init", {})
     for k, v in tv.get("delta", {}).items():
         out[f"quality/train_delta/{k}"] = v
+    replay = d.get("zipf_replay", {})
+    for mode, rec in replay.items():
+        for k in ("sustained_qps", "p99_ms"):
+            out[f"frontier/{mode}/{k}"] = rec.get(k)
+        if "hit_rate" in rec:
+            out[f"frontier/{mode}/hit_rate"] = rec.get("hit_rate")
+    if "churn" in d:
+        out["frontier/churn/mismatches"] = d["churn"].get("mismatches")
+    if "tenancy" in d:
+        out["frontier/tenancy/fairness_ab"] = d["tenancy"].get(
+            "fairness_ratio_ab")
+    for mode, rec in d.get("continuous", {}).items():
+        out[f"frontier/{mode}/qps"] = rec.get("sustained_qps")
+        out[f"frontier/{mode}/shed_rate"] = rec.get("shed_rate")
     return out
 
 
@@ -198,7 +214,7 @@ def bench_trends(history_dir: str = "bench_history") -> int:
     number of tables printed."""
     printed = 0
     for name in ("BENCH_kernels", "BENCH_retrieval", "BENCH_engine",
-                 "BENCH_serving", "BENCH_quality"):
+                 "BENCH_serving", "BENCH_frontier", "BENCH_quality"):
         hist = sorted(glob.glob(os.path.join(history_dir,
                                              f"{name}*.json")),
                       key=_snapshot_key)

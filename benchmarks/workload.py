@@ -1,0 +1,164 @@
+"""Reusable serving-workload machinery for the traffic benches.
+
+Everything the simulated-clock serving benches share lives here so
+``bench_serving`` (survival under overload/faults) and
+``bench_frontier`` (caches/tenancy/continuous batching) drive the
+*same* traffic model:
+
+* ``SimClock`` — monotonic simulated time; service costs are explicit
+  ``advance`` calls, so every record is bit-stable across machines.
+* ``make_sim_encoder`` — the deterministic bag-of-token-counts sparse
+  encoder with its cost model (per-dispatch base + per-item marginal,
+  the shape that makes batching amortization real on the sim clock).
+* ``pump`` — run a synchronous ``ServingLoop`` forward to a target
+  sim time, advancing the clock to the next dispatch trigger when a
+  tick declines.
+* ``poisson_arrivals`` — the open-loop arrival process as a lazy
+  generator. Laziness is load-bearing for record stability: each
+  inter-arrival gap is drawn when the iterator *resumes*, so a body
+  that draws its query from the same ``rng`` between arrivals
+  consumes the stream in exactly the order the original inline loops
+  did (gap, query, gap, query, …).
+* Query samplers — ``uniform_query`` (every query distinct: the
+  cache-hostile baseline) and ``ZipfQueries`` (a fixed catalog of
+  query texts sampled by Zipf(alpha) popularity rank: the skewed
+  traffic real LSR serving sees, and the regime where a result
+  cache's hit rate means anything at all).
+
+Constants here are the shared workload shape; benches import them
+rather than re-declaring, so the two records stay comparable.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Iterator, Tuple
+
+import numpy as np
+
+from repro.retrieval.sparse_rep import SparseRep
+from repro.runtime.serving import ServingLoop
+
+VOCAB = 512
+REP_WIDTH = 16
+Q_LEN = 12
+ENCODE_BASE_S = 0.002       # per-dispatch fixed cost
+ENCODE_ITEM_S = 0.0005      # per-request marginal cost
+
+
+class SimClock:
+    """Monotonic simulated time (the loop's ``clock`` callable)."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def make_sim_encoder(clock: SimClock,
+                     item_cost: Callable[[], float] = lambda: 0.0,
+                     *, vocab: int = VOCAB,
+                     rep_width: int = REP_WIDTH,
+                     base_s: float = ENCODE_BASE_S,
+                     item_s: float = ENCODE_ITEM_S):
+    """Deterministic sparse encoder: bag-of-token-counts reps, cost
+    modeled as a simulated time advance (base + per-item).
+
+    ``item_cost`` adds the per-request downstream (search) cost to the
+    advance — the serving pipeline is encode→search per batch, so
+    folding it in here lets the loop's own EWMA see the true service
+    time (that estimate drives admission and the pressure signal)."""
+
+    def encode(tokens, mask):
+        toks = np.asarray(tokens)
+        msk = np.asarray(mask)
+        B = toks.shape[0]
+        clock.advance(base_s + (item_s + item_cost()) * B)
+        vals = np.zeros((B, rep_width), np.float32)
+        idxs = np.zeros((B, rep_width), np.int32)
+        for i in range(B):
+            ids, counts = np.unique(toks[i][msk[i] > 0] % vocab,
+                                    return_counts=True)
+            order = np.argsort(-counts, kind="stable")[:rep_width]
+            k = order.size
+            vals[i, :k] = counts[order]
+            idxs[i, :k] = ids[order]
+        return SparseRep(vals, idxs,
+                         (vals > 0).sum(axis=1).astype(np.int32))
+
+    return encode
+
+
+def pump(loop: ServingLoop, clock: SimClock, until_t: float) -> None:
+    """Run the (synchronous) server forward to wall-time ``until_t``:
+    tick until the queue is drained or time runs out (service time
+    advances the clock inside the encode fn)."""
+    pol = loop.encoder.policy
+    while clock.t < until_t:
+        if not loop.pending:
+            clock.t = until_t
+            return
+        if not loop.tick() and loop.pending:
+            trig = loop.pending[0].arrival_t + pol.max_wait_s
+            clock.t = min(max(trig, clock.t + 1e-4), until_t)
+
+
+def poisson_arrivals(rng: np.random.Generator, qps: float,
+                     t0: float, t_end: float) -> Iterator[float]:
+    """Open-loop Poisson arrival times in ``(t0, t_end)``.
+
+    Lazy by design (module docstring): the next inter-arrival gap is
+    drawn from ``rng`` only when the iterator resumes, so per-arrival
+    draws made by the loop body interleave into the stream exactly
+    where an inline implementation would put them.
+    """
+    t = t0 + rng.exponential(1.0 / qps)
+    while t < t_end:
+        yield t
+        t += rng.exponential(1.0 / qps)
+
+
+def uniform_query(rng: np.random.Generator, *, vocab: int = VOCAB,
+                  q_len: int = Q_LEN) -> np.ndarray:
+    """One fresh uniform-random query — all queries distinct, the
+    cache-hostile baseline (and bench_serving's historical draw:
+    one ``rng.integers`` call of ``q_len`` tokens)."""
+    return rng.integers(1, vocab, size=q_len).astype(np.int32)
+
+
+class ZipfQueries:
+    """A fixed query catalog sampled by Zipf popularity.
+
+    ``n_queries`` distinct query texts are drawn once from ``seed``;
+    ``sample`` picks rank ``r`` with probability ∝ 1/(r+1)^alpha, so
+    a handful of head queries dominate traffic — the access pattern
+    GPUSparse organizes its GPU index around, and the one that makes
+    result-cache hit rates meaningful. The expected hit ceiling is
+    ``1 - n_distinct/n_samples``; alpha tunes how fast the head
+    saturates.
+    """
+
+    def __init__(self, n_queries: int, *, alpha: float = 1.1,
+                 vocab: int = VOCAB, q_len: int = Q_LEN,
+                 seed: int = 0):
+        if n_queries <= 0:
+            raise ValueError(f"n_queries must be > 0, got {n_queries}")
+        catalog_rng = np.random.default_rng(seed)
+        self.tokens = catalog_rng.integers(
+            1, vocab, size=(n_queries, q_len)).astype(np.int32)
+        ranks = np.arange(1, n_queries + 1, dtype=np.float64)
+        w = ranks ** -float(alpha)
+        self.p = w / w.sum()
+
+    def __len__(self) -> int:
+        return len(self.tokens)
+
+    def sample(self, rng: np.random.Generator
+               ) -> Tuple[int, np.ndarray]:
+        """Draw ``(query_id, tokens)`` — one ``rng`` consumption per
+        call."""
+        qid = int(rng.choice(len(self.p), p=self.p))
+        return qid, self.tokens[qid]

@@ -20,6 +20,8 @@ Run:  PYTHONPATH=src python examples/serve_retrieval.py
           --engine --quantize
       PYTHONPATH=src python examples/serve_retrieval.py \\
           --engine --prune-margin 0.0
+      PYTHONPATH=src python examples/serve_retrieval.py \\
+          --engine --cache-mb 4
 """
 
 import argparse
@@ -48,9 +50,14 @@ ap.add_argument("--quantize", action="store_true",
 ap.add_argument("--prune-margin", type=float, default=None, metavar="M",
                 help="with --engine: search through the two-tier "
                      "pruned scorer at this margin (0 = safe)")
+ap.add_argument("--cache-mb", type=float, default=0.0, metavar="MB",
+                help="with --engine: also search through the frontier "
+                     "result + hot-posting caches at this byte budget "
+                     "and assert cache-on == cache-off (DESIGN.md §13)")
 args = ap.parse_args()
-if (args.quantize or args.prune_margin is not None) and not args.engine:
-    ap.error("--quantize/--prune-margin need --engine")
+if (args.quantize or args.prune_margin is not None
+        or args.cache_mb > 0) and not args.engine:
+    ap.error("--quantize/--prune-margin/--cache-mb need --engine")
 if args.quantize and args.prune_margin is not None:
     ap.error("--quantize and --prune-margin are exclusive")
 
@@ -162,6 +169,32 @@ if engine is not None:
             "engine search disagrees with the frozen index"
         print(f"engine search [{tag}] == frozen-index retrieval on "
               f"live docs: True")
+    if args.cache_mb > 0:
+        # the frontier cache is a transparent layer: cache-on must be
+        # id- AND value-identical to cache-off, miss pass (cold) and
+        # hit pass (every row served from the cache) alike
+        from repro.runtime.frontier import (CachedEngine,
+                                            HotPostingCache,
+                                            QueryResultCache)
+
+        cache_bytes = int(args.cache_mb * 2**20)
+        cached = CachedEngine(
+            engine, result_cache=QueryResultCache(cache_bytes),
+            hot_cache=HotPostingCache(cache_bytes // 4))
+        for pss in ("miss", "hit"):
+            vals_c, ids_c = cached.search(q_rep, K, **kw)
+            assert np.array_equal(ids_c, ids_e), \
+                f"cached search ids diverge on the {pss} pass"
+            assert np.array_equal(vals_c, vals_e), \
+                f"cached search values diverge on the {pss} pass"
+        cs = cached.stats()
+        rc, hot = cs["results"], cs["hot"]
+        assert rc["hits"] == QUERIES and rc["misses"] == QUERIES
+        print(f"cached engine search == uncached (miss + hit pass): "
+              f"True; hit ratio {rc['hit_rate']}, "
+              f"{rc['bytes_used']} B cached, "
+              f"{hot['pinned_terms']} hot terms / "
+              f"{hot['bytes_pinned']} B pinned")
 
 # --- 3b. the 1M-candidate regime: fused streaming top-k ---------------
 cand = jax.random.normal(jax.random.PRNGKey(1), (20000, 64))

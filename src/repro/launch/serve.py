@@ -89,6 +89,20 @@ def main(argv=None) -> int:
                     help="engine mode: tombstone this fraction of the "
                          "corpus mid-stream (exercises remove + "
                          "compaction)")
+    ap.add_argument("--cache-mb", type=float, default=0.0,
+                    metavar="MB",
+                    help="engine mode: serve searches through the "
+                         "frontier result cache (plus a hot-posting-"
+                         "window cache) with this byte budget "
+                         "(DESIGN.md §13); 0 = off")
+    ap.add_argument("--tenants", type=int, default=0, metavar="N",
+                    help="engine mode: serve N weighted tenants over "
+                         "one encoder through the TenantPool "
+                         "scheduler instead of a single corpus")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching: admit requests into "
+                         "the next batch in earliest-deadline-first "
+                         "order instead of FIFO one-batch-per-tick")
     args = ap.parse_args(argv)
     # method/rep compatibility is knowable before spending minutes
     # encoding the corpus — reject bad combinations at argparse time
@@ -118,6 +132,11 @@ def main(argv=None) -> int:
         ap.error("--engine picks its retrieval path from "
                  "--quantize/--prune-margin; drop --method (the "
                  "builder's segments are searched via 'auto')")
+    if (args.cache_mb > 0 or args.tenants > 0) and not args.engine:
+        ap.error("--cache-mb/--tenants need --engine (cache keys and "
+                 "tenant corpora live on the IndexBuilder)")
+    if args.tenants < 0:
+        ap.error("--tenants must be >= 0")
 
     import dataclasses
 
@@ -152,6 +171,80 @@ def main(argv=None) -> int:
 
     rng = np.random.default_rng(0)
     bs = args.index_batch
+
+    # --- tenant mode: N corpora over one encoder (DESIGN.md §13) -----
+    if args.tenants > 0:
+        from repro.runtime.frontier import TenantPool, TenantQuota
+
+        cache_bytes = int(args.cache_mb * 2**20)
+        pool = TenantPool(
+            BatchedEncoder(encode, policy=BatchPolicy(max_batch=bs)),
+            cache_bytes=cache_bytes,
+            hot_cache_bytes=cache_bytes // 4,
+            continuous=args.continuous)
+        names = [f"t{i}" for i in range(args.tenants)]
+        for i, name in enumerate(names):
+            pool.add_tenant(name, cfg.vocab_size,
+                            quota=TenantQuota(weight=float(i + 1)),
+                            keep_forward=args.prune_margin is not None)
+        t0 = time.monotonic()
+        per = max(1, args.corpus // args.tenants)
+        for name in names:
+            pool.add_docs(name, [
+                rng.integers(1, cfg.vocab_size, size=16)
+                .astype(np.int32) for _ in range(per)])
+        print(f"provisioned {args.tenants} tenants x {per} docs in "
+              f"{(time.monotonic() - t0) * 1e3:.1f} ms "
+              f"({pool.memory_bytes() / 2**20:.2f} MiB pooled)")
+        deadline = (args.deadline_ms / 1e3
+                    if args.deadline_ms is not None else None)
+        for uid in range(args.requests):
+            n = int(rng.integers(4, 24))
+            pool.submit(names[uid % args.tenants],
+                        Request(uid=uid, tokens=rng.integers(
+                            1, cfg.vocab_size, size=n)
+                            .astype(np.int32), deadline_s=deadline))
+            pool.tick()
+        pool.drain()
+        from repro.runtime.serving import FailedResult, ShedResult
+
+        by_tenant = {name: [] for name in names}
+        for uid in range(args.requests):
+            res = pool.take(names[uid % args.tenants], uid)
+            if not isinstance(res, (ShedResult, FailedResult)):
+                by_tenant[names[uid % args.tenants]].append(res)
+        # search twice per tenant: the second pass demonstrates (and
+        # reports) result-cache hits when --cache-mb is set. Forcing
+        # the fused path (auto would pick impact at demo corpus sizes)
+        # also engages the hot-posting-window cache.
+        for name in names:
+            rows = by_tenant[name][:4]
+            if not rows:
+                continue
+            for _ in range(2 if cache_bytes else 1):
+                pool.search(name, stack_rows(rows), args.topk,
+                            method="fused")
+        st = pool.stats()
+        for name in names:
+            t = st["tenants"][name]
+            line = (f"tenant {name}: weight {t['weight']}, "
+                    f"{t['live_docs']} docs, served {t['served']} / "
+                    f"shed {t['shed']} / failed {t['failed']}")
+            if "cache" in t:
+                c = t["cache"]["results"]
+                line += (f", cache hits {c['hits']}/"
+                         f"{c['hits'] + c['misses']}")
+                if "hot" in t["cache"]:
+                    line += (f", {t['cache']['hot']['bytes_pinned']} "
+                             f"B pinned")
+            print(line)
+        if "result_cache" in st:
+            rc = st["result_cache"]
+            print(f"shared result cache: hit ratio {rc['hit_rate']}, "
+                  f"{rc['bytes_used']}/{rc['capacity_bytes']} B used, "
+                  f"{rc['evictions']} evictions, "
+                  f"{rc['invalidations']} invalidations")
+        return 0
 
     # --- 1. index the corpus (batched; never a dense (N, V) matrix) --
     t0 = time.monotonic()
@@ -253,11 +346,25 @@ def main(argv=None) -> int:
                   f"{(time.monotonic() - t0) * 1e3:.1f} ms "
                   f"({corpus.nbytes / 2**20:.2f} MiB)")
 
+    # the frontier cache fronts the engine: repeated searches hit the
+    # result cache, the fused path reads pinned hot posting windows
+    cached = None
+    if args.cache_mb > 0:
+        from repro.runtime.frontier import (CachedEngine,
+                                            HotPostingCache,
+                                            QueryResultCache)
+
+        cache_bytes = int(args.cache_mb * 2**20)
+        cached = CachedEngine(
+            engine, result_cache=QueryResultCache(cache_bytes),
+            hot_cache=HotPostingCache(cache_bytes // 4))
+
     # --- 2. serve queries through the batching loop ------------------
     loop = ServingLoop(
         BatchedEncoder(encode, policy=BatchPolicy(max_batch=16,
                                                   max_wait_s=0.002)),
-        admission=AdmissionPolicy(max_queue_depth=args.max_queue))
+        admission=AdmissionPolicy(max_queue_depth=args.max_queue),
+        continuous=args.continuous)
     deadline = (args.deadline_ms / 1e3
                 if args.deadline_ms is not None else None)
     t0 = time.monotonic()
@@ -300,8 +407,18 @@ def main(argv=None) -> int:
         if args.prune_margin is not None:
             kw = {"method": "pruned",
                   "prune_margin": args.prune_margin}
-        vals, idx = engine.search(queries, args.topk, **kw)
-        tag = "engine" + ("/pruned" if kw else "")
+        surface = cached if cached is not None else engine
+        if cached is not None and not kw:
+            # force the fused path (auto picks impact at demo corpus
+            # sizes) so the hot-posting-window cache engages too
+            kw = {"method": "fused"}
+        vals, idx = surface.search(queries, args.topk, **kw)
+        if cached is not None:
+            # the second pass is pure cache: every row keyed identically
+            vals, idx = surface.search(queries, args.topk, **kw)
+        tag = "engine" + ("/pruned" if args.prune_margin is not None
+                          else "")
+        tag += "/cached" if cached is not None else ""
     else:
         vals, idx = retrieve(queries, corpus, args.topk,
                              method=args.method)
@@ -310,6 +427,17 @@ def main(argv=None) -> int:
     print(f"retrieval[{tag}]: top-{args.topk} for {n_q} queries "
           f"in {(time.monotonic() - t0) * 1e3:.1f} ms, "
           f"best scores {np.asarray(vals)[:, 0].round(2).tolist()}")
+    if cached is not None:
+        cs = cached.stats()
+        rc, hot = cs["results"], cs.get("hot")
+        line = (f"frontier cache: hit ratio {rc['hit_rate']}, "
+                f"{rc['bytes_used']}/{rc['capacity_bytes']} B used, "
+                f"{rc['evictions']} evictions, "
+                f"{rc['invalidations']} invalidations")
+        if hot is not None:
+            line += (f"; hot windows: {hot['pinned_terms']} terms, "
+                     f"{hot['bytes_pinned']} B pinned")
+        print(line)
     return 0
 
 

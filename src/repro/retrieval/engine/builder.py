@@ -31,6 +31,14 @@ slots, never external ids; tombstoned slots surface as id -1).
 With ``quantize=True`` the base segment is served compressed
 (``QuantizedIndex``) while the hot delta stays raw — the classic
 read-optimized/write-optimized split.
+
+Every mutation that can change what ``search`` returns (``add`` /
+``remove`` / a dirty ``flush`` / ``compact``) bumps ``generation`` —
+the monotone counter the serving-frontier caches key their entries on
+(DESIGN.md §13). ``compact`` bumps even though the *logical* corpus is
+unchanged: it reorders postings, and fp summation order shifts scores
+by ulps, so a result cached across a compaction would no longer be
+bit-identical to a fresh search.
 """
 
 from __future__ import annotations
@@ -94,6 +102,9 @@ class IndexBuilder:
         self._delta_dirty = False      # adds/removes touching the tail
         self._base_removals: List[int] = []   # tombstoned base slots
         self.n_compactions = 0
+        # bumped by every visible mutation (module docstring) — the
+        # frontier caches' invalidation signal
+        self.generation = 0
 
     # -- bookkeeping -----------------------------------------------------
 
@@ -125,7 +136,21 @@ class IndexBuilder:
             "quantized_base": bool(self.quantize and self._base
                                    is not None),
             "term_shards": self.term_shards,
+            "generation": self.generation,
         }
+
+    def memory_bytes(self) -> int:
+        """Approximate resident bytes: the host row store plus the
+        served base/delta segments (their own ``memory_bytes``
+        accounting). The tenancy layer's shared-budget check reads
+        this; it is a host-side estimate, not a device HBM measure."""
+        total = int(self._ext_ids.nbytes + self._alive.nbytes)
+        if self._values is not None:
+            total += int(self._values.nbytes + self._indices.nbytes)
+        for seg in (self._base, self._delta):
+            if seg is not None and hasattr(seg, "memory_bytes"):
+                total += int(seg.memory_bytes())
+        return total
 
     # -- mutation --------------------------------------------------------
 
@@ -169,6 +194,7 @@ class IndexBuilder:
         for off, e in enumerate(ids):
             self._slot[int(e)] = base_slot + off
         self._delta_dirty = True
+        self.generation += 1
         return ids
 
     def remove(self, ids: Sequence[int]) -> int:
@@ -189,6 +215,8 @@ class IndexBuilder:
             else:
                 self._delta_dirty = True
             n += 1
+        if n:
+            self.generation += 1
         return n
 
     # -- flush / compaction ----------------------------------------------
@@ -238,6 +266,7 @@ class IndexBuilder:
         self._delta = None
         self._delta_dirty = False
         self.n_compactions += 1
+        self.generation += 1
         if self._base_n:
             self._pack_base(self._values, self._indices)
         else:
@@ -251,6 +280,8 @@ class IndexBuilder:
         when the delta outgrows ``merge_frac`` of the base or dead
         slots exceed ``compact_dead_frac`` of the corpus.
         """
+        if self.dirty or force_compact:
+            self.generation += 1
         n_delta = self.n_slots - self._base_n
         needs_compact = (
             force_compact
@@ -304,8 +335,64 @@ class IndexBuilder:
 
     # -- search ----------------------------------------------------------
 
+    def _base_method(self, method: str) -> str:
+        """The method name the base segment is actually scored with
+        (before ``auto`` resolution): a term-sharded base serves
+        pruning through its own two-tier composition (per-shard
+        ceilings + rescore; margin 0 routes to the exact psum path —
+        same ids) and the fused kernel has no TermShardedIndex entry
+        point, so both remap to ``term_sharded``."""
+        if method in ("pruned", "fused") and self.term_shards:
+            return "term_sharded"
+        return method
+
+    def resolved_method(self, method: str = "auto") -> str:
+        """The concrete method ``search(method=...)`` will score the
+        base segment with (the delta if there is no base) — the name
+        strict kwarg validation reports and the frontier's hot-window
+        scorer keys its engage-decision on."""
+        from repro.retrieval.score import _resolve_method
+
+        if self._base is not None:
+            return _resolve_method(self._base_method(method), self._base)
+        if method != "auto":
+            return method
+        if self._delta is not None:
+            return _resolve_method("auto", self._delta)
+        return "impact"
+
+    def _check_search_kwargs(self, method: str, kw: dict) -> str:
+        """Strict kwarg parity with the ``retrieve()`` dispatcher:
+        unknown names and names the *resolved* method cannot honor
+        raise ``TypeError`` instead of being silently swallowed (a
+        typo'd tuning knob must not masquerade as a no-op). Returns
+        the resolved method name."""
+        from repro.retrieval.score import _METHOD_KWARGS
+
+        resolved = self.resolved_method(method)
+        every = frozenset().union(*_METHOD_KWARGS.values())
+        allowed = _METHOD_KWARGS.get(resolved, frozenset())
+        unknown = sorted(n for n in kw if n not in every)
+        stray = sorted(n for n, v in kw.items()
+                       if n in every and v is not None
+                       and n not in allowed)
+        if unknown or stray:
+            what = []
+            if unknown:
+                what.append(f"unknown kwargs {', '.join(unknown)}")
+            if stray:
+                what.append(f"kwargs {', '.join(stray)} that "
+                            f"method={resolved!r} does not accept")
+            raise TypeError(
+                f"search(method={method!r}) resolved to "
+                f"{resolved!r}: " + "; ".join(what)
+                + f" (accepted: "
+                f"{sorted(allowed) if allowed else 'no tuning kwargs'})")
+        return resolved
+
     def search(self, queries: SparseRep, k: int = 10, *,
                method: str = "auto", q_width: Optional[int] = None,
+               base_scorer=None,
                **kw) -> Tuple[np.ndarray, np.ndarray]:
         """Top-k over base + delta segments; returns ``(vals, ids)``
         with **external** doc ids (-1 marks below-top-k padding or
@@ -315,7 +402,14 @@ class IndexBuilder:
         largest-value terms before scoring (the serving degrade
         ladder's query-narrowing knob — DESIGN.md §10); remaining
         ``kw`` (``prune_margin``, ``candidates``, ...) pass through to
-        ``retrieve`` for the base segment."""
+        ``retrieve`` for the base segment after strict validation
+        against the resolved method (``_check_search_kwargs``).
+
+        ``base_scorer`` is the frontier's hot-window seam (DESIGN.md
+        §13): called as ``base_scorer(queries, base, k, resolved, kw)``
+        before the dispatcher; returning ``None`` declines and the
+        normal ``retrieve`` path runs — so a scorer that only serves
+        one (method, index-type) combination stays bit-compatible."""
         from repro.kernels.topk_score import merge_topk
         from repro.retrieval.score import retrieve
         from repro.retrieval.sparse_rep import truncate_width
@@ -325,6 +419,7 @@ class IndexBuilder:
 
         if self.dirty:
             self.flush()
+        resolved = self._check_search_kwargs(method, kw)
         if self.n_slots == 0 or (self._base is None
                                  and self._delta is None):
             b = queries.values.reshape(-1, queries.width).shape[0]
@@ -333,32 +428,28 @@ class IndexBuilder:
 
         parts = []   # (vals (B, k'), global slots (B, k'))
         if self._base is not None:
-            bm = method
-            if bm in ("pruned", "fused") and self.term_shards:
-                # a term-sharded base serves pruning through its own
-                # two-tier composition (per-shard ceilings + rescore);
-                # margin 0 routes to the exact psum path — same ids.
-                # The fused kernel likewise has no TermShardedIndex
-                # entry point; the psum path is the id-identical stand-
-                # in (any fused block kwargs would be rejected by the
-                # strict retrieve() check, so none are forwarded here).
-                bm = "term_sharded"
-                kw = {key: v for key, v in kw.items()
-                      if key in ("mesh", "axis_name", "prune_margin",
-                                 "candidates")}
-            bv, bi = retrieve(queries, self._base,
-                              min(k, self._base.n_docs),
-                              method=bm, **kw)
-            parts.append((bv, bi))
+            bm = self._base_method(method)
+            k_base = min(k, self._base.n_docs)
+            out = None
+            if base_scorer is not None:
+                out = base_scorer(queries, self._base, k_base,
+                                  resolved, dict(kw))
+            if out is None:
+                out = retrieve(queries, self._base, k_base,
+                               method=bm, **kw)
+            parts.append(out)
         if self._delta is not None:
             # the hot delta is always a raw single InvertedIndex —
             # base-only methods fall back to exact impact scoring
-            # ("fused" passes through: the kernel scores a raw index)
+            # ("fused" passes through: the kernel scores a raw index,
+            # honoring the same fused tuning kwargs as the base)
             dm = ("impact" if method in ("pruned", "quantized",
                                          "sharded", "term_sharded")
                   else method)
+            dkw = kw if (dm == "fused" and resolved == "fused") else {}
             dv, di = retrieve(queries, self._delta,
-                              min(k, self._delta.n_docs), method=dm)
+                              min(k, self._delta.n_docs), method=dm,
+                              **dkw)
             parts.append((dv, di + self._base_n))
 
         vals, idx = parts[0]

@@ -12,6 +12,13 @@ from repro.runtime.faults import (
     inject_faults,
     is_oom_error,
 )
+from repro.runtime.frontier import (
+    CachedEngine,
+    HotPostingCache,
+    QueryResultCache,
+    TenantPool,
+    TenantQuota,
+)
 from repro.runtime.serving import (
     Admission,
     AdmissionPolicy,

@@ -1,0 +1,34 @@
+"""Serving frontier: query/posting caches and multi-corpus tenancy.
+
+The layer in front of ``CorpusEngine`` that makes repeated work cheap
+(``caches``) and one process serve many corpora fairly (``tenancy``).
+Continuous batching lives in ``repro.runtime.serving`` itself — it
+changes how the existing loop dispatches, not what sits in front of
+it. DESIGN.md §13.
+"""
+
+from repro.runtime.frontier.caches import (
+    CachedEngine,
+    HotPostingCache,
+    QueryResultCache,
+    hot_fused_retrieve,
+    query_cache_key,
+)
+from repro.runtime.frontier.tenancy import (
+    QuotaExceeded,
+    TenantPool,
+    TenantQuota,
+    TenantState,
+)
+
+__all__ = [
+    "CachedEngine",
+    "HotPostingCache",
+    "QueryResultCache",
+    "QuotaExceeded",
+    "hot_fused_retrieve",
+    "query_cache_key",
+    "TenantPool",
+    "TenantQuota",
+    "TenantState",
+]

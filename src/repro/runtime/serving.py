@@ -42,6 +42,17 @@ it now carries the production-hardening layer (DESIGN.md §10):
   served/shed/failed counters, batch occupancy and the adaptive cap,
   p50/p99 latency over a bounded rolling reservoir, and the degrade
   state.
+* **Continuous batching** (``continuous=True``, DESIGN.md §13) —
+  instead of FIFO one-batch-per-tick, pending requests are admitted
+  into the next batch in earliest-deadline-first order, and a tick
+  dispatches when the batch fills **or** the most urgent deadline
+  would no longer survive waiting (its slack has shrunk to one EWMA
+  encode time), not just when the oldest request has waited
+  ``max_wait_s``. Urgent requests jump the queue instead of expiring
+  behind patient ones, so under mixed-SLO load the same encoder
+  serves strictly more. All PR-6 guarantees hold unchanged: every
+  uid completes exactly once (served/shed/failed) and ``tick`` never
+  raises.
 
 Completed results are handed out by ``take(uid)``, which *pops* — the
 loop holds no reference after the caller reads a result, so memory is
@@ -347,11 +358,13 @@ class ServingLoop:
                  *, clock: Callable[[], float] = time.monotonic,
                  admission: Optional[AdmissionPolicy] = None,
                  degrade: Optional[DegradeController] = None,
+                 continuous: bool = False,
                  ewma_alpha: float = 0.2,
                  window: int = 512,
                  shed_window: int = 64):
         self.encoder = encoder
         self.clock = clock
+        self.continuous = continuous
         self.admission = admission or AdmissionPolicy()
         self.degrade = degrade
         self.pending: List[Request] = []
@@ -402,7 +415,15 @@ class ServingLoop:
         # on an empty queue would wedge the loop at 100% shed with no
         # dispatch left to refresh the estimate.
         if req.deadline_s is not None and self.pending:
-            est = self.estimated_queue_delay(len(self.pending) + 1)
+            if self.continuous:
+                # EDF admission: this request only waits behind
+                # pending work that is at least as urgent
+                key = self._edf_key(req)
+                ahead = sum(1 for p in self.pending
+                            if self._edf_key(p) <= key)
+                est = self.estimated_queue_delay(ahead + 1)
+            else:
+                est = self.estimated_queue_delay(len(self.pending) + 1)
             if self.admission.safety * est > req.deadline_s:
                 return self._shed(req, "est_deadline")
         self.pending.append(req)
@@ -433,6 +454,48 @@ class ServingLoop:
         return np.asarray(self._latencies, np.float64)
 
     # -- the loop --------------------------------------------------------
+
+    @staticmethod
+    def _edf_key(r: Request) -> Tuple[float, float, int]:
+        """Earliest-deadline-first order: absolute deadline (best-
+        effort requests sort last), then arrival, then uid — a total
+        order, so batch selection is deterministic."""
+        dl = (r.arrival_t + r.deadline_s if r.deadline_s is not None
+              else float("inf"))
+        return (dl, r.arrival_t, r.uid)
+
+    def _should_dispatch(self, now: float, *, force: bool) -> bool:
+        """The dispatch trigger: forced, full batch, oldest wait over
+        ``max_wait_s``, or (continuous mode) the most urgent pending
+        deadline's slack has shrunk to one EWMA encode time — waiting
+        any longer would expire it."""
+        if not self.pending:
+            return False
+        if force:
+            return True
+        if len(self.pending) >= self._effective_cap():
+            return True
+        oldest_wait = now - min(r.arrival_t for r in self.pending)
+        if oldest_wait >= self.encoder.policy.max_wait_s:
+            return True
+        if self.continuous:
+            urgent = min((r.arrival_t + r.deadline_s
+                          for r in self.pending
+                          if r.deadline_s is not None),
+                         default=None)
+            if urgent is not None and (
+                    urgent - now <= (self._encode_ewma or 0.0)):
+                return True
+        return False
+
+    def ready(self, *, force: bool = False) -> bool:
+        """Would ``tick`` dispatch a batch right now? A non-mutating
+        probe for schedulers (``TenantPool``) that must pick one loop
+        to tick without side effects. Expired-but-still-queued
+        requests count toward readiness — the tick that follows sheds
+        them first and may then dispatch nothing."""
+        return bool(self.pending) and (
+            force or self._should_dispatch(self.clock(), force=False))
 
     def _drop_expired(self, now: float) -> int:
         """Shed queued requests whose deadline already passed — before
@@ -511,15 +574,20 @@ class ServingLoop:
         self._drop_expired(now)
         if self.degrade is not None:
             self.degrade.observe(self._pressure())
-        if not self.pending:
+        if not self._should_dispatch(now, force=force):
             return 0
         cap = self._effective_cap()
-        oldest_wait = now - self.pending[0].arrival_t
-        if (len(self.pending) < cap and oldest_wait < pol.max_wait_s
-                and not force):
-            return 0
-        batch = self.pending[:cap]
-        self.pending = self.pending[cap:]
+        if self.continuous:
+            # admit the cap most urgent requests into this batch
+            order = sorted(range(len(self.pending)),
+                           key=lambda i: self._edf_key(self.pending[i]))
+            chosen = set(order[:cap])
+            batch = [self.pending[i] for i in order[:cap]]
+            self.pending = [r for i, r in enumerate(self.pending)
+                            if i not in chosen]
+        else:
+            batch = self.pending[:cap]
+            self.pending = self.pending[cap:]
         t0 = self.clock()
         results, had_fault = self._encode_isolated(batch)
         dt = self.clock() - t0
@@ -578,6 +646,7 @@ class ServingLoop:
             "faults": c["faults"],
             "oom_faults": c["oom_faults"],
             "batch_cap": self._effective_cap(),
+            "continuous": self.continuous,
             "batch_occupancy": round(occupancy, 4),
             "encode_ewma_s": self._encode_ewma or 0.0,
             "p50_latency_s": (float(np.percentile(lat, 50))

@@ -15,7 +15,8 @@ import json
 import pytest
 
 from benchmarks import report
-from benchmarks.check import (check_engine, check_file, check_kernels,
+from benchmarks.check import (check_engine, check_file,
+                              check_frontier, check_kernels,
                               check_quality, check_retrieval,
                               check_serving, infer_bench, main)
 
@@ -79,6 +80,34 @@ GOOD_SERVING = {
 }
 
 
+def _tenant(weight, contended, failed=0, shed=0):
+    return {"weight": weight, "served_contended": contended,
+            "served": 80, "shed": shed, "failed": failed}
+
+
+GOOD_FRONTIER = {
+    "zipf_replay": {
+        "cache_off": {"sustained_qps": 151.0, "p99_ms": 41.0},
+        "cache_on": {"sustained_qps": 262.0, "p99_ms": 8.7,
+                     "hit_rate": 0.72, "parity": True},
+    },
+    "churn": {"rounds": 40, "mismatches": 0, "invalidations": 12},
+    "tenancy": {
+        "tenants": {"a": _tenant(2.0, 40),
+                    "b": _tenant(1.0, 21),
+                    "c": _tenant(1.0, 20, failed=6)},
+        "fairness_ratio_ab": 1.9,
+        "weight_ratio_ab": 2.0,
+    },
+    "continuous": {
+        "one_batch": {"sustained_qps": 145.0, "shed_rate": 0.18,
+                      "lost": 0, "failed": 0},
+        "continuous": {"sustained_qps": 176.0, "shed_rate": 0.0,
+                       "lost": 0, "failed": 0},
+    },
+}
+
+
 def _q_method(ndcg=1.0, mrr=1.0):
     return {"mrr@10": mrr, "ndcg@10": ndcg, "recall@10": 0.83,
             "success@10": 1.0}
@@ -110,6 +139,7 @@ def test_good_records_pass():
     assert check_retrieval(GOOD_RETRIEVAL) == []
     assert check_engine(GOOD_ENGINE) == []
     assert check_serving(GOOD_SERVING) == []
+    assert check_frontier(GOOD_FRONTIER) == []
     assert check_quality(GOOD_QUALITY) == []
 
 
@@ -213,6 +243,48 @@ def test_serving_gate_failures(mutate, needle):
     assert any(needle in e for e in errs), (needle, errs)
 
 
+def _replay(d):
+    return d["zipf_replay"]
+
+
+@pytest.mark.parametrize("mutate,needle", [
+    (lambda d: d["zipf_replay"].pop("cache_on"),
+     "missing cache_on/cache_off"),
+    (lambda d: _replay(d)["cache_on"].update(parity=False),
+     "not id/value-identical"),
+    (lambda d: _replay(d)["cache_on"].update(hit_rate=0.3),
+     "below the 0.5 bar"),
+    (lambda d: _replay(d)["cache_on"].update(sustained_qps=140.0),
+     "bought no throughput"),
+    (lambda d: _replay(d)["cache_on"].update(p99_ms=50.0),
+     "not below cache-off"),
+    (lambda d: d["churn"].update(rounds=0), "0 rounds"),
+    (lambda d: d["churn"].update(mismatches=2), "stale entry"),
+    (lambda d: d["churn"].update(invalidations=0), "never fired"),
+    (lambda d: d["tenancy"]["tenants"]["c"].update(failed=0),
+     "expected only tenant 'c'"),
+    (lambda d: d["tenancy"]["tenants"]["a"].update(failed=1),
+     "expected only tenant 'c'"),
+    (lambda d: d["tenancy"]["tenants"]["b"].update(shed=3),
+     "poisoned tenant leaked"),
+    (lambda d: d["tenancy"].update(fairness_ratio_ab=1.0),
+     "fairness"),
+    (lambda d: d["continuous"].pop("one_batch"), "missing rows"),
+    (lambda d: d["continuous"]["continuous"].update(lost=1), "lost"),
+    (lambda d: d["continuous"]["one_batch"].update(failed=2),
+     "fault-free"),
+    (lambda d: d["continuous"]["continuous"].update(
+        sustained_qps=145.0), "not strictly above"),
+    (lambda d: d["continuous"]["continuous"].update(shed_rate=0.2),
+     "bought with extra shedding"),
+])
+def test_frontier_gate_failures(mutate, needle):
+    bad = copy.deepcopy(GOOD_FRONTIER)
+    mutate(bad)
+    errs = check_frontier(bad)
+    assert any(needle in e for e in errs), (needle, errs)
+
+
 @pytest.mark.parametrize("mutate,needle", [
     (lambda d: d.update(quality_metric="topk_overlap"),
      "quality_metric"),
@@ -262,6 +334,7 @@ def test_quality_gate_aggressive_margin_may_trade():
 
 def test_infer_bench_and_check_file(tmp_path):
     assert infer_bench("BENCH_kernels.json") == "kernels"
+    assert infer_bench("BENCH_frontier.json") == "frontier"
     assert infer_bench("BENCH_serving-20260809-abc.json") == "serving"
     assert infer_bench("BENCH_quality-20260809-abc.json") == "quality"
     assert infer_bench("a/b/BENCH_engine-20260801-abc-77.json") == \
@@ -326,6 +399,20 @@ def test_bench_metrics_flattens_serving(tmp_path):
     assert m["serving/warm/p99_ms"] == 27.0
     assert m["serving/quality/minimal"] == 0.91
     assert m["serving/faults/lost"] == 0
+
+
+def test_bench_metrics_flattens_frontier(tmp_path):
+    p = tmp_path / "BENCH_frontier.json"
+    p.write_text(json.dumps(GOOD_FRONTIER))
+    m = report._bench_metrics(str(p))
+    assert m["frontier/cache_on/sustained_qps"] == 262.0
+    assert m["frontier/cache_on/hit_rate"] == 0.72
+    assert m["frontier/cache_off/p99_ms"] == 41.0
+    assert "frontier/cache_off/hit_rate" not in m
+    assert m["frontier/churn/mismatches"] == 0
+    assert m["frontier/tenancy/fairness_ab"] == 1.9
+    assert m["frontier/continuous/qps"] == 176.0
+    assert m["frontier/one_batch/shed_rate"] == 0.18
 
 
 def test_bench_metrics_flattens_quality(tmp_path):
