@@ -20,7 +20,12 @@ Four comparisons behind ``BENCH_engine.json``:
   sharding axes (doc ranges + top-k merge vs vocab ranges +
   partial-sum merge; single-device vmap paths on CI — a work
   partition, not a memory win; the shard_map paths need a real mesh)
-  with id parity vs the unsharded scorer.
+  with id parity vs the unsharded scorer;
+* ``shard2d`` — the 2D (doc × term) grid at 1x1/2x2/1x4/4x1 with the
+  same id-parity bar (DESIGN.md §14), plus ``planner`` — the
+  ``plan_placement`` decision record on two synthetic corpora: a
+  250k-vocab one (the directory dominates — the plan must carry term
+  shards) and a 30k-vocab one (doc-only); ``check.py`` gates both.
 
 ``--smoke`` (or ``BENCH_SMOKE=1``) shrinks the workload for CI; the
 interpret-mode/CPU caveat from DESIGN.md §5 applies to all timings.
@@ -38,9 +43,11 @@ import numpy as np
 
 from benchmarks._common import scoring_peak_bytes, time_fn
 from repro.data.synthetic import lsr_impact_corpus
-from repro.retrieval import (build_inverted_index, pruned_retrieve,
-                             quantize_index, retrieve, shard_index,
-                             sparsify_topk, term_shard_index)
+from repro.retrieval import (CorpusStats, build_inverted_index,
+                             plan_placement, pruned_retrieve,
+                             quantize_index, retrieve, shard2d_index,
+                             shard_index, sparsify_topk,
+                             term_shard_index)
 
 FULL = dict(n_docs=8192, vocab=4096, doc_nnz=64, n_queries=16,
             q_nnz=32, k=10, block_n=2048)
@@ -172,6 +179,42 @@ def run(smoke: bool = False, json_path: str = None):
                                                   np.asarray(tid))),
         }
 
+    # the 2D (doc x term) grid: both degenerate orientations plus the
+    # square composition, id-identical at every shape (DESIGN.md §14)
+    record["shard2d"] = {}
+    for dd, tt in ((1, 1), (2, 2), (1, 4), (4, 1)):
+        gidx = shard2d_index(d_rep, p["vocab"], dd, tt)
+        fn = lambda: retrieve(q_rep, gidx, k, method="shard2d")
+        t = time_fn(fn, iters=iters)
+        _, gid = fn()
+        record["shard2d"][f"{dd}x{tt}"] = {
+            "median_ms": round(t, 3),
+            "topk_ids_equal": bool(np.array_equal(ids["impact"],
+                                                  np.asarray(gid))),
+        }
+
+    # planner decision record: the placement the ShardPlan API picks
+    # for a huge-vocab corpus (the O(V) directory dominates any
+    # per-device posting slice — must carry term shards) vs a
+    # small-vocab one (directory is a rounding error — doc-only)
+    planner_stats = {
+        "huge_vocab": CorpusStats(posting_bytes=8 * 50_000 * 16,
+                                  vocab_size=250_000, n_docs=50_000),
+        "small_vocab": CorpusStats(posting_bytes=8 * 50_000 * 16,
+                                   vocab_size=30_000, n_docs=50_000),
+    }
+    record["planner"] = {"n_devices": 4}
+    for name, stats in planner_stats.items():
+        plan = plan_placement(stats, 4)
+        record["planner"][name] = {
+            "vocab_size": stats.vocab_size,
+            "grid": f"{plan.doc_shards}x{plan.term_shards}",
+            "axis": plan.axis,
+            "doc_shards": plan.doc_shards,
+            "term_shards": plan.term_shards,
+            "reason": plan.reason,
+        }
+
     # fused parity: raw-index fused vs exact impact, and the in-kernel
     # dequant vs the unfused dequantizing scorer (same compressed
     # index, so the ids must match bit-exactly, not just within
@@ -186,7 +229,9 @@ def run(smoke: bool = False, json_path: str = None):
             and all(v["topk_ids_equal"]
                     for v in record["sharded"].values())
             and all(v["topk_ids_equal"]
-                    for v in record["term_sharded"].values())),
+                    for v in record["term_sharded"].values())
+            and all(v["topk_ids_equal"]
+                    for v in record["shard2d"].values())),
         "fused_ids_equal": fused_agree,
     }
 
@@ -206,6 +251,13 @@ def run(smoke: bool = False, json_path: str = None):
         print(f"sharded x{s}: doc {rec['median_ms']} ms / "
               f"term {trec['median_ms']} ms (ids equal: "
               f"{rec['topk_ids_equal']}/{trec['topk_ids_equal']})")
+    for g, rec in record["shard2d"].items():
+        print(f"shard2d {g}: {rec['median_ms']} ms (ids equal: "
+              f"{rec['topk_ids_equal']})")
+    for name in ("huge_vocab", "small_vocab"):
+        prec = record["planner"][name]
+        print(f"planner {name} (V={prec['vocab_size']}): "
+              f"{prec['grid']} -> {prec['axis']}")
     print(f"top-k ids identical across engine paths: "
           f"{record['parity']['topk_ids_equal']}")
     print(f"fused ids identical (raw vs impact, u4 vs quantized): "

@@ -16,7 +16,11 @@ diffs. Each bench family has a named check:
                   match impact, the quantized index clears the >= 4x
                   compression bar, BOTH sharding axes (doc top-k
                   merge and term partial-sum merge) are id-identical
-                  to the unsharded scorer at 1/2/4 shards, and both
+                  to the unsharded scorer at 1/2/4 shards, the 2D
+                  (doc × term) grid is id-identical at every tested
+                  shape, the ``plan_placement`` decision record picks
+                  a term-bearing grid for the 250k-vocab synthetic
+                  corpus and doc-only for the 30k one, and both
                   fused rows (raw + in-kernel-dequant) clear the
                   fused bars against their unfused references;
 * ``serving``   — the traffic simulation survived: non-zero sustained
@@ -67,6 +71,7 @@ EXPECTED_RETRIEVAL = {"dense", "streaming", "impact", "fused"}
 EXPECTED_ENGINE = {"impact", "fused", "pruned", "quantized",
                    "fused_quantized", "streaming"}
 EXPECTED_SHARD_COUNTS = {"1", "2", "4"}
+EXPECTED_SHARD2D_GRIDS = {"1x1", "2x2", "1x4", "4x1"}
 MIN_COMPRESSION_RATIO = 4.0
 EXPECTED_PHASES = ("warm", "overload", "recovery")
 # steady phases must sit comfortably inside the SLO; the overload p99
@@ -165,6 +170,45 @@ def _check_shard_rows(d: dict, key: str) -> List[str]:
     return errs
 
 
+def _check_shard2d(d: dict) -> List[str]:
+    """The 2D grid rows: every tested (doc × term) shape present and
+    id-identical to the unsharded scorer."""
+    rows = d.get("shard2d", {})
+    missing = EXPECTED_SHARD2D_GRIDS - set(rows)
+    errs = []
+    if missing:
+        errs.append(f"shard2d scaling rows missing grids "
+                    f"{sorted(missing)} (have {sorted(rows)})")
+    for g, rec in sorted(rows.items()):
+        if not rec.get("topk_ids_equal"):
+            errs.append(f"shard2d {g} top-k ids differ from the "
+                        f"unsharded scorer: {rec}")
+    return errs
+
+
+def _check_planner(d: dict) -> List[str]:
+    """The ``plan_placement`` decision record: the 250k-vocab probe
+    must get a term-bearing grid (its O(V) directory dominates any
+    per-device posting slice), the 30k-vocab probe must stay doc-only
+    (the directory is a rounding error there — term sharding would
+    buy an all-reduce for nothing)."""
+    planner = d.get("planner", {})
+    huge = planner.get("huge_vocab", {})
+    small = planner.get("small_vocab", {})
+    errs = []
+    if not huge or not small:
+        return [f"planner decision record missing "
+                f"huge_vocab/small_vocab probes (have "
+                f"{sorted(planner)})"]
+    if not huge.get("term_shards", 0) >= 2:
+        errs.append(f"planner picked no term shards for the "
+                    f"{huge.get('vocab_size')}-term vocab: {huge}")
+    if small.get("axis") != "doc":
+        errs.append(f"planner did not pick doc-only for the "
+                    f"{small.get('vocab_size')}-term vocab: {small}")
+    return errs
+
+
 def check_engine(d: dict) -> List[str]:
     errs = []
     methods = set(d.get("methods", {}))
@@ -183,6 +227,8 @@ def check_engine(d: dict) -> List[str]:
                     f"{d.get('pruned')}")
     errs += _check_shard_rows(d, "sharded")
     errs += _check_shard_rows(d, "term_sharded")
+    errs += _check_shard2d(d)
+    errs += _check_planner(d)
     if not d.get("parity", {}).get("topk_ids_equal"):
         errs.append(f"engine cross-path parity flag is false: "
                     f"{d.get('parity')}")

@@ -82,7 +82,8 @@ def _bench_metrics(path: str) -> dict:
     Understands the five shapes: ``BENCH_kernels.json`` (``heads`` ->
     fwd/fwd_bwd passes), ``BENCH_retrieval.json`` (``methods``),
     ``BENCH_engine.json`` (``methods`` + quantization ratio + sharded
-    scaling), ``BENCH_serving.json`` (per-phase traffic stats +
+    / 2D-grid scaling + planner decisions), ``BENCH_serving.json``
+    (per-phase traffic stats +
     ladder quality + fault-run outcome), ``BENCH_quality.json``
     (method/ladder/rep-width nDCG@10 + trained-vs-init deltas), and
     ``BENCH_frontier.json`` (cache hit rate, cache-on/off p99 and
@@ -108,6 +109,14 @@ def _bench_metrics(path: str) -> dict:
         out[f"sharded/x{s}"] = rec.get("median_ms")
     for s, rec in d.get("term_sharded", {}).items():
         out[f"term_sharded/x{s}"] = rec.get("median_ms")
+    for g, rec in d.get("shard2d", {}).items():
+        out[f"shard2d/{g}"] = rec.get("median_ms")
+    for probe in ("huge_vocab", "small_vocab"):
+        rec = d.get("planner", {}).get(probe)
+        if rec is not None:
+            # trend the decision itself: a planner regression shows as
+            # the term-shard count jumping, not as a latency delta
+            out[f"planner/{probe}/term_shards"] = rec.get("term_shards")
     for p in d.get("phases", []):
         name = p.get("name", "?")
         for k in ("sustained_qps", "p99_ms", "shed_rate"):

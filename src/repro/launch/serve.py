@@ -19,15 +19,31 @@ Runs the sparse-native LSR serving pipeline end-to-end:
             ``--max-queue`` bounds the admission queue;
 3. retrieve — top-k via the unified dispatcher (``--method`` selects
             the path; see repro.retrieval.retrieve's dispatch table).
-            ``--shard-axis doc|term|auto`` picks the sharding axis for
+            ``--shard-axis doc|term|2d|auto`` picks the placement for
             ``--method sharded`` builds and ``--engine`` bases: doc
-            ranges with a top-k merge, or vocab ranges with the
-            partial-sum (psum) merge (DESIGN.md §9).
+            ranges with a top-k merge, vocab ranges with the
+            partial-sum (psum) merge (DESIGN.md §9), the (doc x term)
+            grid composing both, or the ShardPlan planner sizing the
+            grid from posting mass vs the O(V) directory
+            (DESIGN.md §14).
 """
 
 import argparse
 import sys
 import time
+
+
+def _grid_plan(n_shards: int):
+    """The most balanced (doc x term) factorization of an explicit
+    ``--shard-axis 2d`` request: largest doc divisor <= sqrt(n), the
+    term axis takes the rest (prime counts degenerate to 1 x n)."""
+    from repro.retrieval import ShardPlan
+
+    d = max(f for f in range(1, int(n_shards ** 0.5) + 1)
+            if n_shards % f == 0)
+    return ShardPlan(doc_shards=d, term_shards=n_shards // d,
+                     reason=f"--shard-axis 2d: balanced factorization "
+                            f"of {n_shards} devices")
 
 
 def main(argv=None) -> int:
@@ -48,17 +64,19 @@ def main(argv=None) -> int:
                          "(single-device vmap path unless a mesh is "
                          "wired in)")
     ap.add_argument("--shard-axis", default="doc",
-                    choices=("auto", "doc", "term"),
+                    choices=("auto", "doc", "term", "2d"),
                     help="sharding axis for --method sharded or an "
                          "--engine base: doc = contiguous doc ranges "
                          "(all_gather+re-top-k merge), term = vocab "
                          "ranges with full posting lists (partial-sum "
-                         "psum merge; the huge-|V| regime), auto = "
-                         "pick by posting bytes vs the term-directory "
-                         "overhead (engine.term_sharded."
-                         "choose_shard_axis; frozen builds only — "
-                         "--engine has no corpus to size before the "
-                         "build and resolves auto to doc)")
+                         "psum merge; the huge-|V| regime), 2d = the "
+                         "(doc x term) grid composing both, auto = "
+                         "let engine.shard2d.plan_placement pick the "
+                         "(doc_shards, term_shards, replicas) grid "
+                         "from posting bytes vs the O(V) directory "
+                         "(frozen builds size the real index; "
+                         "--engine plans from the requested corpus "
+                         "size and rep budget)")
     ap.add_argument("--index-batch", type=int, default=64,
                     help="corpus encoding batch size")
     ap.add_argument("--deadline-ms", type=float, default=None,
@@ -111,13 +129,13 @@ def main(argv=None) -> int:
                  f"matrix; pass --rep-topk 0 to keep it (or use "
                  f"--method impact/auto with the sparse index)")
     if args.method in ("impact", "pruned", "quantized", "sharded",
-                       "term_sharded") and args.rep_topk <= 0:
+                       "term_sharded", "shard2d") and args.rep_topk <= 0:
         ap.error(f"--method {args.method} needs SparseRep queries and "
                  f"an index; pass a positive --rep-topk")
-    if args.shard_axis == "term" and args.quantize:
-        ap.error("--shard-axis term and --quantize are exclusive (the "
-                 "base segment is either vocab-partitioned or "
-                 "compressed)")
+    if args.shard_axis in ("term", "2d") and args.quantize:
+        ap.error(f"--shard-axis {args.shard_axis} and --quantize are "
+                 "exclusive (the base segment is either partitioned "
+                 "or compressed)")
     if (args.quantize or args.prune_margin is not None
             or args.remove_frac) and not args.engine:
         ap.error("--quantize/--prune-margin/--remove-frac need "
@@ -250,16 +268,35 @@ def main(argv=None) -> int:
     t0 = time.monotonic()
     engine = None
     if args.engine:
-        if args.shard_axis == "auto":
-            print("auto shard axis with --engine: no corpus to size "
-                  "before the build -> doc (single-index base)")
+        plan = None
+        if args.shard_axis == "auto" and not args.quantize:
+            # no corpus exists before the build, but the planner only
+            # needs sizes: the requested doc count and the sparsifier's
+            # per-row term budget bound the posting mass
+            from repro.retrieval import CorpusStats, plan_placement
+
+            est = CorpusStats(
+                posting_bytes=8 * args.corpus * min(16, args.rep_topk),
+                vocab_size=cfg.vocab_size, n_docs=args.corpus)
+            plan = plan_placement(est, args.shards)
+            print(f"auto shard plan (estimated stats) -> "
+                  f"{plan.describe()}: {plan.reason}")
+        elif args.shard_axis == "auto":
+            print("auto shard axis with --quantize: the base is "
+                  "compressed, not partitioned -> doc (single-index "
+                  "base)")
+        elif args.shard_axis == "2d":
+            plan = _grid_plan(args.shards)
+            print(f"2d shard plan -> {plan.describe()}")
         engine = CorpusEngine(
             BatchedEncoder(encode,
                            policy=BatchPolicy(max_batch=bs)),
             cfg.vocab_size, quantize=args.quantize,
             keep_forward=args.prune_margin is not None,
-            shard_axis="term" if args.shard_axis == "term" else "doc",
-            n_shards=args.shards)
+            **({"plan": plan} if plan is not None else
+               {"shard_axis": ("term" if args.shard_axis == "term"
+                               else "doc"),
+                "n_shards": args.shards}))
         for lo in range(0, args.corpus, bs):
             n = min(bs, args.corpus - lo)
             toks = [rng.integers(1, cfg.vocab_size, size=16)
@@ -312,17 +349,33 @@ def main(argv=None) -> int:
                       f"{corpus.memory_bytes() / 2**20:.2f} MiB "
                       f"(1/{index.memory_bytes() / corpus.memory_bytes():.2f} "
                       f"of raw)")
-            elif args.method in ("sharded", "term_sharded"):
-                axis = ("term" if args.method == "term_sharded"
-                        else args.shard_axis)
+            elif args.method in ("sharded", "term_sharded", "shard2d"):
+                plan = None
+                axis = {"term_sharded": "term",
+                        "shard2d": "2d"}.get(args.method,
+                                             args.shard_axis)
                 if axis == "auto":
-                    from repro.retrieval import choose_shard_axis
+                    from repro.retrieval import (CorpusStats,
+                                                 plan_placement)
 
-                    axis = choose_shard_axis(
-                        8 * index.n_postings, cfg.vocab_size,
-                        args.shards)
-                    print(f"auto shard axis -> {axis}")
-                if axis == "term":
+                    plan = plan_placement(CorpusStats.from_index(index),
+                                          args.shards)
+                    axis = plan.axis
+                    print(f"auto shard plan -> {plan.describe()}: "
+                          f"{plan.reason}")
+                if axis == "2d":
+                    from repro.retrieval import shard2d_index
+
+                    if plan is None:
+                        plan = _grid_plan(args.shards)
+                    corpus = shard2d_index(
+                        corpus_rep, cfg.vocab_size, plan.doc_shards,
+                        plan.term_shards)
+                    args.method = "shard2d"
+                    print(f"2d-sharded index: {plan.doc_shards} doc "
+                          f"chunks x {plan.term_shards} vocab ranges "
+                          f"(psum over terms, top-k merge over docs)")
+                elif axis == "term":
                     from repro.retrieval import term_shard_index
 
                     corpus = term_shard_index(corpus_rep,

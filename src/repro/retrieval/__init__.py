@@ -3,12 +3,16 @@ the unified ``retrieve()`` dispatcher, and the index engine —
 pruned / quantized / sharded scoring plus the incremental builder
 (DESIGN.md §7–§8)."""
 
-from repro.retrieval.engine import (IndexBuilder, QuantizedIndex,
-                                    ShardedIndex, TermShardedIndex,
+from repro.retrieval.engine import (CorpusStats, IndexBuilder,
+                                    QuantizedIndex, Shard2DIndex,
+                                    ShardPlan, ShardedIndex,
+                                    TermShardedIndex,
                                     choose_shard_axis,
                                     fused_quantized_retrieve,
+                                    plan_placement,
                                     pruned_retrieve,
-                                    quantize_index, shard_index,
+                                    quantize_index, shard2d_index,
+                                    shard2d_retrieve, shard_index,
                                     sharded_retrieve, term_shard_index,
                                     term_sharded_retrieve)
 from repro.retrieval.index import InvertedIndex, build_inverted_index
@@ -19,10 +23,13 @@ from repro.retrieval.sparse_rep import (SparseRep, sparsify_threshold,
                                         stack_rows, truncate_width)
 
 __all__ = [
+    "CorpusStats",
     "IndexBuilder",
     "InvertedIndex",
     "METHODS",
     "QuantizedIndex",
+    "Shard2DIndex",
+    "ShardPlan",
     "ShardedIndex",
     "SparseRep",
     "TermShardedIndex",
@@ -31,9 +38,12 @@ __all__ = [
     "fused_quantized_retrieve",
     "fused_retrieve",
     "impact_scores",
+    "plan_placement",
     "pruned_retrieve",
     "quantize_index",
     "retrieve",
+    "shard2d_index",
+    "shard2d_retrieve",
     "shard_index",
     "sharded_retrieve",
     "sparsify_threshold",

@@ -19,14 +19,20 @@ Four pieces over the PR-3 ``InvertedIndex``:
                       (``psum``) before one global top-k — the merge
                       algebra for corpora whose posting arrays
                       outgrow one HBM (DESIGN.md §9).
+* ``shard2d``       — the (doc × term) composition of both axes on a
+                      2D mesh, plus the ``ShardPlan`` placement API:
+                      ``plan_placement(stats, n_devices, hbm)`` picks
+                      (doc_shards, term_shards, replicas) from posting
+                      mass, the O(V) directory and forward-row
+                      storage (DESIGN.md §14).
 * ``builder``       — incremental ``IndexBuilder``: add/remove/flush
                       of document batches with tombstones, a base +
                       delta segment pair, and periodic compaction.
 
 Everything threads through ``repro.retrieval.retrieve`` (methods
 ``pruned`` / ``quantized`` / ``fused`` / ``sharded`` /
-``term_sharded``; ``fused`` scores either index flavor inside one
-Pallas kernel — ``kernels/impact_score.py``).
+``term_sharded`` / ``shard2d``; ``fused`` scores either index flavor
+inside one Pallas kernel — ``kernels/impact_score.py``).
 """
 
 from repro.retrieval.engine.builder import IndexBuilder
@@ -39,30 +45,45 @@ from repro.retrieval.engine.quantize import (QuantizedIndex,
                                              quantize_index,
                                              quantized_retrieve,
                                              quantized_scores)
+from repro.retrieval.engine.shard2d import (CorpusStats, Shard2DIndex,
+                                            ShardPlan,
+                                            choose_shard_axis,
+                                            mass_balanced_boundaries,
+                                            plan_placement,
+                                            shard2d_index,
+                                            shard2d_retrieve)
 from repro.retrieval.engine.sharded_index import (ShardedIndex,
+                                                  resolve_mesh_axes,
                                                   resolve_shard_axis,
                                                   shard_index,
                                                   shard_mapped,
                                                   sharded_retrieve)
 from repro.retrieval.engine.term_sharded import (TermShardedIndex,
-                                                 choose_shard_axis,
                                                  term_shard_index,
                                                  term_sharded_retrieve)
 
 __all__ = [
+    "CorpusStats",
     "IndexBuilder",
     "QuantizedIndex",
+    "Shard2DIndex",
+    "ShardPlan",
     "ShardedIndex",
     "TermShardedIndex",
     "choose_shard_axis",
     "default_candidates",
     "fused_quantized_retrieve",
+    "mass_balanced_boundaries",
+    "plan_placement",
     "pruned_retrieve",
     "quantize_index",
     "quantized_retrieve",
     "quantized_scores",
+    "resolve_mesh_axes",
     "resolve_shard_axis",
     "select_and_rescore",
+    "shard2d_index",
+    "shard2d_retrieve",
     "shard_index",
     "shard_mapped",
     "sharded_retrieve",

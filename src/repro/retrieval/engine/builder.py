@@ -70,11 +70,33 @@ class IndexBuilder:
 
     def __init__(self, vocab_size: int, *, quantize: bool = False,
                  keep_forward: bool = False, merge_frac: float = 0.25,
-                 compact_dead_frac: float = 0.25, term_shards: int = 0):
-        if term_shards and quantize:
+                 compact_dead_frac: float = 0.25, term_shards: int = 0,
+                 plan=None):
+        # a ShardPlan (engine.shard2d.plan_placement) is the one
+        # placement input going forward: its term axis sets
+        # term_shards, a genuinely 2D grid makes the base segment a
+        # Shard2DIndex, and a doc-only plan keeps the monolithic base
+        # (the builder's base is storage — doc sharding is a serving-
+        # mesh concern until the base itself outgrows one device).
+        if plan is not None:
+            if term_shards:
+                raise ValueError(
+                    "pass either plan= or term_shards=, not both — "
+                    "the plan carries the shard topology")
+            if plan.doc_shards > 1 and plan.term_shards > 1:
+                self._grid = (plan.doc_shards, plan.term_shards)
+                term_shards = 0
+            else:
+                self._grid = None
+                term_shards = (plan.term_shards
+                               if plan.term_shards > 1 else 0)
+        else:
+            self._grid = None
+        if (term_shards or self._grid) and quantize:
             raise ValueError(
-                "term_shards and quantize are exclusive — the base "
-                "segment is either vocab-partitioned or compressed")
+                "sharded plans and quantize are exclusive — the base "
+                "segment is either partitioned or compressed")
+        self.plan = plan
         self.vocab_size = vocab_size
         self.quantize = quantize
         self.keep_forward = keep_forward
@@ -136,6 +158,8 @@ class IndexBuilder:
             "quantized_base": bool(self.quantize and self._base
                                    is not None),
             "term_shards": self.term_shards,
+            "doc_shards": self._grid[0] if self._grid else 0,
+            "grid_term_shards": self._grid[1] if self._grid else 0,
             "generation": self.generation,
         }
 
@@ -231,6 +255,18 @@ class IndexBuilder:
                    ) -> None:
         rep = SparseRep(values, indices,
                         (values > 0).sum(axis=1).astype(np.int32))
+        if self._grid is not None:
+            from repro.retrieval.engine.shard2d import shard2d_index
+
+            d, t = self._grid
+            # compaction can shrink the live rows below the planned
+            # doc-chunk count; clamp rather than refuse to serve
+            d = min(d, values.shape[0])
+            self._base_raw = shard2d_index(
+                rep, self.vocab_size, d, t,
+                keep_forward=self.keep_forward)
+            self._base = self._base_raw
+            return
         if self.term_shards:
             from repro.retrieval.engine.term_sharded import \
                 term_shard_index
@@ -296,16 +332,25 @@ class IndexBuilder:
         if self._base_removals and self._base_raw is not None:
             import dataclasses
 
+            from repro.retrieval.engine.shard2d import Shard2DIndex
+
             dead = np.asarray(self._base_removals, np.int64)
-            pdoc = np.asarray(self._base_raw.postings_doc)
-            pval = np.asarray(self._base_raw.postings_val).copy()
-            pval[np.isin(pdoc, dead)] = 0.0
-            kw = {"postings_val": jnp.asarray(pval)}
-            if self._base_raw.doc_values is not None:
-                dv = np.asarray(self._base_raw.doc_values).copy()
-                dv[dead] = 0.0
-                kw["doc_values"] = jnp.asarray(dv)
-            self._base_raw = dataclasses.replace(self._base_raw, **kw)
+            if isinstance(self._base_raw, Shard2DIndex):
+                # 2D cells carry chunk-LOCAL doc ids — the index's own
+                # per-chunk remap applies the tombstones
+                self._base_raw = self._base_raw.zero_docs(dead)
+            else:
+                # base/term-sharded postings carry global slot ids
+                pdoc = np.asarray(self._base_raw.postings_doc)
+                pval = np.asarray(self._base_raw.postings_val).copy()
+                pval[np.isin(pdoc, dead)] = 0.0
+                kw = {"postings_val": jnp.asarray(pval)}
+                if self._base_raw.doc_values is not None:
+                    dv = np.asarray(self._base_raw.doc_values).copy()
+                    dv[dead] = 0.0
+                    kw["doc_values"] = jnp.asarray(dv)
+                self._base_raw = dataclasses.replace(self._base_raw,
+                                                     **kw)
             if self.quantize:
                 from repro.retrieval.engine.quantize import quantize_index
                 self._base = quantize_index(self._base_raw)
@@ -337,13 +382,16 @@ class IndexBuilder:
 
     def _base_method(self, method: str) -> str:
         """The method name the base segment is actually scored with
-        (before ``auto`` resolution): a term-sharded base serves
-        pruning through its own two-tier composition (per-shard
+        (before ``auto`` resolution): a term-sharded or 2D base serves
+        pruning through its own two-tier composition (per-shard/cell
         ceilings + rescore; margin 0 routes to the exact psum path —
-        same ids) and the fused kernel has no TermShardedIndex entry
-        point, so both remap to ``term_sharded``."""
-        if method in ("pruned", "fused") and self.term_shards:
-            return "term_sharded"
+        same ids) and the fused kernel has no sharded-index entry
+        point, so both remap to the base's sharded method."""
+        if method in ("pruned", "fused"):
+            if self._grid is not None:
+                return "shard2d"
+            if self.term_shards:
+                return "term_sharded"
         return method
 
     def resolved_method(self, method: str = "auto") -> str:
@@ -444,7 +492,8 @@ class IndexBuilder:
             # ("fused" passes through: the kernel scores a raw index,
             # honoring the same fused tuning kwargs as the base)
             dm = ("impact" if method in ("pruned", "quantized",
-                                         "sharded", "term_sharded")
+                                         "sharded", "term_sharded",
+                                         "shard2d")
                   else method)
             dkw = kw if (dm == "fused" and resolved == "fused") else {}
             dv, di = retrieve(queries, self._delta,

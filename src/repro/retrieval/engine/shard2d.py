@@ -1,0 +1,813 @@
+"""2D hybrid (doc × term) sharding behind the ShardPlan placement API
+(DESIGN.md §14).
+
+Doc sharding (``sharded_index.py``) and term sharding
+(``term_sharded.py``) are exclusive single-axis layouts: the first
+splits documents and replicates the ``O(V)`` term directory on every
+device, the second splits the vocabulary and pays a ``(B, N)``
+partial-sum all-reduce at query time. The paper's large-|V| regime
+(the ~250k-vocab multilingual backbone) wants *both*: enough term
+shards to tame the replicated directory, enough doc shards to keep the
+psum small and the corpus growing with device count.
+
+``Shard2DIndex`` composes the two axes on a (doc × term) grid: device
+``(i, j)`` owns the complete posting lists of vocab range ``j``
+restricted to the documents of contiguous doc chunk ``i``. The merge
+algebra composes the two single-axis reductions in the only order that
+is exact:
+
+1. **psum over the term axis** — within one doc chunk a document's
+   score is spread across the ``T`` vocab ranges, so the per-cell
+   ``(B, docs_per_chunk)`` partial sums are all-reduced first (the
+   ``term_sharded`` algebra, but over a chunk instead of the whole
+   corpus — the psum payload shrinks by the doc-shard factor);
+2. **top-k merge over the doc axis** — after the psum each doc row
+   holds *exact* chunk scores, so per-chunk top-k + ``all_gather`` +
+   re-top-k finishes the query (the ``sharded_index`` algebra,
+   unchanged).
+
+Running the reductions in the other order would be wrong: per-cell
+top-k before the psum would rank documents by partial scores.
+
+Two-tier MaxScore composes across both axes the same way: per-cell
+*ceiling* partials (from each cell's local upper bounds) are psum'd
+over the term axis into exact chunk ceilings, gathered over the doc
+axis into the global ``(B, N)`` bound, and the surviving candidates
+are rescored exactly from forward rows stored once on the index
+(``pruning.select_and_rescore`` — the same tier 2 every other path
+uses).
+
+Placement is no longer a string choice. ``plan_placement(stats,
+n_devices, per_device_hbm)`` grows the old ``choose_shard_axis``
+heuristic into a real planner over frozen ``ShardPlan`` tuples
+``(doc_shards, term_shards, replicas, axis_order, reason)``: it
+accounts the per-device posting bytes, the directory slice (doc
+sharding replicates all ``DIR_BYTES_PER_TERM * V`` of it, term
+sharding divides it by ``term_shards``) and the replicated forward
+rows, picks the smallest grid that fits the HBM budget (preferring few
+term shards — the psum is the expensive merge), and spends the
+leftover devices on whole-grid throughput replicas. Term-range cuts
+are balanced by cumulative posting *mass* (``mass_balanced_
+boundaries``), not vocab width, so one stopword-heavy range cannot
+drag every shard's padded posting array to its own length.
+
+Like the 1D indexes, the same semantics run on two paths: ``mesh``
+given — ``shard_map`` over a 2-axis mesh (``psum`` + ``all_gather``);
+``mesh=None`` — a nested ``vmap`` on one device (a work partition,
+used by tests and CPU benches).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import warnings
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.retrieval.engine.sharded_index import (NEG_INF,
+                                                  resolve_mesh_axes,
+                                                  shard_mapped)
+from repro.retrieval.index import InvertedIndex, build_inverted_index
+from repro.retrieval.sparse_rep import SparseRep
+
+Array = jax.Array
+
+# term_starts + term_lens + term_ubs per vocab entry — the per-device
+# term-directory cost the planner accounts (doc sharding replicates
+# it, term sharding divides it by term_shards)
+DIR_BYTES_PER_TERM = 12
+# one posting = i32 doc id + f32 impact
+POSTING_BYTES = 8
+
+
+# ---------------------------------------------------------------------------
+# corpus statistics — the planner's input
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CorpusStats:
+    """The sizes that drive placement: posting mass, vocab width, and
+    the replicated extras. Build one ``from_index``/``from_rep`` for a
+    live corpus or fill the fields directly to plan a hypothetical one
+    (the bench's 30k-vs-250k vocab probe does the latter)."""
+
+    posting_bytes: int        # total posting-array bytes (docs + vals)
+    vocab_size: int           # |V| — the directory is O(V) per replica
+    n_docs: int
+    forward_bytes: int = 0    # (N, K) forward rows, replicated per dev
+
+    @classmethod
+    def from_index(cls, index: InvertedIndex) -> "CorpusStats":
+        fwd = 0
+        if index.has_forward:
+            fwd = int(np.asarray(index.doc_values).nbytes
+                      + np.asarray(index.doc_indices).nbytes)
+        return cls(posting_bytes=POSTING_BYTES * index.n_postings,
+                   vocab_size=index.vocab_size, n_docs=index.n_docs,
+                   forward_bytes=fwd)
+
+    @classmethod
+    def from_rep(cls, reps: SparseRep, vocab_size: int, *,
+                 keep_forward: bool = False) -> "CorpusStats":
+        from repro.retrieval.sparse_rep import device_get
+
+        host = (device_get(reps) if isinstance(reps.values, jax.Array)
+                else reps)
+        v = np.asarray(host.values, np.float32).reshape(-1, host.width)
+        nnz = int((v > 0).sum())
+        fwd = 2 * 4 * v.size if keep_forward else 0
+        return cls(posting_bytes=POSTING_BYTES * max(nnz, 1),
+                   vocab_size=vocab_size, n_docs=v.shape[0],
+                   forward_bytes=fwd)
+
+
+# ---------------------------------------------------------------------------
+# ShardPlan — the placement API
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardPlan:
+    """A frozen placement: a (doc × term) grid replicated ``replicas``
+    times for throughput. ``axis_order`` names the logical axes in
+    *mesh* order — ``("doc", "term")`` means mesh axis 0 carries the
+    doc dimension; flip it to run the same index on a transposed mesh.
+    ``reason`` is the planner's human-readable accounting trail."""
+
+    doc_shards: int
+    term_shards: int
+    replicas: int = 1
+    axis_order: Tuple[str, str] = ("doc", "term")
+    reason: str = ""
+
+    def __post_init__(self):
+        for name in ("doc_shards", "term_shards", "replicas"):
+            if getattr(self, name) < 1:
+                raise ValueError(f"ShardPlan.{name} must be >= 1, got "
+                                 f"{getattr(self, name)}")
+        if tuple(sorted(self.axis_order)) != ("doc", "term"):
+            raise ValueError(
+                f"axis_order must be a permutation of ('doc', 'term'), "
+                f"got {self.axis_order!r}")
+
+    @property
+    def grid(self) -> int:
+        return self.doc_shards * self.term_shards
+
+    @property
+    def n_devices(self) -> int:
+        return self.grid * self.replicas
+
+    @property
+    def axis(self) -> str:
+        """The 1D axis name this plan degenerates to — what the
+        deprecated ``choose_shard_axis`` shim returns. A genuinely 2D
+        grid reports ``"2d"``."""
+        if self.term_shards == 1:
+            return "doc"
+        if self.doc_shards == 1:
+            return "term"
+        return "2d"
+
+    def per_device_bytes(self, stats: CorpusStats) -> float:
+        """The planner's accounting model for one device of this grid:
+        an even posting-mass slice (mass-balanced term cuts + contiguous
+        doc chunks make that the design point, not an assumption), this
+        device's directory slice, and the replicated forward rows."""
+        return (stats.posting_bytes / self.grid
+                + DIR_BYTES_PER_TERM * stats.vocab_size
+                / self.term_shards
+                + stats.forward_bytes)
+
+    def describe(self) -> str:
+        return (f"{self.doc_shards}x{self.term_shards} (doc x term)"
+                + (f" x{self.replicas} replicas" if self.replicas > 1
+                   else ""))
+
+
+def _grid_candidates(n_devices: int):
+    """All (doc_shards, term_shards) grids of size <= n_devices,
+    ordered smallest grid first, then fewest term shards (the psum is
+    the expensive merge), then fewest doc shards."""
+    grids = [(d, t) for d in range(1, n_devices + 1)
+             for t in range(1, n_devices // d + 1)]
+    return sorted(grids, key=lambda g: (g[0] * g[1], g[1], g[0]))
+
+
+def plan_placement(stats: CorpusStats, n_devices: int,
+                   per_device_hbm: Optional[int] = None) -> ShardPlan:
+    """Plan a (doc × term × replica) placement for this corpus.
+
+    With an HBM budget: the smallest grid whose per-device footprint
+    (``ShardPlan.per_device_bytes``) fits wins — few term shards
+    preferred, since the doc axis merges k winners while the term axis
+    all-reduces chunk-sized partials — and every leftover device
+    becomes a whole-grid throughput replica. If nothing fits, the
+    full-device grid with the smallest footprint is returned (serving
+    may still spill; the ``reason`` says so loudly).
+
+    Without a budget, only the directory-vs-postings ratio can decide:
+    doc-only when the replicated O(V) directory is a rounding error
+    next to a per-device posting slice, else just enough term shards
+    that each device's directory slice stops dominating its postings —
+    the huge-vocab sparse regime ("The Role of Vocabularies") where
+    posting mass, not device count, drives placement.
+    """
+    if n_devices < 1:
+        raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+    directory = DIR_BYTES_PER_TERM * stats.vocab_size
+    post_slice = stats.posting_bytes / n_devices
+
+    if per_device_hbm is None:
+        if directory <= post_slice:
+            return ShardPlan(
+                doc_shards=n_devices, term_shards=1,
+                reason=f"doc-only: replicated directory "
+                       f"({directory} B) fits beside the per-device "
+                       f"posting slice ({post_slice:.0f} B)")
+        for t in range(2, n_devices + 1):
+            if n_devices % t == 0 and directory / t <= post_slice:
+                return ShardPlan(
+                    doc_shards=n_devices // t, term_shards=t,
+                    reason=f"{n_devices // t}x{t}: {t} term shards "
+                           f"cut the directory to {directory / t:.0f} "
+                           f"B <= the posting slice "
+                           f"({post_slice:.0f} B)")
+        return ShardPlan(
+            doc_shards=1, term_shards=n_devices,
+            reason=f"term-only: directory ({directory} B) dominates "
+                   f"the posting slice ({post_slice:.0f} B) at every "
+                   f"narrower cut")
+
+    feasible = [(d, t) for d, t in _grid_candidates(n_devices)
+                if ShardPlan(d, t).per_device_bytes(stats)
+                <= per_device_hbm]
+    if not feasible:
+        full = [(d, t) for d, t in _grid_candidates(n_devices)
+                if d * t == n_devices]
+        d, t = min(full, key=lambda g: ShardPlan(*g)
+                   .per_device_bytes(stats))
+        need = ShardPlan(d, t).per_device_bytes(stats)
+        return ShardPlan(
+            doc_shards=d, term_shards=t,
+            reason=f"OVER BUDGET: smallest per-device footprint "
+                   f"{need:.0f} B still exceeds {per_device_hbm} B — "
+                   f"needs more devices or a smaller corpus")
+    d, t = feasible[0]
+    plan = ShardPlan(d, t)
+    replicas = n_devices // plan.grid
+    used = plan.per_device_bytes(stats)
+    return dataclasses.replace(
+        plan, replicas=replicas,
+        reason=f"{d}x{t} grid fits ({used:.0f} of {per_device_hbm} B "
+               f"per device)"
+               + (f"; {replicas} throughput replicas from the "
+                  f"{n_devices - plan.grid} spare devices"
+                  if replicas > 1 else ""))
+
+
+def choose_shard_axis(posting_bytes: int, vocab_size: int,
+                      n_shards: int,
+                      per_device_bytes: Optional[int] = None) -> str:
+    """Deprecated string shim over ``plan_placement`` — returns
+    ``plan.axis`` (``"doc"``/``"term"``/``"2d"``). Migrate to the
+    ``ShardPlan`` object; the string cannot express 2D grids or
+    replicas."""
+    warnings.warn(
+        "choose_shard_axis is deprecated: use plan_placement(...) and "
+        "read the ShardPlan (doc_shards/term_shards/replicas) instead "
+        "of a string axis",
+        DeprecationWarning, stacklevel=2)
+    stats = CorpusStats(posting_bytes=posting_bytes,
+                        vocab_size=vocab_size, n_docs=0)
+    return plan_placement(stats, n_shards, per_device_bytes).axis
+
+
+# ---------------------------------------------------------------------------
+# mass-balanced vocab cuts (shared with term_sharded)
+# ---------------------------------------------------------------------------
+
+def mass_balanced_boundaries(term_counts: np.ndarray, n_shards: int
+                             ) -> Tuple[int, ...]:
+    """Vocab cuts that equalize cumulative posting *mass* per range.
+
+    Width-balanced cuts give every shard ``V / n`` terms; with a
+    skewed DF distribution (one stopword-heavy term owning a large
+    slice of all postings) one shard's posting array then dwarfs the
+    rest and — because the stacked layout pads to the widest shard —
+    every shard pays for it. Cutting at the mass quantiles instead
+    bounds each range near ``total / n`` postings (within one term:
+    a single list is never split). Cuts are strictly increasing; with
+    zero total mass the width cuts are returned.
+    """
+    counts = np.asarray(term_counts, np.int64)
+    v = counts.shape[0]
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    if n_shards > v:
+        raise ValueError(f"n_shards={n_shards} exceeds vocab size {v}")
+    total = int(counts.sum())
+    if total == 0:
+        return tuple(s * v // n_shards for s in range(n_shards + 1))
+    cum = np.cumsum(counts)
+    bounds = [0]
+    for s in range(1, n_shards):
+        target = s * total / n_shards
+        b = int(np.searchsorted(cum, target))
+        # keep cuts strictly increasing with enough terms left for the
+        # remaining shards
+        b = max(b, bounds[-1] + 1)
+        b = min(b, v - (n_shards - s))
+        bounds.append(b)
+    bounds.append(v)
+    return tuple(bounds)
+
+
+def _validate_boundaries(boundaries, n_parts: int, size: int,
+                         what: str) -> Tuple[int, ...]:
+    boundaries = tuple(int(b) for b in boundaries)
+    if (len(boundaries) != n_parts + 1 or boundaries[0] != 0
+            or boundaries[-1] != size
+            or any(a >= b for a, b in zip(boundaries, boundaries[1:]))):
+        raise ValueError(
+            f"{what} must be {n_parts + 1} strictly increasing cuts "
+            f"from 0 to {size}, got {list(boundaries)}")
+    return boundaries
+
+
+# ---------------------------------------------------------------------------
+# the 2D index
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Shard2DIndex:
+    """(doc × term) grid of posting-list cells (module docstring).
+
+    Cell ``(i, j)`` indexes doc chunk ``i`` restricted to vocab range
+    ``j``: term ids are local to the range (``t - term_lo[j]``), doc
+    ids are local to the chunk (``d - chunk_starts[i]``). Stacked on
+    two leading grid axes, padded to the widest cell."""
+
+    term_starts: Array      # (D, T, Vloc) i32 — local term offsets
+    term_lens: Array        # (D, T, Vloc) i32
+    postings_doc: Array     # (D, T, Pmax) i32 — LOCAL (chunk) doc ids
+    postings_val: Array     # (D, T, Pmax) f32
+    term_ubs: Array         # (D, T, Vloc) f32 — per-cell upper bounds
+    term_lo: Array          # (T,) i32 — vocab range starts
+    term_hi: Array          # (T,) i32 — vocab range ends (exclusive)
+    chunk_starts: Array     # (D,) i32 — first global doc id per chunk
+    chunk_counts: Array     # (D,) i32 — real docs per chunk
+    doc_shards: int         # static — D
+    term_shards: int        # static — T
+    n_docs: int             # static — total real docs
+    vocab_size: int         # static — global V
+    local_vocab: int        # static — padded per-range vocab width
+    docs_per_chunk: int     # static — padded chunk width
+    max_postings: int       # static — longest list over all cells
+    term_boundaries: Tuple[int, ...] = ()   # static — the vocab cuts
+    doc_boundaries: Tuple[int, ...] = ()    # static — the doc cuts
+    doc_values: Optional[Array] = None      # (N, K) f32 — stored once
+    doc_indices: Optional[Array] = None     # (N, K) i32
+
+    def tree_flatten(self):
+        children = (self.term_starts, self.term_lens,
+                    self.postings_doc, self.postings_val,
+                    self.term_ubs, self.term_lo, self.term_hi,
+                    self.chunk_starts, self.chunk_counts,
+                    self.doc_values, self.doc_indices)
+        aux = (self.doc_shards, self.term_shards, self.n_docs,
+               self.vocab_size, self.local_vocab, self.docs_per_chunk,
+               self.max_postings, self.term_boundaries,
+               self.doc_boundaries)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children[:9], *aux, doc_values=children[9],
+                   doc_indices=children[10])
+
+    @property
+    def has_forward(self) -> bool:
+        return self.doc_values is not None and self.doc_indices is not None
+
+    def memory_bytes(self) -> int:
+        arrays = [self.term_starts, self.term_lens, self.postings_doc,
+                  self.postings_val, self.term_ubs, self.term_lo,
+                  self.term_hi, self.chunk_starts, self.chunk_counts]
+        for opt in (self.doc_values, self.doc_indices):
+            if opt is not None:
+                arrays.append(opt)
+        return int(sum(np.asarray(a).nbytes for a in arrays))
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "doc_shards": self.doc_shards,
+            "term_shards": self.term_shards,
+            "n_docs": self.n_docs,
+            "vocab_size": self.vocab_size,
+            "local_vocab": self.local_vocab,
+            "docs_per_chunk": self.docs_per_chunk,
+            "max_postings": self.max_postings,
+            "memory_bytes": self.memory_bytes(),
+        }
+
+    def zero_docs(self, global_ids: Sequence[int]) -> "Shard2DIndex":
+        """Tombstone documents in place: zero their posting impacts in
+        every cell of their doc chunk (and their forward rows). Doc
+        ids in the cells are chunk-local, so each chunk masks against
+        its own local slice of ``global_ids`` — the builder's
+        base-removal flush path (DESIGN.md §8.4) for 2D bases."""
+        dead = np.asarray(sorted(set(int(g) for g in global_ids)),
+                          np.int64)
+        pdoc = np.asarray(self.postings_doc)
+        pval = np.asarray(self.postings_val).copy()
+        starts = np.asarray(self.chunk_starts)
+        bounds = self.doc_boundaries
+        for i in range(self.doc_shards):
+            local = dead[(dead >= bounds[i])
+                         & (dead < bounds[i + 1])] - starts[i]
+            if local.size:
+                pval[i][np.isin(pdoc[i], local)] = 0.0
+        kw = {"postings_val": jnp.asarray(pval)}
+        if self.doc_values is not None:
+            dv = np.asarray(self.doc_values).copy()
+            dv[dead] = 0.0
+            kw["doc_values"] = jnp.asarray(dv)
+        return dataclasses.replace(self, **kw)
+
+
+def shard2d_index(reps: SparseRep, vocab_size: int, doc_shards: int,
+                  term_shards: int, *,
+                  doc_boundaries: Optional[Sequence[int]] = None,
+                  term_boundaries: Optional[Sequence[int]] = None,
+                  balance: str = "mass",
+                  keep_forward: bool = False) -> Shard2DIndex:
+    """Build the (doc × term) grid from a batched corpus rep
+    (host-side).
+
+    Docs are cut into ``doc_shards`` contiguous chunks (default: even
+    chunks of ``ceil(N / D)``; pass ``doc_boundaries`` for uneven
+    ones), the vocabulary into ``term_shards`` ranges (default cut by
+    posting mass — ``balance="mass"`` — or evenly with
+    ``balance="width"``; explicit ``term_boundaries`` win). Every
+    (chunk, range) cell is indexed independently via
+    ``build_inverted_index(vocab_range=...)`` over the chunk's rows —
+    local term ids AND local doc ids — then padded to the widest cell.
+
+    ``keep_forward=True`` stores the (N, K) forward rows once (global
+    term ids, global doc rows), enabling the two-tier pruned path.
+    """
+    if doc_shards < 1 or term_shards < 1:
+        raise ValueError(f"shard counts must be >= 1, got "
+                         f"{doc_shards}x{term_shards}")
+    if term_shards > vocab_size:
+        raise ValueError(f"term_shards={term_shards} exceeds vocab "
+                         f"size {vocab_size}")
+    if balance not in ("mass", "width"):
+        raise ValueError(f"balance must be 'mass' or 'width', got "
+                         f"{balance!r}")
+
+    from repro.retrieval.sparse_rep import device_get
+
+    host = device_get(reps) if isinstance(reps.values, jax.Array) else reps
+    kw = host.width
+    v = np.asarray(host.values, np.float32).reshape(-1, kw)
+    i = np.asarray(host.indices, np.int32).reshape(-1, kw)
+    n = np.asarray(host.nnz, np.int32).reshape(-1)
+    n_docs = v.shape[0]
+    if doc_shards > n_docs:
+        raise ValueError(
+            f"doc_shards={doc_shards} exceeds corpus size {n_docs}")
+
+    if doc_boundaries is None:
+        dps = -(-n_docs // doc_shards)
+        doc_boundaries = [min(s * dps, n_docs)
+                          for s in range(doc_shards + 1)]
+        doc_boundaries[-1] = n_docs
+    doc_bounds = _validate_boundaries(doc_boundaries, doc_shards,
+                                      n_docs, "doc_boundaries")
+
+    if term_boundaries is None:
+        if balance == "mass":
+            counts = np.bincount(i[v > 0].ravel(),
+                                 minlength=vocab_size)
+            term_boundaries = mass_balanced_boundaries(counts,
+                                                       term_shards)
+        else:
+            term_boundaries = [s * vocab_size // term_shards
+                               for s in range(term_shards + 1)]
+    term_bounds = _validate_boundaries(term_boundaries, term_shards,
+                                       vocab_size, "term_boundaries")
+
+    cells = []      # (D, T) grid of per-cell InvertedIndex
+    for d in range(doc_shards):
+        lo_d, hi_d = doc_bounds[d], doc_bounds[d + 1]
+        chunk = SparseRep(v[lo_d:hi_d], i[lo_d:hi_d], n[lo_d:hi_d])
+        cells.append([build_inverted_index(
+            chunk, vocab_size,
+            vocab_range=(term_bounds[t], term_bounds[t + 1]),
+            stopword_warn_frac=1.1) for t in range(term_shards)])
+
+    v_loc = max(c.vocab_size for row in cells for c in row)
+    p_max = max(c.n_postings for row in cells for c in row)
+    dpc = max(b - a for a, b in zip(doc_bounds, doc_bounds[1:]))
+    D, T = doc_shards, term_shards
+    starts = np.zeros((D, T, v_loc), np.int32)
+    lens = np.zeros((D, T, v_loc), np.int32)
+    ubs = np.zeros((D, T, v_loc), np.float32)
+    pdoc = np.zeros((D, T, p_max), np.int32)
+    pval = np.zeros((D, T, p_max), np.float32)
+    for d in range(D):
+        for t in range(T):
+            c = cells[d][t]
+            starts[d, t, :c.vocab_size] = np.asarray(c.term_starts)
+            lens[d, t, :c.vocab_size] = np.asarray(c.term_lens)
+            ubs[d, t, :c.vocab_size] = np.asarray(c.term_ubs)
+            pdoc[d, t, :c.n_postings] = np.asarray(c.postings_doc)
+            pval[d, t, :c.n_postings] = np.asarray(c.postings_val)
+
+    return Shard2DIndex(
+        term_starts=jnp.asarray(starts),
+        term_lens=jnp.asarray(lens),
+        postings_doc=jnp.asarray(pdoc),
+        postings_val=jnp.asarray(pval),
+        term_ubs=jnp.asarray(ubs),
+        term_lo=jnp.asarray(term_bounds[:-1], dtype=jnp.int32),
+        term_hi=jnp.asarray(term_bounds[1:], dtype=jnp.int32),
+        chunk_starts=jnp.asarray(doc_bounds[:-1], dtype=jnp.int32),
+        chunk_counts=jnp.asarray(
+            np.diff(np.asarray(doc_bounds)).astype(np.int32)),
+        doc_shards=D,
+        term_shards=T,
+        n_docs=n_docs,
+        vocab_size=vocab_size,
+        local_vocab=v_loc,
+        docs_per_chunk=dpc,
+        max_postings=max(c.max_postings for row in cells for c in row),
+        term_boundaries=term_bounds,
+        doc_boundaries=doc_bounds,
+        doc_values=jnp.asarray(v) if keep_forward else None,
+        doc_indices=jnp.asarray(i) if keep_forward else None,
+    )
+
+
+# ---------------------------------------------------------------------------
+# scoring — psum over the term axis, then top-k merge over the doc axis
+# ---------------------------------------------------------------------------
+
+def _route(qv: Array, qi: Array, lo: Array, hi: Array,
+           local_vocab: int) -> Tuple[Array, Array]:
+    """Mask the query's active terms to one vocab range and remap to
+    local ids (same contract as term_sharded._route: masked slots
+    carry value 0 and contribute exactly 0 to the partials)."""
+    in_range = (qi >= lo) & (qi < hi)
+    lqv = jnp.where(in_range, qv, 0.0)
+    lqi = jnp.clip(qi - lo, 0, local_vocab - 1)
+    return lqv, lqi
+
+
+def _cell_index(st: Array, ln: Array, pd: Array, pv: Array,
+                index: Shard2DIndex, ubs: Optional[Array] = None
+                ) -> InvertedIndex:
+    return InvertedIndex(
+        term_starts=st, term_lens=ln, postings_doc=pd, postings_val=pv,
+        n_docs=index.docs_per_chunk, vocab_size=index.local_vocab,
+        max_postings=index.max_postings, term_ubs=ubs)
+
+
+def _cell_partial(qv: Array, qi: Array, st: Array, ln: Array,
+                  pd: Array, pv: Array, lo: Array, hi: Array,
+                  index: Shard2DIndex) -> Array:
+    """(B, docs_per_chunk) PARTIAL scores of one grid cell — the
+    contribution of vocab range [lo, hi) to its doc chunk."""
+    from repro.retrieval.score import impact_scores
+
+    lqv, lqi = _route(qv, qi, lo, hi, index.local_vocab)
+    rep = SparseRep(lqv, lqi,
+                    jnp.sum((lqv > 0).astype(jnp.int32), axis=-1))
+    return impact_scores(rep, _cell_index(st, ln, pd, pv, index))
+
+
+def _cell_ub_partial(qv: Array, qi: Array, st: Array, ln: Array,
+                     pd: Array, pv: Array, ubs: Array, lo: Array,
+                     hi: Array, index: Shard2DIndex) -> Array:
+    """(B, docs_per_chunk) partial MaxScore ceilings of one cell."""
+    from repro.retrieval.engine.pruning import upper_bound_scores
+
+    lqv, lqi = _route(qv, qi, lo, hi, index.local_vocab)
+    rep = SparseRep(lqv, lqi,
+                    jnp.sum((lqv > 0).astype(jnp.int32), axis=-1))
+    return upper_bound_scores(
+        rep, _cell_index(st, ln, pd, pv, index, ubs))
+
+
+def _grid_map(fn, index: Shard2DIndex, with_ubs: bool = False):
+    """vmap ``fn`` over both grid axes -> (D, T, B, docs_per_chunk)."""
+    args = [index.term_starts, index.term_lens, index.postings_doc,
+            index.postings_val]
+    if with_ubs:
+        args.append(index.term_ubs)
+    over_t = jax.vmap(fn, in_axes=tuple([0] * len(args)) + (0, 0))
+    over_d = jax.vmap(
+        lambda *cell: over_t(*cell, index.term_lo, index.term_hi),
+        in_axes=tuple([0] * len(args)))
+    return over_d(*args)
+
+
+def _mask_pad(chunk_scores: Array, counts: Array, dpc: int) -> Array:
+    """NEG_INF the padded tail of every chunk: (D, B, dpc) -> same."""
+    local = jnp.arange(dpc, dtype=jnp.int32)
+    return jnp.where(local[None, None, :] < counts[:, None, None],
+                     chunk_scores, NEG_INF)
+
+
+def _scatter_global(chunk_vals: Array, starts: Array, n_docs: int
+                    ) -> Array:
+    """(D, B, dpc) NEG_INF-padded chunk values -> (B, n_docs) global
+    rows.
+
+    Chunks are contiguous but possibly uneven, so the flattened
+    (D * dpc) position is NOT the global id — scatter through each
+    chunk's start offset instead (padded slots land on a clipped
+    position with NEG_INF and lose the scatter-max)."""
+    d, b, dpc = chunk_vals.shape
+    local = jnp.arange(dpc, dtype=jnp.int32)
+    pos = starts[:, None] + local[None, :]              # (D, dpc)
+    pos = jnp.clip(pos, 0, n_docs - 1).reshape(-1)
+    flat = jnp.moveaxis(chunk_vals, 1, 0).reshape(b, -1)
+    out = jnp.full((b, n_docs), NEG_INF, chunk_vals.dtype)
+    return out.at[:, pos].max(flat)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _vmap_retrieve(qv: Array, qi: Array, index: Shard2DIndex, k: int
+                   ) -> Tuple[Array, Array]:
+    """Single-device path: the whole grid under nested vmaps — sum
+    over the term axis (the psum algebra), NEG_INF-mask chunk padding,
+    then one global top-k over the flattened doc axis. Flattened
+    positions are monotone in global id, so lax.top_k's lowest-index
+    tie-break matches the unsharded scorer."""
+    partials = _grid_map(
+        lambda st, ln, pd, pv, lo, hi: _cell_partial(
+            qv, qi, st, ln, pd, pv, lo, hi, index),
+        index)                                      # (D, T, B, dpc)
+    chunks = _mask_pad(jnp.sum(partials, axis=1),
+                       index.chunk_counts, index.docs_per_chunk)
+    b = qv.shape[0]
+    flat = jnp.moveaxis(chunks, 1, 0).reshape(b, -1)    # (B, D*dpc)
+    local = jnp.arange(index.docs_per_chunk, dtype=jnp.int32)
+    gids = (index.chunk_starts[:, None] + local[None, :]).reshape(-1)
+    vals, pos = jax.lax.top_k(flat, k)
+    return vals, gids[pos].astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "candidates"))
+def _vmap_pruned_retrieve(queries: SparseRep, index: Shard2DIndex,
+                          k: int, candidates: int, prune_margin: Array
+                          ) -> Tuple[Array, Array, Array]:
+    from repro.retrieval.engine.pruning import select_and_rescore
+
+    qv = queries.values.reshape(-1, queries.width).astype(jnp.float32)
+    qi = queries.indices.reshape(-1, queries.width)
+    ub_partials = _grid_map(
+        lambda st, ln, pd, pv, ubs, lo, hi: _cell_ub_partial(
+            qv, qi, st, ln, pd, pv, ubs, lo, hi, index),
+        index, with_ubs=True)                       # (D, T, B, dpc)
+    chunks = _mask_pad(jnp.sum(ub_partials, axis=1),
+                       index.chunk_counts, index.docs_per_chunk)
+    ub = _scatter_global(chunks, index.chunk_starts, index.n_docs)
+    return select_and_rescore(ub, queries, index.doc_values,
+                              index.doc_indices, index.vocab_size,
+                              k, candidates, prune_margin)
+
+
+def shard2d_retrieve(
+    queries: SparseRep,
+    index: Shard2DIndex,
+    k: int = 10,
+    *,
+    mesh=None,
+    plan: Optional[ShardPlan] = None,
+    prune_margin: Optional[float] = None,
+    candidates: Optional[int] = None,
+) -> Tuple[Array, Array]:
+    """Top-k over the 2D grid; ids are global doc ids, pinned
+    id-identical to ``method="impact"`` at every grid shape.
+
+    Exact by default: per-cell partials are psum'd over the term axis
+    into exact chunk scores, per-chunk winners are all_gathered over
+    the doc axis and re-top-k'd. With ``prune_margin`` the two-tier
+    composition runs instead (module docstring) and needs forward rows
+    (``keep_forward=True`` at build).
+
+    ``mesh`` must carry both logical axes; ``plan.axis_order`` maps
+    them onto the mesh's first two axis names (default: mesh axis 0 =
+    doc, axis 1 = term). ``mesh=None`` computes the same thing under
+    nested vmaps on one device.
+    """
+    k = min(k, index.n_docs)
+    qv = queries.values.reshape(-1, queries.width).astype(jnp.float32)
+    qi = queries.indices.reshape(-1, queries.width)
+
+    prune = prune_margin is not None
+    if prune:
+        if not index.has_forward:
+            raise ValueError(
+                "shard2d_retrieve: pruning needs forward rows — build "
+                "with shard2d_index(..., keep_forward=True)")
+        if not 0.0 <= prune_margin <= 1.0:
+            raise ValueError(f"prune_margin must be in [0, 1], got "
+                             f"{prune_margin}")
+        if candidates is None:
+            candidates = max(4 * k, 64)
+        candidates = min(max(candidates, k), index.n_docs)
+        margin = jnp.float32(prune_margin)
+
+    if mesh is None:
+        if prune:
+            vals, idx, _ = _vmap_pruned_retrieve(
+                queries, index, k, candidates, margin)
+            return vals, idx
+        return _vmap_retrieve(qv, qi, index, k)
+
+    order = plan.axis_order if plan is not None else ("doc", "term")
+    if plan is not None and (plan.doc_shards, plan.term_shards) != (
+            index.doc_shards, index.term_shards):
+        raise ValueError(
+            f"plan grid {plan.doc_shards}x{plan.term_shards} does not "
+            f"match index grid {index.doc_shards}x{index.term_shards}")
+    sizes = tuple(index.doc_shards if a == "doc" else index.term_shards
+                  for a in order)
+    mesh_axes = resolve_mesh_axes(mesh, None, sizes,
+                                  what="shard2d_retrieve")
+    doc_axis = mesh_axes[order.index("doc")]
+    term_axis = mesh_axes[order.index("term")]
+
+    from jax.sharding import PartitionSpec as P
+
+    # stacked grid arrays split (doc, term) on their two leading dims;
+    # the 1D range/chunk arrays split on their own axis only
+    grid_spec = P(doc_axis, term_axis)
+    in_specs = (grid_spec,) * 4 + (P(term_axis),) * 2 + (P(doc_axis),) * 2
+    dpc = index.docs_per_chunk
+    kk = min(k, dpc)
+
+    if prune:
+        doc_values, doc_indices = index.doc_values, index.doc_indices
+        n_docs = index.n_docs
+
+        def body(st, ln, pd, pv, ubs, lo, hi, cst, cct):
+            from repro.retrieval.engine.pruning import select_and_rescore
+
+            partial = _cell_ub_partial(
+                qv, qi, st[0, 0], ln[0, 0], pd[0, 0], pv[0, 0],
+                ubs[0, 0], lo[0], hi[0], index)       # (B, dpc)
+            chunk_ub = jax.lax.psum(partial, term_axis)
+            local = jnp.arange(dpc, dtype=jnp.int32)
+            chunk_ub = jnp.where(local[None, :] < cct[0], chunk_ub,
+                                 NEG_INF)
+            all_ub = jax.lax.all_gather(chunk_ub, doc_axis, axis=0)
+            all_st = jax.lax.all_gather(cst[0], doc_axis, axis=0)
+            ub = _scatter_global(all_ub, all_st, n_docs)
+            rep = SparseRep(qv, qi,
+                            jnp.sum((qv > 0).astype(jnp.int32),
+                                    axis=-1))
+            vals, idx, _ = select_and_rescore(
+                ub, rep, doc_values, doc_indices, index.vocab_size,
+                k, candidates, margin)
+            return vals, idx
+
+        merged = shard_mapped(
+            body, mesh, None, n_in=9,
+            in_specs=(grid_spec,) * 4 + (grid_spec,)
+            + (P(term_axis),) * 2 + (P(doc_axis),) * 2)
+        vals, idx = merged(index.term_starts, index.term_lens,
+                           index.postings_doc, index.postings_val,
+                           index.term_ubs, index.term_lo,
+                           index.term_hi, index.chunk_starts,
+                           index.chunk_counts)
+        return vals, idx.astype(jnp.int32)
+
+    def body(st, ln, pd, pv, lo, hi, cst, cct):
+        partial = _cell_partial(qv, qi, st[0, 0], ln[0, 0], pd[0, 0],
+                                pv[0, 0], lo[0], hi[0], index)
+        total = jax.lax.psum(partial, term_axis)      # exact chunk
+        local = jnp.arange(dpc, dtype=jnp.int32)
+        total = jnp.where(local[None, :] < cct[0], total, NEG_INF)
+        lv, li = jax.lax.top_k(total, kk)
+        gi = li + cst[0]                              # -> global ids
+        all_v = jax.lax.all_gather(lv, doc_axis, axis=1, tiled=True)
+        all_i = jax.lax.all_gather(gi, doc_axis, axis=1, tiled=True)
+        mv, pos = jax.lax.top_k(all_v, k)
+        return mv, jnp.take_along_axis(all_i, pos, axis=1)
+
+    merged = shard_mapped(body, mesh, None, n_in=8, in_specs=in_specs)
+    vals, idx = merged(index.term_starts, index.term_lens,
+                       index.postings_doc, index.postings_val,
+                       index.term_lo, index.term_hi,
+                       index.chunk_starts, index.chunk_counts)
+    return vals, idx.astype(jnp.int32)

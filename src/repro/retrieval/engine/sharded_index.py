@@ -52,34 +52,69 @@ NEG_INF = -1e30
 # shared mesh plumbing (doc- and term-sharded paths)
 # ---------------------------------------------------------------------------
 
+def resolve_mesh_axes(mesh, axis_names, sizes: Tuple[int, ...],
+                      what: str = "sharded_retrieve"
+                      ) -> Tuple[str, ...]:
+    """Default + validate the mesh axes the logical shard dims map
+    onto: one shard per device along each axis, so each axis size must
+    equal the corresponding shard count. ``axis_names=None`` takes the
+    mesh's leading axes in order (the 1D indexes use its first axis,
+    the 2D grid its first two)."""
+    if axis_names is None:
+        if len(mesh.axis_names) < len(sizes):
+            raise ValueError(
+                f"{what}: mesh has {len(mesh.axis_names)} axes "
+                f"{tuple(mesh.axis_names)}, needs {len(sizes)}")
+        axis_names = tuple(mesh.axis_names[:len(sizes)])
+    else:
+        axis_names = tuple(axis_names)
+        if len(axis_names) != len(sizes):
+            raise ValueError(
+                f"{what}: {len(axis_names)} axis names for "
+                f"{len(sizes)} shard dims")
+    for name, n_shards in zip(axis_names, sizes):
+        n_dev = mesh.shape[name]
+        if n_dev != n_shards:
+            raise ValueError(
+                f"{what}: n_shards={n_shards} must equal "
+                f"mesh axis {name!r} size {n_dev}")
+    return axis_names
+
+
 def resolve_shard_axis(mesh, axis_name: Optional[str], n_shards: int,
                        what: str = "sharded_retrieve") -> str:
-    """Default + validate the mesh axis the shard dimension maps onto:
-    one shard per device, so the axis size must equal ``n_shards``."""
-    if axis_name is None:
-        axis_name = mesh.axis_names[0]
-    n_dev = mesh.shape[axis_name]
-    if n_dev != n_shards:
-        raise ValueError(
-            f"{what}: n_shards={n_shards} must equal "
-            f"mesh axis {axis_name!r} size {n_dev}")
-    return axis_name
+    """1D special case of ``resolve_mesh_axes``: the single mesh axis
+    the shard dimension maps onto."""
+    names = None if axis_name is None else (axis_name,)
+    return resolve_mesh_axes(mesh, names, (n_shards,), what)[0]
 
 
-def shard_mapped(body, mesh, axis_name: str, n_in: int, n_out: int = 2):
+def shard_mapped(body, mesh, axis_name: Optional[str], n_in: int,
+                 n_out: int = 2, in_specs=None):
     """``compat.shard_map`` wrapper shared by the sharded indexes:
     the first ``n_in`` args are split on ``axis_name`` (one shard per
-    device), outputs are replicated. ``check_vma`` is off — the
-    post-merge results (all_gather+top_k or psum) ARE replicated but
-    the vma/rep tracer cannot prove it, same situation as
+    device), outputs are replicated. The 2D grid passes explicit
+    ``in_specs`` instead (its stacked arrays split on two mesh axes at
+    once, its range/chunk arrays on one each). ``check_vma`` is off —
+    the post-merge results (all_gather+top_k or psum) ARE replicated
+    but the vma/rep tracer cannot prove it, same situation as
     ``build_retrieval_step``."""
     from jax.sharding import PartitionSpec as P
 
     from repro.compat import shard_map
 
+    if in_specs is None:
+        in_specs = tuple(P(axis_name) for _ in range(n_in))
+    else:
+        in_specs = tuple(in_specs)
+        if len(in_specs) != n_in:
+            raise ValueError(
+                f"shard_mapped: {len(in_specs)} in_specs for "
+                f"{n_in} inputs")
+
     return shard_map(
         body, mesh=mesh,
-        in_specs=tuple(P(axis_name) for _ in range(n_in)),
+        in_specs=in_specs,
         out_specs=tuple(P() for _ in range(n_out)),
         check_vma=False,
     )

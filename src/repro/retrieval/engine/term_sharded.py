@@ -61,34 +61,10 @@ from repro.retrieval.sparse_rep import SparseRep
 
 Array = jax.Array
 
-# term_starts + term_lens (+ term_ubs) per vocab entry — the term
-# directory doc sharding replicates on every shard
-DIR_BYTES_PER_TERM = 12
-
-
-def choose_shard_axis(posting_bytes: int, vocab_size: int,
-                      n_shards: int,
-                      per_device_bytes: Optional[int] = None) -> str:
-    """Pick ``"doc"`` or ``"term"`` for an inverted index of this size.
-
-    Doc sharding splits the posting arrays but replicates the O(V)
-    term directory on every shard; term sharding splits both. Doc
-    sharding wins when it fits (its k-sized all_gather merge is far
-    cheaper than the (B, N) psum), so:
-
-    * with a ``per_device_bytes`` HBM budget: ``"doc"`` iff a doc
-      shard (``posting_bytes / n + dir``) fits, else ``"term"`` (the
-      strictly smaller footprint — large-|V| corpora whose per-shard
-      posting+directory load outgrows one HBM);
-    * without a budget: ``"term"`` only when the replicated directory
-      would dominate the per-shard postings (the huge-vocab sparse
-      regime the multilingual backbone hits).
-    """
-    directory = DIR_BYTES_PER_TERM * vocab_size
-    doc_per_dev = posting_bytes / n_shards + directory
-    if per_device_bytes is not None:
-        return "doc" if doc_per_dev <= per_device_bytes else "term"
-    return "doc" if directory <= posting_bytes / n_shards else "term"
+# placement moved to the ShardPlan planner (DESIGN.md §14);
+# choose_shard_axis survives here as the deprecated string shim
+from repro.retrieval.engine.shard2d import (  # noqa: E402,F401
+    DIR_BYTES_PER_TERM, choose_shard_axis, mass_balanced_boundaries)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -150,15 +126,20 @@ class TermShardedIndex:
 
 def term_shard_index(reps: SparseRep, vocab_size: int, n_shards: int,
                      *, boundaries: Optional[Sequence[int]] = None,
+                     balance: str = "mass",
                      keep_forward: bool = False) -> TermShardedIndex:
     """Build per-shard indexes over contiguous vocab ranges (host-side).
 
-    The vocabulary is cut at ``boundaries`` (default: ``n_shards``
-    even ranges of ``ceil(V / n_shards)``); each range is indexed
-    independently via ``build_inverted_index(vocab_range=...)`` —
-    remapped local term ids, *global* doc ids — and the CSC arrays are
-    padded to the widest shard. A shard whose range holds no active
-    terms packs the usual length-1 zero postings and contributes 0.
+    The vocabulary is cut at ``boundaries``; by default the cuts are
+    balanced by cumulative posting *mass* (``balance="mass"`` —
+    ``shard2d.mass_balanced_boundaries``), so a stopword-heavy term
+    cannot drag every shard's padded posting array out to its own
+    range's length. ``balance="width"`` restores the even
+    ``ceil(V / n_shards)`` ranges. Each range is indexed independently
+    via ``build_inverted_index(vocab_range=...)`` — remapped local
+    term ids, *global* doc ids — and the CSC arrays are padded to the
+    widest shard. A shard whose range holds no active terms packs the
+    usual length-1 zero postings and contributes 0.
 
     ``keep_forward=True`` stores the (N, K) forward rows once on the
     index (not per shard — they carry global term ids), enabling the
@@ -169,17 +150,9 @@ def term_shard_index(reps: SparseRep, vocab_size: int, n_shards: int,
     if n_shards > vocab_size:
         raise ValueError(
             f"n_shards={n_shards} exceeds vocab size {vocab_size}")
-    if boundaries is None:
-        # balanced cuts, strictly increasing for any V >= n_shards
-        boundaries = [s * vocab_size // n_shards
-                      for s in range(n_shards + 1)]
-    boundaries = [int(b) for b in boundaries]
-    if (len(boundaries) != n_shards + 1 or boundaries[0] != 0
-            or boundaries[-1] != vocab_size
-            or any(a >= b for a, b in zip(boundaries, boundaries[1:]))):
+    if balance not in ("mass", "width"):
         raise ValueError(
-            f"boundaries must be {n_shards + 1} strictly increasing "
-            f"cuts from 0 to {vocab_size}, got {boundaries}")
+            f"balance must be 'mass' or 'width', got {balance!r}")
 
     from repro.retrieval.sparse_rep import device_get
 
@@ -189,6 +162,22 @@ def term_shard_index(reps: SparseRep, vocab_size: int, n_shards: int,
     i = np.asarray(host.indices, np.int32).reshape(-1, k)
     n = np.asarray(host.nnz, np.int32).reshape(-1)
     rep = SparseRep(v, i, n)
+
+    if boundaries is None:
+        if balance == "mass":
+            counts = np.bincount(i[v > 0].ravel(), minlength=vocab_size)
+            boundaries = mass_balanced_boundaries(counts, n_shards)
+        else:
+            # even width, strictly increasing for any V >= n_shards
+            boundaries = [s * vocab_size // n_shards
+                          for s in range(n_shards + 1)]
+    boundaries = [int(b) for b in boundaries]
+    if (len(boundaries) != n_shards + 1 or boundaries[0] != 0
+            or boundaries[-1] != vocab_size
+            or any(a >= b for a, b in zip(boundaries, boundaries[1:]))):
+        raise ValueError(
+            f"boundaries must be {n_shards + 1} strictly increasing "
+            f"cuts from 0 to {vocab_size}, got {boundaries}")
 
     parts = []
     for s in range(n_shards):

@@ -42,6 +42,17 @@ Dispatch table (``method=``):
                                                        global top-k
                                                        (engine/
                                                        term_sharded)
+    "shard2d"    SparseRep          Shard2DIndex       (doc x term) grid:
+                                                       per-cell partials
+                                                       psum'd over the
+                                                       term axis into
+                                                       exact chunk
+                                                       scores, then the
+                                                       doc axis merges
+                                                       per-chunk top-k
+                                                       via all_gather +
+                                                       re-top-k (engine/
+                                                       shard2d)
     "streaming"  dense or rep       dense (N, V)       fused Pallas
                                                        running top-k
     "dense"      dense or rep       dense (N, V)       (B, N) einsum
@@ -52,6 +63,7 @@ Dispatch table (``method=``):
                    error), "quantized" below that
                  * ShardedIndex                -> "sharded"
                  * TermShardedIndex            -> "term_sharded"
+                 * Shard2DIndex                -> "shard2d"
                  * InvertedIndex with upper bounds AND forward rows
                    (an engine build)           -> "pruned"
                  * any other InvertedIndex: "fused" at >= AUTO_FUSED_N
@@ -65,13 +77,18 @@ a kwarg the method cannot honor (``mesh`` with ``"impact"``,
 silently ignored — a typo'd or misrouted tuning knob must not
 masquerade as a no-op. The per-method table is ``_METHOD_KWARGS``.
 
-Which *sharding axis* to build in the first place is the upstream
-choice: ``engine.term_sharded.choose_shard_axis`` keys it on the
-posting-array bytes vs the per-device HBM budget — doc sharding
-replicates the O(V) term directory per shard and merges cheap
-(all_gather of k winners), term sharding splits the posting arrays
-exactly (the |V|~250k multilingual regime) at the cost of an
-all-reduce over (B, N) partials.
+Which *placement* to build in the first place is the upstream choice:
+``engine.shard2d.plan_placement(stats, n_devices, per_device_hbm)``
+returns a frozen ``ShardPlan`` ``(doc_shards, term_shards, replicas,
+axis_order, reason)`` accounting posting bytes, the O(V) term
+directory (replicated by doc sharding, divided by term sharding) and
+forward-row storage — doc sharding merges cheap (all_gather of k
+winners), term sharding splits the posting arrays exactly (the
+|V|~250k multilingual regime) at the cost of an all-reduce over
+partials, and the 2D grid composes both when neither axis alone fits.
+Shard topology rides into ``retrieve`` through the one ``plan=``
+kwarg (validated against the built index); the old string-returning
+``choose_shard_axis`` survives as a deprecated shim.
 
 All paths return ``(vals (B, k) f32, idx (B, k) i32)`` with identical
 ids (scores within fp/quantization tolerance) for equivalent inputs —
@@ -112,10 +129,10 @@ Queries = Union[Array, SparseRep]
 Corpus = Union[Array, InvertedIndex]
 
 METHODS = ("auto", "impact", "fused", "pruned", "quantized", "sharded",
-           "term_sharded", "streaming", "dense")
+           "term_sharded", "shard2d", "streaming", "dense")
 # methods that need an index-shaped corpus (not a dense matrix)
 _INDEX_METHODS = ("impact", "fused", "pruned", "quantized", "sharded",
-                  "term_sharded")
+                  "term_sharded", "shard2d")
 # corpora at or above this many rows route "auto" to the streaming
 # kernel (the (B, N) score matrix stops being a rounding error)
 AUTO_STREAMING_N = 16384
@@ -126,8 +143,10 @@ AUTO_FUSED_N = 16384
 
 # kwargs each resolved method can honor; everything else raises.
 # ``interpret`` spans the Pallas-backed paths, block sizes go to the
-# kernel they tune, pruning knobs to the two-tier paths, mesh/axis to
-# the shard_map paths. impact/dense/quantized take no tuning kwargs.
+# kernel they tune, pruning knobs to the two-tier paths. Shard
+# topology rides in the one ``plan=`` kwarg (a ShardPlan, validated
+# against the built index) + ``mesh=`` for the shard_map paths.
+# impact/dense/quantized take no tuning kwargs.
 _METHOD_KWARGS = {
     "impact": frozenset(),
     "dense": frozenset(),
@@ -135,9 +154,11 @@ _METHOD_KWARGS = {
     "fused": frozenset({"interpret", "block_n", "block_w"}),
     "streaming": frozenset({"interpret", "block_b", "block_n"}),
     "pruned": frozenset({"prune_margin", "candidates"}),
-    "sharded": frozenset({"mesh", "axis_name"}),
-    "term_sharded": frozenset({"mesh", "axis_name", "prune_margin",
+    "sharded": frozenset({"mesh", "plan"}),
+    "term_sharded": frozenset({"mesh", "plan", "prune_margin",
                                "candidates"}),
+    "shard2d": frozenset({"mesh", "plan", "prune_margin",
+                          "candidates"}),
 }
 
 
@@ -150,8 +171,8 @@ def _engine():
     acyclic — but cached, not re-executed per ``retrieve()`` call like
     the old per-call ``from ... import`` blocks.
     """
-    from repro.retrieval.engine import pruning, quantize, sharded_index
-    from repro.retrieval.engine import term_sharded
+    from repro.retrieval.engine import (pruning, quantize, shard2d,
+                                        sharded_index, term_sharded)
 
     return {
         "QuantizedIndex": quantize.QuantizedIndex,
@@ -161,6 +182,8 @@ def _engine():
         "sharded_retrieve": sharded_index.sharded_retrieve,
         "TermShardedIndex": term_sharded.TermShardedIndex,
         "term_sharded_retrieve": term_sharded.term_sharded_retrieve,
+        "Shard2DIndex": shard2d.Shard2DIndex,
+        "shard2d_retrieve": shard2d.shard2d_retrieve,
         "pruned_retrieve": pruning.pruned_retrieve,
     }
 
@@ -280,6 +303,8 @@ def _resolve_method(method: str, corpus: Corpus) -> str:
         return "sharded"
     if isinstance(corpus, eng["TermShardedIndex"]):
         return "term_sharded"
+    if isinstance(corpus, eng["Shard2DIndex"]):
+        return "shard2d"
     if isinstance(corpus, InvertedIndex):
         # an engine build (upper bounds + forward rows) can serve the
         # two-tier pruned path; a bare PR-3 index only the exact ones
@@ -319,6 +344,19 @@ def _impact_retrieve(queries: SparseRep, index: InvertedIndex, k: int
     return vals, idx.astype(jnp.int32)
 
 
+def _check_plan(plan, method: str, doc_shards: int, term_shards: int
+                ) -> None:
+    """A ``plan=`` must describe the index it rides with: the grid the
+    planner chose has to match the grid that was actually built."""
+    if (plan.doc_shards, plan.term_shards) != (doc_shards, term_shards):
+        raise ValueError(
+            f"method={method!r}: plan grid "
+            f"{plan.doc_shards}x{plan.term_shards} (doc x term) does "
+            f"not match the built index "
+            f"{doc_shards}x{term_shards} — rebuild from the plan or "
+            f"re-plan from the corpus stats")
+
+
 def retrieve(
     queries: Queries,           # (B, V) dense or SparseRep
     corpus: Corpus,             # (N, V) dense matrix or an index
@@ -332,7 +370,7 @@ def retrieve(
     prune_margin: Optional[float] = None,
     candidates: Optional[int] = None,
     mesh=None,
-    axis_name: Optional[str] = None,
+    plan=None,
 ) -> Tuple[Array, Array]:
     """Top-k retrieval via the method table in the module docstring.
 
@@ -344,15 +382,19 @@ def retrieve(
     ``block_b``/``block_n`` tune the streaming kernel and
     ``block_n``/``block_w`` the fused one (None = autotune cache /
     heuristic); ``prune_margin``/``candidates`` drive the pruned path
-    (``engine.pruning``) and, for margins > 0, the term-sharded
-    two-tier composition; ``mesh``/``axis_name`` the sharded paths
-    (None = single-device vmap over shards).
+    (``engine.pruning``) and, for margins > 0, the sharded two-tier
+    compositions; ``mesh`` runs the sharded paths under shard_map
+    (None = single-device vmap over shards) and ``plan`` — a
+    ``ShardPlan`` from ``engine.shard2d.plan_placement`` — carries the
+    shard topology: it is validated against the built index, and for
+    ``shard2d`` its ``axis_order`` maps the (doc, term) grid onto the
+    mesh axes.
     """
     method = _resolve_method(method, corpus)
     _check_kwargs(method, {
         "interpret": interpret, "block_b": block_b, "block_n": block_n,
         "block_w": block_w, "prune_margin": prune_margin,
-        "candidates": candidates, "mesh": mesh, "axis_name": axis_name,
+        "candidates": candidates, "mesh": mesh, "plan": plan,
     })
 
     if method in _INDEX_METHODS:
@@ -386,21 +428,37 @@ def retrieve(
                 raise ValueError(
                     "method='sharded' needs a ShardedIndex corpus — "
                     "build one with engine.sharded_index.shard_index")
+            if plan is not None:
+                _check_plan(plan, method, corpus.n_shards, 1)
             return eng["sharded_retrieve"](queries, corpus, k,
-                                           mesh=mesh,
-                                           axis_name=axis_name)
+                                           mesh=mesh)
         if method == "term_sharded":
             if not isinstance(corpus, eng["TermShardedIndex"]):
                 raise ValueError(
                     "method='term_sharded' needs a TermShardedIndex "
                     "corpus — build one with "
                     "engine.term_sharded.term_shard_index")
+            if plan is not None:
+                _check_plan(plan, method, 1, corpus.n_shards)
             # margin 0 routes to the exact psum path (identical ids,
             # no candidate budget to size); > 0 opts into the
             # two-tier composition and requires forward rows
             margin = prune_margin if prune_margin is not None else 0.0
             return eng["term_sharded_retrieve"](
-                queries, corpus, k, mesh=mesh, axis_name=axis_name,
+                queries, corpus, k, mesh=mesh,
+                prune_margin=margin if margin > 0 else None,
+                candidates=candidates)
+        if method == "shard2d":
+            if not isinstance(corpus, eng["Shard2DIndex"]):
+                raise ValueError(
+                    "method='shard2d' needs a Shard2DIndex corpus — "
+                    "build one with engine.shard2d.shard2d_index")
+            if plan is not None:
+                _check_plan(plan, method, corpus.doc_shards,
+                            corpus.term_shards)
+            margin = prune_margin if prune_margin is not None else 0.0
+            return eng["shard2d_retrieve"](
+                queries, corpus, k, mesh=mesh, plan=plan,
                 prune_margin=margin if margin > 0 else None,
                 candidates=candidates)
         if not isinstance(corpus, InvertedIndex):

@@ -685,24 +685,38 @@ class CorpusEngine:
     serving-topology choice, not a builder one), ``"term"`` serves it
     as a ``TermShardedIndex`` over ``n_shards`` vocab ranges — the
     large-|V| regime where per-term posting arrays outgrow one HBM
-    (DESIGN.md §9).
+    (DESIGN.md §9). ``plan=`` (a ``ShardPlan`` from
+    ``engine.shard2d.plan_placement``) supersedes both: the plan's
+    term axis sets the vocab ranges and a genuinely 2D grid serves
+    the base as a ``Shard2DIndex`` (DESIGN.md §14).
     """
 
     def __init__(self, encoder: "BatchedEncoder", vocab_size: int, *,
                  quantize: bool = False, keep_forward: bool = False,
                  merge_frac: float = 0.25,
                  compact_dead_frac: float = 0.25,
-                 shard_axis: str = "doc", n_shards: int = 1):
+                 shard_axis: str = "doc", n_shards: int = 1,
+                 plan=None):
         from repro.retrieval.engine import IndexBuilder
 
-        if shard_axis not in ("doc", "term"):
-            raise ValueError(f"shard_axis must be 'doc' or 'term', "
-                             f"got {shard_axis!r}")
+        if plan is not None:
+            if shard_axis != "doc" or n_shards != 1:
+                raise ValueError(
+                    "pass either plan= or shard_axis/n_shards, not "
+                    "both — the plan carries the shard topology")
+            self.builder_kwargs = {"plan": plan}
+        else:
+            if shard_axis not in ("doc", "term"):
+                raise ValueError(f"shard_axis must be 'doc' or "
+                                 f"'term', got {shard_axis!r}")
+            self.builder_kwargs = {
+                "term_shards": n_shards if shard_axis == "term" else 0}
         self.encoder = encoder
+        self.plan = plan
         self.builder = IndexBuilder(
             vocab_size, quantize=quantize, keep_forward=keep_forward,
             merge_frac=merge_frac, compact_dead_frac=compact_dead_frac,
-            term_shards=n_shards if shard_axis == "term" else 0)
+            **self.builder_kwargs)
         self._next_uid = 0
 
     def add_docs(self, docs: Sequence[np.ndarray],

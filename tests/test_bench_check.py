@@ -48,6 +48,17 @@ GOOD_ENGINE = {
                 for s in ("1", "2", "4")},
     "term_sharded": {s: {"topk_ids_equal": True, "median_ms": 1.0}
                      for s in ("1", "2", "4")},
+    "shard2d": {g: {"topk_ids_equal": True, "median_ms": 1.0}
+                for g in ("1x1", "2x2", "1x4", "4x1")},
+    "planner": {
+        "n_devices": 4,
+        "huge_vocab": {"vocab_size": 250_000, "grid": "2x2",
+                       "axis": "2d", "doc_shards": 2, "term_shards": 2,
+                       "reason": "2d"},
+        "small_vocab": {"vocab_size": 30_000, "grid": "4x1",
+                        "axis": "doc", "doc_shards": 4,
+                        "term_shards": 1, "reason": "doc-only"},
+    },
     "parity": {"topk_ids_equal": True, "fused_ids_equal": True},
 }
 
@@ -166,6 +177,14 @@ def test_retrieval_parity_and_method_gates():
     (lambda d: d["term_sharded"]["2"].update(topk_ids_equal=False),
      "term_sharded x2"),
     (lambda d: d.pop("term_sharded"), "term_sharded scaling rows"),
+    (lambda d: d["shard2d"].pop("2x2"), "shard2d scaling rows missing"),
+    (lambda d: d["shard2d"]["1x4"].update(topk_ids_equal=False),
+     "shard2d 1x4"),
+    (lambda d: d.pop("planner"), "planner decision record missing"),
+    (lambda d: d["planner"]["huge_vocab"].update(term_shards=1),
+     "no term shards"),
+    (lambda d: d["planner"]["small_vocab"].update(axis="term"),
+     "did not pick doc-only"),
     (lambda d: d["parity"].update(topk_ids_equal=False),
      "parity flag"),
     (lambda d: d["parity"].update(fused_ids_equal=False),
@@ -424,6 +443,16 @@ def test_bench_metrics_flattens_quality(tmp_path):
     assert m["quality/rep_topk/w16"] == 0.95
     assert m["quality/train_delta/mrr@10"] == 0.09
     assert m["quality/train_delta/ndcg@10"] == 0.08
+
+
+def test_bench_metrics_flattens_shard2d_and_planner(tmp_path):
+    p = tmp_path / "BENCH_engine.json"
+    p.write_text(json.dumps(GOOD_ENGINE))
+    m = report._bench_metrics(str(p))
+    assert m["shard2d/2x2"] == 1.0
+    assert m["shard2d/4x1"] == 1.0
+    assert m["planner/huge_vocab/term_shards"] == 2
+    assert m["planner/small_vocab/term_shards"] == 1
 
 
 def test_trend_table_with_run_id_keys(tmp_path):

@@ -1,0 +1,579 @@
+"""2D hybrid (doc × term) sharding + ShardPlan placement tests
+(DESIGN.md §14).
+
+The acceptance anchors:
+
+* ``method="shard2d"`` returns top-k ids identical to
+  ``method="impact"`` at every tested grid shape — (1×1), (2×2),
+  (1×4), (4×1) and a non-square (3×2) — including uneven vocab cuts
+  and uneven doc chunks: the psum-over-terms / top-k-merge-over-docs
+  composition must be invisible in the results;
+* the two-tier MaxScore composition across BOTH axes (per-cell
+  ceilings psum'd over terms, scatter-maxed over chunks, exact
+  rescore from forward rows) is id-identical at ``prune_margin=0``;
+* ``plan_placement`` accounts posting mass, the replicated O(V)
+  directory and forward rows: huge-vocab corpora get term-bearing
+  grids, small-vocab ones stay doc-only, spare devices under an HBM
+  budget become whole-grid replicas, and infeasible budgets say so
+  loudly instead of silently overcommitting;
+* the ``shard_map`` path on a forced multi-host-device 2D mesh
+  matches the single-device scorer in BOTH mesh orientations
+  (``plan.axis_order``) — subprocess, device count from
+  ``REPRO_SHARD_TEST_DEVICES`` (CI's multidevice job runs it 4-wide).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.synthetic import lsr_impact_corpus
+from repro.retrieval import (CorpusStats, IndexBuilder, ShardPlan,
+                             build_inverted_index, choose_shard_axis,
+                             plan_placement, retrieve, shard2d_index,
+                             shard2d_retrieve, sparsify_threshold,
+                             sparsify_topk)
+from repro.retrieval.engine.shard2d import (DIR_BYTES_PER_TERM,
+                                            mass_balanced_boundaries)
+
+K = 10
+BENCH = dict(n_docs=1024, vocab=1024, doc_nnz=32, n_queries=8,
+             q_nnz=28)
+
+
+@pytest.fixture(scope="module")
+def graded():
+    data = lsr_impact_corpus(**BENCH)
+    q = sparsify_topk(jnp.asarray(data["queries"]), BENCH["q_nnz"])
+    d = sparsify_topk(jnp.asarray(data["docs"]), BENCH["doc_nnz"])
+    vals, idx = retrieve(q, build_inverted_index(d, BENCH["vocab"]), K,
+                         method="impact")
+    return {"q": q, "d": d, "vals": np.asarray(vals),
+            "idx": np.asarray(idx)}
+
+
+def _small(rng, n, nnz, vocab, lo=0, hi=None):
+    """Random sparse rows whose active terms lie in [lo, hi)."""
+    hi = vocab if hi is None else hi
+    m = np.zeros((n, vocab), np.float32)
+    for r in range(n):
+        cols = lo + rng.choice(hi - lo, size=nnz, replace=False)
+        m[r, cols] = rng.uniform(0.1, 2.0, size=nnz)
+    return m
+
+
+def _rep(m, nnz=8):
+    return sparsify_threshold(jnp.asarray(m), 0.0, max_nnz=nnz)
+
+
+# ---------------------------------------------------------------------------
+# planner: budget boundaries, replica emission, the deprecation shim
+# ---------------------------------------------------------------------------
+
+def test_plan_no_budget_small_vocab_stays_doc_only():
+    # the 30k-vocab regime: the replicated directory is a rounding
+    # error next to any per-device posting slice
+    stats = CorpusStats(posting_bytes=8 * 50_000 * 16,
+                        vocab_size=30_000, n_docs=50_000)
+    plan = plan_placement(stats, 4)
+    assert (plan.doc_shards, plan.term_shards) == (4, 1)
+    assert plan.axis == "doc"
+    assert "doc-only" in plan.reason
+
+
+def test_plan_no_budget_huge_vocab_gets_term_shards():
+    # the 250k-vocab multilingual regime: the O(V) directory dominates
+    # the posting slice until the vocab is cut
+    stats = CorpusStats(posting_bytes=8 * 50_000 * 16,
+                        vocab_size=250_000, n_docs=50_000)
+    plan = plan_placement(stats, 4)
+    assert plan.term_shards >= 2
+    assert plan.grid == 4
+    directory = DIR_BYTES_PER_TERM * stats.vocab_size
+    assert (directory / plan.term_shards
+            <= stats.posting_bytes / 4)
+
+
+def test_plan_no_budget_term_only_extreme():
+    # directory dwarfs postings at every narrower cut
+    stats = CorpusStats(posting_bytes=1_000, vocab_size=250_000,
+                        n_docs=10)
+    plan = plan_placement(stats, 4)
+    assert (plan.doc_shards, plan.term_shards) == (1, 4)
+    assert plan.axis == "term"
+
+
+def test_plan_budget_emits_replicas():
+    # corpus fits on one device with room: every spare device becomes
+    # a whole-grid throughput replica
+    stats = CorpusStats(posting_bytes=1_000, vocab_size=100, n_docs=50)
+    plan = plan_placement(stats, 8, per_device_hbm=10**9)
+    assert (plan.doc_shards, plan.term_shards) == (1, 1)
+    assert plan.replicas == 8
+    assert plan.n_devices == 8
+    assert "replicas" in plan.reason
+
+
+def test_plan_budget_boundaries():
+    # per-device footprints: 1x1 = 1000 + 120 = 1120,
+    # 2x1 = 500 + 120 = 620, 1x2 = 500 + 60 = 560
+    stats = CorpusStats(posting_bytes=1_000, vocab_size=10, n_docs=50)
+    assert ShardPlan(1, 1).per_device_bytes(stats) == 1120
+    assert ShardPlan(2, 1).per_device_bytes(stats) == 620
+    assert ShardPlan(1, 2).per_device_bytes(stats) == 560
+    # 700 B: 1x1 is over, 2x1 fits and wins (doc merge is cheaper
+    # than the term psum, so equal-size grids prefer fewer term cuts)
+    plan = plan_placement(stats, 4, per_device_hbm=700)
+    assert (plan.doc_shards, plan.term_shards) == (2, 1)
+    assert plan.replicas == 2
+    # 600 B: only the term cut trims the directory enough
+    plan = plan_placement(stats, 4, per_device_hbm=600)
+    assert (plan.doc_shards, plan.term_shards) == (1, 2)
+    # exact boundary is feasible
+    plan = plan_placement(stats, 4, per_device_hbm=620)
+    assert (plan.doc_shards, plan.term_shards) == (2, 1)
+
+
+def test_plan_over_budget_says_so():
+    stats = CorpusStats(posting_bytes=10**9, vocab_size=10**6,
+                        n_docs=10**6)
+    plan = plan_placement(stats, 4, per_device_hbm=10)
+    assert plan.grid == 4        # full-device grid, smallest footprint
+    assert plan.replicas == 1
+    assert "OVER BUDGET" in plan.reason
+
+
+def test_plan_forward_bytes_are_replicated_per_device():
+    # forward rows are stored once per device, never divided by the
+    # grid — the planner must charge them at full price
+    base = CorpusStats(posting_bytes=8_000, vocab_size=10, n_docs=100)
+    fwd = CorpusStats(posting_bytes=8_000, vocab_size=10, n_docs=100,
+                      forward_bytes=5_000)
+    assert (ShardPlan(2, 2).per_device_bytes(fwd)
+            - ShardPlan(2, 2).per_device_bytes(base)) == 5_000
+
+
+def test_plan_validation():
+    with pytest.raises(ValueError, match="n_devices"):
+        plan_placement(CorpusStats(1, 1, 1), 0)
+    with pytest.raises(ValueError, match="doc_shards"):
+        ShardPlan(doc_shards=0, term_shards=1)
+    with pytest.raises(ValueError, match="replicas"):
+        ShardPlan(1, 1, replicas=0)
+    with pytest.raises(ValueError, match="axis_order"):
+        ShardPlan(1, 1, axis_order=("doc", "doc"))
+
+
+def test_plan_axis_and_describe():
+    assert ShardPlan(4, 1).axis == "doc"
+    assert ShardPlan(1, 4).axis == "term"
+    assert ShardPlan(2, 2).axis == "2d"
+    assert "2x2" in ShardPlan(2, 2).describe()
+    assert "x3 replicas" in ShardPlan(1, 1, replicas=3).describe()
+
+
+def test_choose_shard_axis_shim_reports_2d():
+    # the legacy string API can only name the 2D grid, not shape it
+    with pytest.warns(DeprecationWarning, match="plan_placement"):
+        axis = choose_shard_axis(8 * 50_000 * 16, 250_000, 4)
+    assert axis == "2d"
+
+
+def test_corpus_stats_from_index():
+    rng = np.random.default_rng(7)
+    rep = _rep(_small(rng, 20, 6, 64))
+    idx = build_inverted_index(rep, 64, keep_forward=True)
+    stats = CorpusStats.from_index(idx)
+    assert stats.posting_bytes == 8 * idx.n_postings
+    assert stats.vocab_size == 64 and stats.n_docs == 20
+    assert stats.forward_bytes > 0
+    bare = CorpusStats.from_rep(rep, 64)
+    assert bare.n_docs == 20 and bare.forward_bytes == 0
+
+
+# ---------------------------------------------------------------------------
+# mass-balanced vocab cuts (shared with term_sharded — satellite 3)
+# ---------------------------------------------------------------------------
+
+def test_mass_balanced_boundaries_isolate_stopword():
+    # one term owns ~87% of all postings: the quantile cuts give it a
+    # (nearly) private range instead of width-slicing around it
+    counts = np.ones(16, np.int64)
+    counts[0] = 100
+    assert mass_balanced_boundaries(counts, 4) == (0, 1, 2, 3, 16)
+
+
+def test_mass_balanced_boundaries_degenerate():
+    # zero mass falls back to width cuts; too many shards is loud
+    assert mass_balanced_boundaries(np.zeros(8, np.int64), 4) == \
+        (0, 2, 4, 6, 8)
+    with pytest.raises(ValueError, match="exceeds vocab"):
+        mass_balanced_boundaries(np.ones(4, np.int64), 5)
+
+
+def test_mass_cuts_shrink_skewed_padding_and_keep_parity():
+    """Skew regression: a stopword-heavy term makes one width-cut
+    range dwarf the rest, and the stacked layout pads every cell to
+    it. Mass cuts bound the padding — and both layouts stay
+    id-identical to impact."""
+    rng = np.random.default_rng(11)
+    m = _small(rng, 96, 6, 128, lo=1)
+    m[:, 0] = rng.uniform(0.5, 1.0, size=96)    # term 0 in every doc
+    d = _rep(m, nnz=8)
+    q = _rep(_small(rng, 4, 5, 128), nnz=6)
+    ref = build_inverted_index(d, 128, stopword_warn_frac=1.1)
+    v_ref, i_ref = retrieve(q, ref, 7, method="impact")
+    by_mass = shard2d_index(d, 128, 2, 4)               # default
+    by_width = shard2d_index(d, 128, 2, 4, balance="width")
+    # padded posting width: the width cut pays the stopword everywhere
+    assert (by_mass.postings_val.shape[-1]
+            < by_width.postings_val.shape[-1])
+    for idx in (by_mass, by_width):
+        vals, ext = shard2d_retrieve(q, idx, 7)
+        np.testing.assert_array_equal(np.asarray(ext),
+                                      np.asarray(i_ref))
+        np.testing.assert_allclose(np.asarray(vals),
+                                   np.asarray(v_ref), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# exact retrieval parity (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("grid", [(1, 1), (2, 2), (1, 4), (4, 1),
+                                  (3, 2)])
+def test_shard2d_matches_impact(graded, grid):
+    idx = shard2d_index(graded["d"], BENCH["vocab"], *grid)
+    vals, ext = retrieve(graded["q"], idx, K, method="shard2d")
+    np.testing.assert_array_equal(np.asarray(ext), graded["idx"])
+    np.testing.assert_allclose(np.asarray(vals), graded["vals"],
+                               atol=1e-4)
+
+
+def test_shard2d_auto_dispatch(graded):
+    # method="auto" routes a Shard2DIndex to the 2D scorer
+    idx = shard2d_index(graded["d"], BENCH["vocab"], 2, 2)
+    _, ext = retrieve(graded["q"], idx, K)
+    np.testing.assert_array_equal(np.asarray(ext), graded["idx"])
+
+
+def test_shard2d_uneven_boundaries(graded):
+    # uneven doc chunks AND uneven vocab cuts: the chunk-start scatter
+    # and range routing must still reassemble global ids exactly
+    idx = shard2d_index(
+        graded["d"], BENCH["vocab"], 3, 2,
+        doc_boundaries=[0, 100, 700, BENCH["n_docs"]],
+        term_boundaries=[0, 100, BENCH["vocab"]])
+    vals, ext = retrieve(graded["q"], idx, K, method="shard2d")
+    np.testing.assert_array_equal(np.asarray(ext), graded["idx"])
+    np.testing.assert_allclose(np.asarray(vals), graded["vals"],
+                               atol=1e-4)
+
+
+def test_shard2d_empty_cells_width_cuts():
+    # all posting mass lives in vocab [0, 32): with width cuts three
+    # of four term ranges hold empty cells that must contribute
+    # exactly zero to the psum
+    rng = np.random.default_rng(3)
+    d = _rep(_small(rng, 40, 6, 128, hi=32))
+    q = _rep(_small(rng, 3, 5, 128, hi=32), nnz=6)
+    v_ref, i_ref = retrieve(q, build_inverted_index(d, 128), 5,
+                            method="impact")
+    idx = shard2d_index(d, 128, 2, 4, balance="width")
+    vals, ext = shard2d_retrieve(q, idx, 5)
+    np.testing.assert_array_equal(np.asarray(ext), np.asarray(i_ref))
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(v_ref),
+                               atol=1e-4)
+
+
+def test_shard2d_single_query():
+    rng = np.random.default_rng(5)
+    d = _rep(_small(rng, 64, 8, 96))
+    q = _rep(_small(rng, 1, 5, 96), nnz=6)
+    v_ref, i_ref = retrieve(q, build_inverted_index(d, 96), 9,
+                            method="impact")
+    vals, ext = shard2d_retrieve(q, shard2d_index(d, 96, 4, 2), 9)
+    assert np.asarray(ext).shape == (1, 9)
+    np.testing.assert_array_equal(np.asarray(ext), np.asarray(i_ref))
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(v_ref),
+                               atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), gi=st.integers(0, 3))
+def test_shard2d_parity_property(seed, gi):
+    """Property: any small corpus, any grid shape — ids and scores
+    match the unsharded impact scorer exactly."""
+    rng = np.random.default_rng(seed)
+    d = _rep(_small(rng, 48, 6, 64))
+    q = _rep(_small(rng, 3, 4, 64), nnz=5)
+    v_ref, i_ref = retrieve(q, build_inverted_index(d, 64), 5,
+                            method="impact")
+    grid = [(1, 1), (2, 2), (3, 1), (1, 3)][gi]
+    vals, ext = shard2d_retrieve(q, shard2d_index(d, 64, *grid), 5)
+    np.testing.assert_array_equal(np.asarray(ext), np.asarray(i_ref))
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(v_ref),
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# the pruned two-tier composition across both axes
+# ---------------------------------------------------------------------------
+
+def test_shard2d_pruned_margin0_is_id_identical(graded):
+    idx = shard2d_index(graded["d"], BENCH["vocab"], 2, 2,
+                        keep_forward=True)
+    vals, ext = retrieve(graded["q"], idx, K, method="shard2d",
+                         prune_margin=0.0)
+    np.testing.assert_array_equal(np.asarray(ext), graded["idx"])
+    np.testing.assert_allclose(np.asarray(vals), graded["vals"],
+                               atol=1e-4)
+    # aggressive margin keeps the clear graded winner
+    _, aggr = retrieve(graded["q"], idx, K, method="shard2d",
+                       prune_margin=0.5)
+    np.testing.assert_array_equal(np.asarray(aggr)[:, 0],
+                                  graded["idx"][:, 0])
+
+
+def test_shard2d_pruned_needs_forward_rows(graded):
+    idx = shard2d_index(graded["d"], BENCH["vocab"], 2, 2)
+    with pytest.raises(ValueError, match="keep_forward"):
+        shard2d_retrieve(graded["q"], idx, K, prune_margin=0.0)
+
+
+def test_shard2d_prune_margin_validation(graded):
+    idx = shard2d_index(graded["d"], BENCH["vocab"], 2, 2,
+                        keep_forward=True)
+    with pytest.raises(ValueError, match="prune_margin"):
+        shard2d_retrieve(graded["q"], idx, K, prune_margin=1.5)
+
+
+# ---------------------------------------------------------------------------
+# build validation, tombstoning, plan threading through retrieve()
+# ---------------------------------------------------------------------------
+
+def test_shard2d_build_validation(graded):
+    with pytest.raises(ValueError, match="shard counts"):
+        shard2d_index(graded["d"], BENCH["vocab"], 0, 2)
+    with pytest.raises(ValueError, match="exceeds vocab"):
+        shard2d_index(graded["d"], 4, 1, 5)
+    with pytest.raises(ValueError, match="exceeds corpus"):
+        rng = np.random.default_rng(0)
+        shard2d_index(_rep(_small(rng, 4, 4, 32)), 32, 8, 1)
+    with pytest.raises(ValueError, match="balance"):
+        shard2d_index(graded["d"], BENCH["vocab"], 2, 2,
+                      balance="luck")
+    with pytest.raises(ValueError, match="strictly increasing"):
+        shard2d_index(graded["d"], BENCH["vocab"], 2, 2,
+                      term_boundaries=[0, 512, 512, BENCH["vocab"]])
+
+
+def test_shard2d_zero_docs_tombstones(graded):
+    idx = shard2d_index(graded["d"], BENCH["vocab"], 2, 2,
+                        keep_forward=True)
+    victim = int(graded["idx"][0, 0])
+    idx2 = idx.zero_docs([victim])
+    _, ext = shard2d_retrieve(graded["q"], idx2, K)
+    assert victim not in np.asarray(ext)[0]
+    # the original index is untouched (functional update)
+    _, ext0 = shard2d_retrieve(graded["q"], idx, K)
+    assert victim in np.asarray(ext0)[0]
+
+
+def test_retrieve_validates_plan_against_index(graded):
+    idx = shard2d_index(graded["d"], BENCH["vocab"], 2, 2)
+    with pytest.raises(ValueError, match="does not match"):
+        retrieve(graded["q"], idx, K, method="shard2d",
+                 plan=ShardPlan(4, 1))
+    # a matching plan threads through cleanly
+    _, ext = retrieve(graded["q"], idx, K, method="shard2d",
+                      plan=ShardPlan(2, 2))
+    np.testing.assert_array_equal(np.asarray(ext), graded["idx"])
+
+
+def test_retrieve_rejects_plan_on_unsharded_methods(graded):
+    inv = build_inverted_index(graded["d"], BENCH["vocab"])
+    with pytest.raises(ValueError, match="does not accept"):
+        retrieve(graded["q"], inv, K, method="impact",
+                 plan=ShardPlan(1, 1))
+
+
+def test_retrieve_axis_name_kwarg_is_gone(graded):
+    # the per-method axis_name= kwarg was collapsed into plan=; it is
+    # no longer in the signature at all
+    idx = shard2d_index(graded["d"], BENCH["vocab"], 2, 2)
+    with pytest.raises(TypeError):
+        retrieve(graded["q"], idx, K, method="shard2d",
+                 axis_name="model")
+
+
+# ---------------------------------------------------------------------------
+# incremental builder + serving integration
+# ---------------------------------------------------------------------------
+
+def test_builder_2d_base(graded):
+    b = IndexBuilder(BENCH["vocab"], plan=ShardPlan(2, 2))
+    b.add(graded["d"])
+    vals, ext = b.search(graded["q"], K)
+    np.testing.assert_array_equal(ext, graded["idx"])
+    np.testing.assert_allclose(vals, graded["vals"], atol=1e-4)
+    s = b.stats()
+    assert s["doc_shards"] == 2 and s["grid_term_shards"] == 2
+    # tombstoning zeroes chunk-local postings across all cells
+    victim = int(ext[0, 0])
+    b.remove([victim])
+    _, ext2 = b.search(graded["q"], K)
+    assert victim not in ext2
+    with pytest.raises(ValueError, match="not both"):
+        IndexBuilder(BENCH["vocab"], plan=ShardPlan(2, 2),
+                     term_shards=2)
+    with pytest.raises(ValueError, match="exclusive"):
+        IndexBuilder(BENCH["vocab"], plan=ShardPlan(2, 2),
+                     quantize=True)
+
+
+def test_builder_2d_base_serves_pruned_search(graded):
+    """search(method='pruned') on a 2D base must route to the 2D
+    two-tier composition (safe margin: ids == impact)."""
+    b = IndexBuilder(BENCH["vocab"], plan=ShardPlan(2, 2),
+                     keep_forward=True)
+    b.add(graded["d"])
+    vals, ext = b.search(graded["q"], K, method="pruned",
+                         prune_margin=0.0)
+    np.testing.assert_array_equal(ext, graded["idx"])
+    np.testing.assert_allclose(vals, graded["vals"], atol=1e-4)
+
+
+def test_builder_2d_base_with_raw_delta():
+    """Base 2D, delta raw: the merged search must equal a frozen
+    unsharded build over all rows."""
+    rng = np.random.default_rng(4)
+    D = _small(rng, 60, 8, 128)
+    Q = _small(rng, 4, 6, 128)
+    q = _rep(Q)
+    v_ref, i_ref = retrieve(q, build_inverted_index(_rep(D), 128), 7,
+                            method="impact")
+    b = IndexBuilder(128, plan=ShardPlan(2, 2), merge_frac=0.5)
+    b.add(_rep(D[:48]))
+    b.flush()
+    b.add(_rep(D[48:]))
+    vals, ext = b.search(q, 7)
+    assert b.stats()["delta_docs"] == 12    # delta kept, not merged
+    np.testing.assert_array_equal(ext, np.asarray(i_ref))
+    np.testing.assert_allclose(vals, np.asarray(v_ref), atol=1e-4)
+
+
+def test_corpus_engine_plan():
+    from repro.retrieval import sparsify_topk as topk
+    from repro.runtime.serving import (BatchedEncoder, BatchPolicy,
+                                       CorpusEngine)
+
+    def encode(tokens, mask):
+        B = tokens.shape[0]
+        out = np.zeros((B, 32), np.float32)
+        for i in range(B):
+            for t, m in zip(np.asarray(tokens[i]), np.asarray(mask[i])):
+                if m:
+                    out[i, int(t) % 32] += 1
+        return topk(jnp.asarray(out), 4)
+
+    eng = CorpusEngine(
+        BatchedEncoder(encode, policy=BatchPolicy(max_batch=8)), 32,
+        plan=ShardPlan(2, 2))
+    eng.add_docs([np.array([d, d, d], np.int32) for d in range(6)])
+    q = topk(jnp.asarray(np.eye(32, dtype=np.float32)[[3]] * 5), 4)
+    _, ext = eng.search(q, 2)
+    assert ext[0, 0] == 3
+    s = eng.stats()
+    assert s["doc_shards"] == 2 and s["grid_term_shards"] == 2
+    with pytest.raises(ValueError, match="not both"):
+        CorpusEngine(BatchedEncoder(encode), 32, plan=ShardPlan(2, 2),
+                     shard_axis="term", n_shards=2)
+
+
+# ---------------------------------------------------------------------------
+# shard_map on a 2D mesh (subprocess, forced host devices)
+# ---------------------------------------------------------------------------
+
+_SHARD2D_SCRIPT = textwrap.dedent("""
+    import os
+    n = int(os.environ.get("REPRO_SHARD_TEST_DEVICES", "2"))
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={n}")
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.data.synthetic import lsr_impact_corpus
+    from repro.retrieval import (ShardPlan, build_inverted_index,
+                                 retrieve, shard2d_index,
+                                 shard2d_retrieve, sparsify_topk)
+
+    assert jax.device_count() >= n, jax.devices()
+    data = lsr_impact_corpus(n_docs=192, vocab=256, doc_nnz=16,
+                             n_queries=4, q_nnz=14, graded=6)
+    q = sparsify_topk(jnp.asarray(data["queries"]), 14)
+    d = sparsify_topk(jnp.asarray(data["docs"]), 16)
+    k = 4
+    v_ref, i_ref = retrieve(q, build_inverted_index(d, 256), k,
+                            method="impact")
+
+    grids = {1: [(1, 1)], 2: [(2, 1), (1, 2)],
+             4: [(2, 2), (4, 1), (1, 4)]}[n]
+    for dd, tt in grids:
+        idx = shard2d_index(d, 256, dd, tt, keep_forward=True)
+        mesh = jax.make_mesh((dd, tt), ("x", "y"))
+        # exact: psum over terms, all_gather + re-top-k over docs
+        v_sm, i_sm = shard2d_retrieve(q, idx, k, mesh=mesh)
+        np.testing.assert_array_equal(np.asarray(i_sm),
+                                      np.asarray(i_ref))
+        np.testing.assert_allclose(np.asarray(v_sm),
+                                   np.asarray(v_ref), atol=1e-4)
+        # transposed mesh orientation via plan.axis_order
+        tmesh = jax.make_mesh((tt, dd), ("ty", "tx"))
+        plan = ShardPlan(dd, tt, axis_order=("term", "doc"))
+        v_t, i_t = shard2d_retrieve(q, idx, k, mesh=tmesh, plan=plan)
+        np.testing.assert_array_equal(np.asarray(i_t),
+                                      np.asarray(i_ref))
+        # pruned composition at the safe margin
+        v_pr, i_pr = shard2d_retrieve(q, idx, k, mesh=mesh,
+                                      prune_margin=0.0)
+        np.testing.assert_array_equal(np.asarray(i_pr),
+                                      np.asarray(i_ref))
+        # the retrieve() dispatcher threads mesh + plan through
+        v_d, i_d = retrieve(q, idx, k, mesh=mesh,
+                            plan=ShardPlan(dd, tt))
+        np.testing.assert_array_equal(np.asarray(i_d),
+                                      np.asarray(i_ref))
+    # grid / mesh-shape mismatch is a loud error
+    if n > 1:
+        dd, tt = grids[0]
+        idx = shard2d_index(d, 256, dd, tt)
+        bad = jax.make_mesh((1, 1, n), ("a", "b", "c"))
+        try:
+            shard2d_retrieve(q, idx, k, mesh=bad)
+            raise SystemExit("mismatch not rejected")
+        except ValueError as e:
+            assert "must equal mesh axis" in str(e), e
+    print("ALL_SHARD2D_PASSED")
+""")
+
+
+def test_shard2d_multi_device_subprocess():
+    """The 2D shard_map path on a forced multi-host-device mesh == the
+    unsharded impact scorer — every grid factorization of the device
+    count, both mesh orientations, exact and pruned tiers (device
+    count from REPRO_SHARD_TEST_DEVICES; CI's multidevice job sets
+    4)."""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                     "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", _SHARD2D_SCRIPT], env=env,
+        capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, (
+        f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr[-4000:]}")
+    assert "ALL_SHARD2D_PASSED" in proc.stdout

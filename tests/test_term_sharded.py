@@ -153,7 +153,9 @@ def test_term_sharded_empty_shards():
     d, q = _rep(D), _rep(Q)
     v_ref, i_ref = retrieve(q, build_inverted_index(d, 128), 5,
                             method="impact")
-    tidx = term_shard_index(d, 128, 4)      # ranges of 32 terms
+    # width cuts requested explicitly: ranges of 32 terms (the default
+    # mass-balanced cuts would shrink the empty ranges away)
+    tidx = term_shard_index(d, 128, 4, balance="width")
     assert int((np.asarray(tidx.term_lens).sum(axis=1) == 0).sum()) == 3
     vals, idx = retrieve(q, tidx, 5)
     np.testing.assert_array_equal(np.asarray(idx), np.asarray(i_ref))
@@ -210,19 +212,24 @@ def test_term_sharded_pruned_requires_forward(graded):
 
 
 # ---------------------------------------------------------------------------
-# axis planner
+# axis planner (deprecated string shim — the ShardPlan planner's own
+# tests live in tests/test_shard2d.py)
 # ---------------------------------------------------------------------------
 
-def test_choose_shard_axis_heuristic():
-    # big postings, small vocab: the replicated directory is cheap
-    assert choose_shard_axis(10**9, 4096, 4) == "doc"
-    # huge vocab, sparse postings: the directory dominates a shard
-    assert choose_shard_axis(10**6, 250_000, 4) == "term"
-    # with an HBM budget: doc iff a doc shard fits
-    assert choose_shard_axis(10**8, 4096, 4,
-                             per_device_bytes=10**8) == "doc"
-    assert choose_shard_axis(10**9, 4096, 4,
-                             per_device_bytes=10**8) == "term"
+def test_choose_shard_axis_shim_matches_old_heuristic():
+    with pytest.warns(DeprecationWarning, match="plan_placement"):
+        # big postings, small vocab: the replicated directory is cheap
+        assert choose_shard_axis(10**9, 4096, 4) == "doc"
+    with pytest.warns(DeprecationWarning):
+        # huge vocab, sparse postings: the directory dominates a shard
+        assert choose_shard_axis(10**6, 250_000, 4) == "term"
+    with pytest.warns(DeprecationWarning):
+        # with an HBM budget: doc iff a doc shard fits
+        assert choose_shard_axis(10**8, 4096, 4,
+                                 per_device_bytes=10**8) == "doc"
+    with pytest.warns(DeprecationWarning):
+        assert choose_shard_axis(10**9, 4096, 4,
+                                 per_device_bytes=10**8) == "term"
 
 
 # ---------------------------------------------------------------------------
